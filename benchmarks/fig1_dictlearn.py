@@ -1,0 +1,99 @@
+"""Figure 1 reproduction — Impact of Aggregation Space.
+
+Federated dictionary learning (eq. 28) on three data settings (synthetic
+homogeneous / synthetic heterogeneous / MovieLens-like), comparing FedMM
+(S-space aggregation) against the naive Theta-space aggregation baseline.
+Reports the objective, parameter-space update size (E^p / E^{p,s}) and
+surrogate-space update size (E^s / E^{s,p}) per communication round.
+
+The paper's observations to reproduce:
+  * FedMM's objective decays monotonically on all three settings,
+  * the naive algorithm DIVERGES on synthetic heterogeneous data,
+  * the naive algorithm diverges in the surrogate space (E^{s,p}).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.dictlearn import (MOVIELENS, SYNTH_HETEROGENEOUS,
+                                     SYNTH_HOMOGENEOUS)
+from repro.core import compression as Cmp
+from repro.core import fedmm, naive
+from repro.core.variational import DictLearnSpec, make_dictlearn
+from repro.data.movielens import movielens_like
+from repro.data.synthetic import (balanced_kmeans_split, client_minibatch_fn,
+                                  dictlearn_data, homogeneous_split)
+
+
+def make_setting(exp, key, reduced=True):
+    if exp.split == "movielens":
+        p, K = (100, 20) if reduced else (exp.p, exp.K)
+        n_samples = 1000 if reduced else exp.n_samples
+        z = movielens_like(key, n_users=n_samples, n_movies=p, rank=K)
+    else:
+        p, K = exp.p, exp.K
+        n_samples = exp.n_samples if not reduced else min(exp.n_samples, 1500)
+        z, _ = dictlearn_data(key, n_samples, p, K)
+    if exp.split == "homogeneous":
+        clients = homogeneous_split(z, exp.n_clients)
+    else:
+        clients = balanced_kmeans_split(key, z, exp.n_clients,
+                                        n_iters=5 if reduced else 20)
+    spec = DictLearnSpec(p=p, K=K, lam=exp.lam, eta=exp.eta,
+                         ista_iters=50 if reduced else 100)
+    return spec, clients, z
+
+
+def run_setting(exp, rounds=120, reduced=True, seed=0):
+    key = jax.random.PRNGKey(seed)
+    spec, clients, z = make_setting(exp, key, reduced)
+    sur = make_dictlearn(spec)
+    cfg = fedmm.FedMMConfig(
+        n_clients=exp.n_clients, p=exp.participation, alpha=exp.alpha,
+        compressor=Cmp.block_quant(exp.quant_bits, 128))
+    batch_fn = client_minibatch_fn(clients, exp.batch_size)
+    gamma = lambda t: exp.beta_stepsize / jnp.sqrt(exp.beta_stepsize + t)
+
+    theta0 = jax.random.normal(key, (spec.p, spec.K)) * 0.1
+    s0 = sur.s_bar(z[:128], theta0)
+    eval_z = z[:512]
+
+    t0 = time.time()
+    st_f, hist_f = fedmm.run(sur, s0, batch_fn, gamma, key, cfg, rounds,
+                             eval_batch=eval_z)
+    st_n, hist_n = naive.run(sur, theta0, batch_fn, gamma, key, cfg, rounds,
+                             eval_batch=eval_z,
+                             surrogate_diag_batches=clients[:, :128])
+    dt = time.time() - t0
+    return {"fedmm": hist_f, "naive": hist_n, "seconds": dt}
+
+
+def main(reduced=True, rounds=120):
+    rows = []
+    for exp in (SYNTH_HOMOGENEOUS, SYNTH_HETEROGENEOUS, MOVIELENS):
+        out = run_setting(exp, rounds=rounds, reduced=reduced)
+        f, n = out["fedmm"], out["naive"]
+        row = {
+            "setting": exp.name,
+            "fedmm_loss_first": f[0]["loss"], "fedmm_loss_last": f[-1]["loss"],
+            "naive_loss_first": n[0]["loss"], "naive_loss_last": n[-1]["loss"],
+            "fedmm_es_last": f[-1]["e_s"],
+            "naive_esp_last": n[-1].get("e_s_p", float("nan")),
+            "seconds": out["seconds"],
+        }
+        rows.append(row)
+        print(f"[fig1] {exp.name:22s} "
+              f"FedMM loss {row['fedmm_loss_first']:.3f}->{row['fedmm_loss_last']:.3f}  "
+              f"naive loss {row['naive_loss_first']:.3f}->{row['naive_loss_last']:.3f}  "
+              f"E^s(FedMM)={row['fedmm_es_last']:.3e} "
+              f"E^sp(naive)={row['naive_esp_last']:.3e}  ({row['seconds']:.0f}s)",
+              flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

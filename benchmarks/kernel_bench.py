@@ -1,0 +1,71 @@
+"""Kernel microbenchmarks: wall time of the Pallas kernels (interpret mode
+on CPU — structural check + oracle comparison; on TPU the same harness times
+the compiled Mosaic kernels) and of their jnp oracles under jit.
+
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks/run.py contract).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    rows = []
+
+    # quantize: jnp oracle vs pallas(interpret)
+    x = jax.random.normal(KEY, (1 << 16,))
+    u = jax.random.uniform(jax.random.PRNGKey(1), (1 << 16,))
+    t_ref = _time(jax.jit(lambda a, b: ref.quantize_block_ref(a, b)), x, u)
+    rows.append(("quantize_block_ref_64k", t_ref,
+                 f"{x.size * 4 / (t_ref / 1e6) / 1e9:.2f}GB/s"))
+    t_k = _time(lambda a, b: ops.quantize_dequantize(a, jax.random.PRNGKey(2)),
+                x, u)
+    rows.append(("quantize_block_pallas_interp_64k", t_k, ""))
+
+    # flash attention
+    q = jax.random.normal(KEY, (1, 512, 4, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 512, 2, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 512, 2, 64))
+    t_ref = _time(jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c)),
+                  q, k, v)
+    flops = 2 * 2 * 512 * 512 * 4 * 64
+    rows.append(("flash_attention_ref_512", t_ref,
+                 f"{flops / (t_ref / 1e6) / 1e9:.2f}GF/s"))
+    t_k = _time(lambda a, b, c: ops.flash_attention(a, b, c), q, k, v)
+    rows.append(("flash_attention_pallas_interp_512", t_k, ""))
+
+    # rwkv scan
+    B, S, H, hd = 1, 256, 4, 64
+    ks = jax.random.split(KEY, 4)
+    r, kk, vv = (jax.random.normal(x_, (B, S, H, hd)) for x_ in ks[:3])
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, hd)))
+    uu = jax.random.normal(KEY, (H, hd)) * 0.1
+    t_ref = _time(jax.jit(lambda *a: ref.rwkv_scan_ref(*a)), r, kk, vv, w, uu)
+    rows.append(("rwkv_scan_ref_256", t_ref, ""))
+    t_k = _time(lambda *a: ops.rwkv_wkv(*a), r, kk, vv, w, uu)
+    rows.append(("rwkv_scan_pallas_interp_256", t_k, ""))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+JSON results in results/*.json. One row per (arch x shape x mesh):
+all three terms, dominant bottleneck, MODEL_FLOPS and the useful-flops
+ratio. ``--markdown`` emits the EXPERIMENTS.md table body."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+
+def load(patterns=("results/base_*.json", "results/mp_*.json")):
+    rows = []
+    for pat in patterns:
+        for path in sorted(glob.glob(pat)):
+            with open(path) as f:
+                rows.extend(json.load(f))
+    return rows
+
+
+def render(rows, markdown=False):
+    rows = sorted(rows, key=lambda r: (r["arch"], r["shape"], r["multi_pod"]))
+    header = ("arch", "shape", "pods", "status", "compute_s", "memory_s",
+              "collective_s", "dominant", "temp_GiB", "useful_flops")
+    if markdown:
+        print("| " + " | ".join(header) + " |")
+        print("|" + "---|" * len(header))
+    out = []
+    for r in rows:
+        pods = 2 if r["multi_pod"] else 1
+        if r["status"] != "ok":
+            vals = (r["arch"], r["shape"], pods,
+                    r["status"], "-", "-", "-", "-", "-", "-")
+        else:
+            t = r["roofline"]
+            ufr = r.get("useful_flops_ratio")
+            vals = (r["arch"], r["shape"], pods, "ok",
+                    f"{t['compute_s']:.4f}", f"{t['memory_s']:.4f}",
+                    f"{t['collective_s']:.4f}", t["dominant"],
+                    f"{(r['memory'].get('temp_bytes') or 0) / 2**30:.1f}",
+                    f"{ufr:.2f}" if ufr else "-")
+        out.append(vals)
+        if markdown:
+            print("| " + " | ".join(str(v) for v in vals) + " |")
+        else:
+            print(("{:28s} {:12s} {:>4} {:8s}" + " {:>10}" * 6).format(
+                *[str(v) for v in vals]))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load()
+    if not rows:
+        print("no dry-run results found under results/ — run "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all first")
+        return
+    render(rows, markdown=args.markdown)
+
+
+if __name__ == "__main__":
+    main()

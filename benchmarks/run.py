@@ -1,0 +1,55 @@
+"""Benchmark entrypoint: one function per paper table/figure + kernel
+microbenches + the roofline table (if dry-run results exist).
+
+Prints ``name,us_per_call,derived`` CSV rows followed by per-figure
+summaries. Reduced problem sizes keep the whole suite CPU-friendly
+(~10-15 min); pass --full for paper-scale settings.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip", default="",
+                    help="comma list: fig1,fig2,fig3,kernels,roofline")
+    args, _ = ap.parse_known_args()
+    skip = set(args.skip.split(","))
+    reduced = not args.full
+    rounds = 300 if args.full else 80
+
+    if "kernels" not in skip:
+        print("=== kernel microbenchmarks (name,us_per_call,derived) ===")
+        from benchmarks import kernel_bench
+        kernel_bench.main()
+
+    if "fig1" not in skip:
+        print("\n=== Figure 1: aggregation space (FedMM vs naive) ===")
+        from benchmarks import fig1_dictlearn
+        fig1_dictlearn.main(reduced=reduced, rounds=rounds)
+
+    if "fig2" not in skip:
+        print("\n=== Figure 2: control variates ===")
+        from benchmarks import fig2_control_variates
+        fig2_control_variates.main(reduced=reduced, rounds=rounds)
+
+    if "fig3" not in skip:
+        print("\n=== Figure 3: FedMM-OT vs FedAdam (L2-UVP) ===")
+        from benchmarks import fig3_ot
+        fig3_ot.main(dims=(4, 8, 16) if reduced else (16, 32, 64),
+                     rounds=40 if reduced else 100)
+
+    if "roofline" not in skip:
+        print("\n=== Roofline table (from dry-run results, if present) ===")
+        from benchmarks import roofline_table
+        rows = roofline_table.load()
+        if rows:
+            roofline_table.render(rows)
+        else:
+            print("(no results/*.json — run repro.launch.dryrun first)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: the paper in ~60 lines.
+
+1. Build a linearly parameterized surrogate (dictionary learning, Example 3).
+2. Run centralized SA-SSMM (Algorithm 1).
+3. Run FedMM (Algorithm 2) with heterogeneous clients, partial participation,
+   8-bit compression and control variates — and watch it match the
+   centralized solution while the naive Theta-aggregation baseline stalls.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression, fedmm, naive, sassmm
+from repro.core.variational import DictLearnSpec, make_dictlearn
+from repro.data.synthetic import (balanced_kmeans_split, client_minibatch_fn,
+                                  dictlearn_data)
+
+key = jax.random.PRNGKey(0)
+
+# --- data: Z = theta* h with sparse codes, split heterogeneously -----------
+spec = DictLearnSpec(p=30, K=8, lam=0.1, eta=0.2)
+z, theta_star = dictlearn_data(key, 2000, spec.p, spec.K)
+clients = balanced_kmeans_split(key, z, n_clients=10, n_iters=5)
+sur = make_dictlearn(spec)
+
+theta0 = jax.random.normal(key, (spec.p, spec.K)) * 0.1
+s0 = sur.s_bar(z[:64], theta0)
+gamma = sassmm.decaying_stepsize(0.05)
+
+# --- centralized SA-SSMM ----------------------------------------------------
+state, hist = sassmm.run(sur, s0, [z[i % 20 * 100:(i % 20 + 1) * 100]
+                                   for i in range(100)], gamma)
+print(f"SA-SSMM      loss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+# --- FedMM: PP + 8-bit quantization + control variates ----------------------
+cfg = fedmm.FedMMConfig(n_clients=10, p=0.5, alpha=0.01,
+                        compressor=compression.block_quant(8, 128))
+batch_fn = client_minibatch_fn(clients, batch_size=50)
+fed_state, fed_hist = fedmm.run(sur, s0, batch_fn, gamma, key, cfg,
+                                n_rounds=100, eval_batch=z[:512])
+print(f"FedMM        loss: {fed_hist[0]['loss']:.4f} -> {fed_hist[-1]['loss']:.4f}"
+      f"   E^s: {fed_hist[0]['e_s']:.2e} -> {fed_hist[-1]['e_s']:.2e}")
+
+# --- naive Theta-space aggregation (the paper's cautionary baseline) --------
+naive_state, naive_hist = naive.run(sur, theta0, batch_fn, gamma, key, cfg,
+                                    n_rounds=100, eval_batch=z[:512])
+print(f"naive(Theta) loss: {naive_hist[0]['loss']:.4f} -> {naive_hist[-1]['loss']:.4f}")
+print("\nKey message (Section 3.1): aggregate the SURROGATE, not the parameter.")

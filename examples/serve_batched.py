@@ -1,0 +1,10 @@
+"""Batched serving example (deliverable b): prefill + greedy decode with
+the production KV-cache layout and optional int8 cache quantization.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma3-12b \
+        --batch 4 --prompt-len 32 --new-tokens 16 --int8-kv
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""End-to-end FedMM language-model pretraining (deliverable b driver).
+
+Thin wrapper over ``repro.launch.train``: trains a ~100M-parameter variant
+of any assigned architecture with the FedMM federated trainer (quadratic
+surrogate, control variates, 8-bit uplink quantization) on heterogeneous
+synthetic token streams, for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py --arch gemma3-12b \
+        --steps 300 --batch 8 --seq 256
+
+Any flag of repro.launch.train is accepted (see --help there).
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if not any(a.startswith("--preset") for a in sys.argv):
+        sys.argv += ["--preset", "100m"]
+    main()

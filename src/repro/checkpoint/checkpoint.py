@@ -1,0 +1,44 @@
+"""Minimal dependency-free pytree checkpointing (.npz + structure spec).
+
+Save/restore arbitrary pytrees of arrays (params, FedMM server state,
+optimizer state). Array leaves are stored flat in an .npz; the treedef is
+stored as a repr'd structure file alongside for structural verification.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def save(path: str, tree: Any) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path if path.endswith(".npz") else path + ".npz",
+             **{f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)})
+    with open(_spec_path(path), "w") as f:
+        json.dump({"treedef": str(treedef), "n_leaves": len(leaves)}, f)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes are validated)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    leaves, treedef = jax.tree.flatten(like)
+    if len(leaves) != len(npz.files):
+        raise ValueError(f"checkpoint has {len(npz.files)} leaves, "
+                         f"expected {len(leaves)}")
+    new_leaves = []
+    for i, ref in enumerate(leaves):
+        arr = npz[f"leaf_{i}"]
+        if hasattr(ref, "shape") and tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {i}: shape {arr.shape} != {ref.shape}")
+        new_leaves.append(jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, new_leaves)
+
+
+def _spec_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".spec.json"

@@ -1,0 +1,10 @@
+"""Core library: the paper's primary contribution.
+
+MM-1/MM-2 surrogate framework, SA-SSMM (Algorithm 1), FedMM (Algorithm 2)
+with control variates / partial participation / compression / projection,
+the naive Theta-aggregation baseline, and FedMM-OT (Algorithm 3).
+"""
+from . import (compression, fedmm, fedmm_ot, jensen, naive, prox, quadratic,  # noqa: F401
+               sassmm, surrogate, variational)
+from .surrogate import Surrogate  # noqa: F401
+from .fedmm import FedMMConfig, FedMMState  # noqa: F401

@@ -1,0 +1,253 @@
+"""Algorithm 3 — FedMM-OT: pseudo-MM for federated Wasserstein-2 maps.
+
+Section 7: n clients hold samples of local distributions P_i; everyone shares
+a public target Q. Potentials f_omega, f_theta are Input Convex Neural
+Networks (ICNN, Amos et al. 2017); the fitted map is x -> grad_x f_omega(x).
+
+Local objective (eq. 33):
+    W_i(omega, theta) = E_{P_i}[f_omega(X)]
+                      + E_Q[ <grad f_theta(Y), Y> - f_omega(grad f_theta(Y)) ]
+                      + lambda * E_Q[ || grad f_omega(grad f_theta(Y)) - Y ||^2 ]
+
+FedMM-OT round (Algorithm 3): clients compute best-response potential
+parameters omega_i(theta_t) (relaxed to a few local SGD steps), send
+control-variate-corrected deltas; the server aggregates them in the
+*surrogate* (omega) space and then performs the global conjugate update
+theta_{t+1} = argmin_theta W(omega_{t+1}, theta) (a few Adam steps).
+
+Evaluation: L2-UVP against the closed-form Gaussian->Gaussian OT map
+(offline replacement for the Korotin et al. 2021b benchmark — see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .surrogate import tree_add, tree_axpy, tree_scale, tree_sub, tree_sq_norm
+from ..optim.optimizers import adam_init, adam_update
+
+
+# ---------------------------------------------------------------------------
+# ICNN
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ICNNSpec:
+    dim: int
+    hidden: tuple = (64, 64, 64)   # three dense layers (Korotin MMv2 style)
+    strong_convexity: float = 0.1  # quadratic skip making grad f invertible
+
+
+def icnn_init(key, spec: ICNNSpec):
+    keys = jax.random.split(key, 2 * len(spec.hidden) + 1)
+    params = {"Wx": [], "Wz": [], "b": []}
+    prev = 0
+    for i, h in enumerate(spec.hidden):
+        params["Wx"].append(jax.random.normal(keys[2 * i], (spec.dim, h))
+                            / jnp.sqrt(spec.dim))
+        params["b"].append(jnp.zeros((h,)))
+        if i > 0:
+            # z-weights: parameterized unconstrained, squared at use -> >= 0
+            params["Wz"].append(jax.random.normal(keys[2 * i + 1], (prev, h))
+                                * jnp.sqrt(1.0 / prev))
+        prev = h
+    params["w_out"] = jax.random.normal(keys[-1], (prev,)) / jnp.sqrt(prev)
+    return params
+
+
+def icnn_forward(params, spec: ICNNSpec, x):
+    """Scalar convex potential f(x); x: (..., dim)."""
+    act = jax.nn.softplus
+    z = act(x @ params["Wx"][0] + params["b"][0])
+    for i in range(1, len(spec.hidden)):
+        lin = x @ params["Wx"][i] + params["b"][i]
+        z = act(lin + z @ (params["Wz"][i - 1] ** 2))   # nonneg z-weights
+    out = z @ (params["w_out"] ** 2)
+    return out + 0.5 * spec.strong_convexity * jnp.sum(x * x, axis=-1)
+
+
+def icnn_grad(params, spec: ICNNSpec, x):
+    """grad_x f(x) batched: the transport map."""
+    f_sum = lambda xx: jnp.sum(icnn_forward(params, spec, xx))
+    return jax.grad(f_sum)(x)
+
+
+# ---------------------------------------------------------------------------
+# The federated OT objective
+# ---------------------------------------------------------------------------
+
+def local_objective(omega, theta, spec: ICNNSpec, x_p, y_q, lam: float):
+    """W_i(omega, theta) on minibatches x_p ~ P_i, y_q ~ Q (eq. 33)."""
+    f_w = icnn_forward(omega, spec, x_p)                      # E_{P_i} f_omega
+    ty = icnn_grad(theta, spec, y_q)                          # grad f_theta(Y)
+    inner = jnp.sum(ty * y_q, axis=-1)
+    f_w_ty = icnn_forward(omega, spec, ty)
+    reg = jnp.sum((icnn_grad(omega, spec, ty) - y_q) ** 2, axis=-1)
+    return jnp.mean(f_w) + jnp.mean(inner - f_w_ty) + lam * jnp.mean(reg)
+
+
+def conjugate_objective(omega, theta, spec: ICNNSpec, y_q, lam: float):
+    """The theta-dependent part of W (depends on Q only) — server line 16."""
+    ty = icnn_grad(theta, spec, y_q)
+    inner = jnp.sum(ty * y_q, axis=-1)
+    f_w_ty = icnn_forward(omega, spec, ty)
+    reg = jnp.sum((icnn_grad(omega, spec, ty) - y_q) ** 2, axis=-1)
+    return jnp.mean(inner - f_w_ty) + lam * jnp.mean(reg)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FedOTConfig:
+    n_clients: int
+    p: float = 1.0
+    alpha: float = 0.01
+    lam: float = 1.0
+    client_lr: float = 1e-3        # local best-response relaxation (1 grad step)
+    client_steps: int = 1
+    server_steps: int = 10         # Adam steps for the conjugate update
+    server_lr: float = 1e-3
+
+
+class FedOTState(NamedTuple):
+    omega: object
+    theta: object
+    v: object
+    v_i: object
+    theta_opt: object   # Adam state for the server conjugate updates
+    step: jnp.ndarray
+
+
+def init(key, spec: ICNNSpec, cfg: FedOTConfig) -> FedOTState:
+    k1, k2 = jax.random.split(key)
+    omega = icnn_init(k1, spec)
+    theta = icnn_init(k2, spec)
+    v_i = jax.tree.map(lambda x: jnp.zeros((cfg.n_clients,) + x.shape, x.dtype), omega)
+    v = jax.tree.map(jnp.zeros_like, omega)
+    return FedOTState(omega=omega, theta=theta, v=v, v_i=v_i,
+                      theta_opt=adam_init(theta), step=jnp.asarray(0))
+
+
+def step(state: FedOTState, spec: ICNNSpec, cfg: FedOTConfig,
+         client_x, y_q, gamma, key):
+    """One FedMM-OT round. client_x: (n, b, dim); y_q: (bq, dim) public."""
+    n, p, alpha = cfg.n_clients, cfg.p, cfg.alpha
+    mu = jnp.full((n,), 1.0 / n)
+    k_part, _ = jax.random.split(key)
+    active = jax.random.bernoulli(k_part, p, (n,)).astype(jnp.float32)
+
+    grad_local = jax.grad(
+        lambda w, xp: local_objective(w, state.theta, spec, xp, y_q, cfg.lam))
+
+    def best_response(x_i):                                    # line 6 (relaxed)
+        w = state.omega
+        for _ in range(cfg.client_steps):
+            g = grad_local(w, x_i)
+            w = jax.tree.map(lambda a, b: a - cfg.client_lr * b, w, g)
+        return w
+
+    omega_i = jax.vmap(best_response)(client_x)
+    # Delta_i = omega_i(theta_t) - omega_t - V_{t,i}          (line 7)
+    delta = jax.tree.map(
+        lambda wi, w, v: (wi - w[None]) - v, omega_i, state.omega, state.v_i)
+    delta = jax.tree.map(
+        lambda x: x * active.reshape((n,) + (1,) * (x.ndim - 1)), delta)
+
+    v_i_new = jax.tree.map(lambda v, d: v + (alpha / p) * d, state.v_i, delta)
+    agg = jax.tree.map(lambda x: jnp.tensordot(mu, x, axes=1), delta)
+    h = tree_add(state.v, tree_scale(agg, 1.0 / p))            # line 13
+    omega_new = tree_axpy(gamma, h, state.omega)               # line 14
+    v_new = tree_add(state.v, tree_scale(agg, alpha / p))      # line 17
+
+    # server conjugate update (line 16): a few Adam steps on theta
+    grad_conj = jax.grad(
+        lambda th: conjugate_objective(omega_new, th, spec, y_q, cfg.lam))
+
+    def adam_body(carry, _):
+        th, opt = carry
+        g = grad_conj(th)
+        th, opt = adam_update(th, g, opt, cfg.server_lr)
+        return (th, opt), None
+
+    (theta_new, opt_new), _ = jax.lax.scan(
+        adam_body, (state.theta, state.theta_opt), None, length=cfg.server_steps)
+
+    metrics = {"omega_update": tree_sq_norm(tree_sub(omega_new, state.omega)) / gamma ** 2}
+    return FedOTState(omega=omega_new, theta=theta_new, v=v_new, v_i=v_i_new,
+                      theta_opt=opt_new, step=state.step + 1), metrics
+
+
+# ---------------------------------------------------------------------------
+# FedAdam baseline (Reddi et al. 2021) — the Section 7.3 comparison:
+# clients send grads of the differentiable objective (33) w.r.t. (omega,
+# theta); the server applies Adam. No surrogate aggregation.
+# ---------------------------------------------------------------------------
+
+class FedAdamState(NamedTuple):
+    omega: object
+    theta: object
+    opt: object
+    step: jnp.ndarray
+
+
+def fedadam_init(key, spec: ICNNSpec) -> FedAdamState:
+    k1, k2 = jax.random.split(key)
+    params = {"omega": icnn_init(k1, spec), "theta": icnn_init(k2, spec)}
+    return FedAdamState(omega=params["omega"], theta=params["theta"],
+                        opt=adam_init(params), step=jnp.asarray(0))
+
+
+def fedadam_step(state: FedAdamState, spec: ICNNSpec, client_x, y_q,
+                 lam: float, lr: float, key, p: float = 1.0):
+    n = client_x.shape[0]
+    active = jax.random.bernoulli(key, p, (n,)).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(active), 1.0)
+
+    def client_grad(x_i):
+        def obj(params):
+            return local_objective(params["omega"], params["theta"], spec,
+                                   x_i, y_q, lam)
+        return jax.grad(obj)({"omega": state.omega, "theta": state.theta})
+
+    grads = jax.vmap(client_grad)(client_x)
+    grads = jax.tree.map(
+        lambda g: jnp.tensordot(active, g, axes=1) / denom, grads)
+    params = {"omega": state.omega, "theta": state.theta}
+    new_params, new_opt = adam_update(params, grads, state.opt, lr)
+    return FedAdamState(omega=new_params["omega"], theta=new_params["theta"],
+                        opt=new_opt, step=state.step + 1)
+
+
+# ---------------------------------------------------------------------------
+# Gaussian ground truth + L2-UVP (Section 7.2, offline variant)
+# ---------------------------------------------------------------------------
+
+def gaussian_ot_map(m_p, cov_p, m_q, cov_q):
+    """Closed-form W2-optimal map between Gaussians:
+    m(x) = m_q + A (x - m_p),  A = S_p^{-1/2} (S_p^{1/2} S_q S_p^{1/2})^{1/2} S_p^{-1/2}."""
+    def sqrtm(m):
+        w, v = jnp.linalg.eigh(m)
+        return (v * jnp.sqrt(jnp.maximum(w, 0.0))) @ v.T
+
+    sp_half = sqrtm(cov_p)
+    sp_half_inv = jnp.linalg.inv(sp_half)
+    mid = sqrtm(sp_half @ cov_q @ sp_half)
+    A = sp_half_inv @ mid @ sp_half_inv
+
+    def tmap(x):
+        return m_q + (x - m_p) @ A.T
+
+    return tmap, A
+
+
+def l2_uvp(map_fn, true_map_fn, x_p, cov_q):
+    """100 * E_P ||m - m*||^2 / Var(Q); Var(Q) = L1 norm of Cov(Q)
+    (the convention of the Korotin benchmark implementation)."""
+    err = jnp.mean(jnp.sum((map_fn(x_p) - true_map_fn(x_p)) ** 2, axis=-1))
+    var_q = jnp.sum(jnp.abs(cov_q))
+    return 100.0 * err / var_q

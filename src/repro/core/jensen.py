@@ -1,0 +1,135 @@
+"""Example 2 — Jensen surrogates: EM in vector exponential families.
+
+Two concrete instances from Appendix C:
+
+1. Poisson observations with latent log-intensity shift (App. C.1, the
+   "E_pi[Z] explicit" variant):
+       psi(theta) = -theta E[Z],  phi(theta) = exp(theta),
+       S(Z, h) = -exp(h),  S = R_{<0},  T(s) = log(E[Z] / (lambda - s)),
+   and the A7 geometry B(s) = E[Z]/(lambda - s)^2 in closed form (App. E.2).
+
+2. Mixture of L Gaussians with known weights/covariances, ridge-penalized
+   means (App. C.2). Mirror parameter s = (s1, s2) with
+       s1[l] = E[ Z * post_l(Z) ],   s2[l] = E[ post_l(Z) ],  l < L,
+   and T given by the closed-form penalized M-step.
+   (We keep all L components in s — the paper drops the L-th by the
+   sum-to-one identity; keeping it is an equivalent parameterization that
+   makes T symmetric and is what FedEM (Dieuleveut et al. 2021) uses.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .surrogate import Surrogate
+
+
+# ---------------------------------------------------------------------------
+# Poisson-EM (Appendix C.1, second parameterization)
+# ---------------------------------------------------------------------------
+
+def make_poisson_em(mean_z: float, lam: float, s_min: float = -50.0) -> Surrogate:
+    """Latent-intensity Poisson MAP-EM. ``z`` batches are dicts with key 'h'
+    holding posterior draws of the latent h given Z at parameter tau — in this
+    toy model the posterior over h does not admit a closed form in general;
+    for testing we use the conjugate special case where mu(dh|Z,tau) is known
+    (see tests). The oracle contract is simply s_bar = -mean(exp(h))."""
+
+    def s_bar(batch, tau):
+        del tau
+        return -jnp.mean(jnp.exp(batch["h"]))
+
+    def T(s):
+        return jnp.log(mean_z / (lam - s))
+
+    def project(s):
+        return jnp.clip(s, s_min, -1e-8)  # S = [-M, 0)
+
+    def psi(theta):
+        return -theta * mean_z
+
+    def phi(theta):
+        return jnp.exp(theta)
+
+    return Surrogate(s_bar=s_bar, T=T, project=project, psi=psi, phi=phi)
+
+
+def poisson_em_metric(mean_z: float, lam: float):
+    """Returns B(s), v_min, v_max over S=[-M,0] per App. E.2."""
+    def B(s):
+        return mean_z / (lam - s) ** 2
+    return B
+
+
+# ---------------------------------------------------------------------------
+# GMM-EM with known covariances/weights, ridge MAP on the means (App. C.2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GMMSpec:
+    weights: jnp.ndarray       # (L,)
+    covs: jnp.ndarray          # (L, p, p)
+    lam: float                 # ridge penalty on the means
+
+
+def _gmm_log_post(z, means, spec: GMMSpec):
+    """log responsibilities: z (b, p), means (L, p) -> (b, L)."""
+    L = means.shape[0]
+    covs = spec.covs
+    chols = jnp.linalg.cholesky(covs)                       # (L, p, p)
+    diff = z[:, None, :] - means[None, :, :]                # (b, L, p)
+    sol = jax.vmap(lambda c, d: jax.scipy.linalg.solve_triangular(c, d.T, lower=True).T,
+                   in_axes=(0, 1), out_axes=1)(chols, diff)  # (b, L, p)
+    maha = jnp.sum(sol ** 2, axis=-1)                        # (b, L)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chols, axis1=1, axis2=2)), axis=1)  # (L,)
+    logp = jnp.log(spec.weights)[None, :] - 0.5 * (maha + logdet[None, :])
+    return logp - jax.scipy.special.logsumexp(logp, axis=1, keepdims=True)
+
+
+def gmm_neg_loglik(z, means, spec: GMMSpec):
+    """Penalized negative log-likelihood (the f + g the EM minimizes)."""
+    L = means.shape[0]
+    chols = jnp.linalg.cholesky(spec.covs)
+    diff = z[:, None, :] - means[None, :, :]
+    sol = jax.vmap(lambda c, d: jax.scipy.linalg.solve_triangular(c, d.T, lower=True).T,
+                   in_axes=(0, 1), out_axes=1)(chols, diff)
+    maha = jnp.sum(sol ** 2, axis=-1)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chols, axis1=1, axis2=2)), axis=1)
+    logp = jnp.log(spec.weights)[None, :] - 0.5 * (maha + logdet[None, :])
+    ll = jax.scipy.special.logsumexp(logp, axis=1)
+    return -jnp.mean(ll) + 0.5 * spec.lam * jnp.sum(means ** 2)
+
+
+def make_gmm_em(spec: GMMSpec) -> Surrogate:
+    """theta = means (L, p); s = dict(s1=(L, p), s2=(L,))."""
+
+    def s_bar(batch, means):
+        z = batch["z"] if isinstance(batch, dict) else batch      # (b, p)
+        post = jnp.exp(_gmm_log_post(z, means, spec))             # (b, L)
+        s1 = post.T @ z / z.shape[0]                              # (L, p)
+        s2 = jnp.mean(post, axis=0)                               # (L,)
+        return {"s1": s1, "s2": s2}
+
+    def T(s):
+        # M-step of the ridge-MAP EM: means_l = (s2_l I + lam Sigma_l)^{-1} s1_l
+        def one(s1_l, s2_l, cov_l):
+            p = s1_l.shape[0]
+            A = s2_l * jnp.eye(p) + spec.lam * cov_l
+            return jnp.linalg.solve(A, s1_l)
+        return jax.vmap(one)(s["s1"], s["s2"], spec.covs)
+
+    def project(s):
+        # S: s2 in the simplex scaled region [0,1], sum <= 1 (we keep all L
+        # components so sum == 1 at fixed points); clip for robustness to
+        # quantization noise.
+        s2 = jnp.clip(s["s2"], 1e-6, 1.0)
+        return {"s1": s["s1"], "s2": s2}
+
+    def loss(batch, means):
+        z = batch["z"] if isinstance(batch, dict) else batch
+        return gmm_neg_loglik(z, means, spec)
+
+    return Surrogate(s_bar=s_bar, T=T, project=project, loss=loss)

@@ -1,0 +1,80 @@
+"""Proximity operators used by MM-2 minimizer maps T(s) = prox_{rho g}(s).
+
+All operators act leaf-wise on pytrees and are exact closed forms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def prox_zero(s, rho=1.0):
+    """g = 0 -> prox is the identity (plain SGD mirror map)."""
+    del rho
+    return s
+
+
+def prox_l2(s, rho, lam):
+    """g(theta) = lam/2 ||theta||^2  ->  prox(s) = s / (1 + rho*lam)."""
+    c = 1.0 / (1.0 + rho * lam)
+    return jax.tree.map(lambda x: c * x, s)
+
+
+def prox_l1(s, rho, lam):
+    """g(theta) = lam ||theta||_1  -> soft-thresholding."""
+    t = rho * lam
+    return jax.tree.map(lambda x: jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0), s)
+
+
+def prox_unit_columns(theta, rho=None):
+    """g = indicator of { ||theta_{.,k}|| <= 1 } (Mairal's dictionary
+    constraint, Section 2.3): project every column into the unit ball."""
+    del rho
+
+    def _proj(x):
+        if x.ndim == 1:
+            n = jnp.linalg.norm(x)
+            return x / jnp.maximum(n, 1.0)
+        norms = jnp.linalg.norm(x, axis=0, keepdims=True)
+        return x / jnp.maximum(norms, 1.0)
+
+    return jax.tree.map(_proj, theta)
+
+
+def project_psd(m, eps=0.0):
+    """Metric projection of a symmetric matrix onto the PSD cone
+    (needed because S = M_K^+ x R^{pxK} for the variational surrogate;
+    quantization/control-variate steps can leave the cone, Section 5)."""
+    sym = 0.5 * (m + m.T)
+    w, v = jnp.linalg.eigh(sym)
+    w = jnp.maximum(w, eps)
+    return (v * w) @ v.T
+
+
+def project_interval(s, lo, hi):
+    return jax.tree.map(lambda x: jnp.clip(x, lo, hi), s)
+
+
+def soft_threshold(x, t):
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+def lasso_ista(z, theta, lam, n_iters=100):
+    """Solve M(Z, theta) = argmin_h 0.5||Z - theta h||^2 + lam ||h||_1 by
+    ISTA (proximal gradient; the paper cites LARS/prox-GD as valid oracles).
+
+    z:      (p,) or (b, p)
+    theta:  (p, K)
+    returns h: (K,) or (b, K)
+    """
+    gram = theta.T @ theta                      # (K, K)
+    lip = jnp.linalg.norm(gram, ord=2) + 1e-6   # smoothness constant
+    step = 1.0 / lip
+    ztd = z @ theta                             # (..., K)
+    h0 = jnp.zeros(ztd.shape, z.dtype)
+
+    def body(_, h):
+        grad = h @ gram - ztd
+        return soft_threshold(h - step * grad, step * lam)
+
+    return jax.lax.fori_loop(0, n_iters, body, h0)

@@ -1,0 +1,69 @@
+"""Algorithm 1 — Stochastic Approximation Stochastic Surrogate MM (SA-SSMM).
+
+    for t = 0 .. T-1:
+        S_{t+1}  ~ oracle of E_pi[ Sbar(Z, T(Shat_t)) ]
+        Shat_{t+1} = Shat_t + gamma_{t+1} (S_{t+1} - Shat_t)
+
+The iterate lives in the (convex) surrogate space S; since gamma in (0, 1]
+and S_{t+1} in S, the convex combination stays in S, and the mirror sequence
+T(Shat_t) is the algorithm's parameter-space output.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .surrogate import Surrogate, tree_lerp, tree_sub, tree_sq_norm
+
+
+class SASSMMState(NamedTuple):
+    s_hat: object      # current mirror parameter Shat_t in S
+    step: jnp.ndarray  # iteration counter t
+
+
+def init(sur: Surrogate, s0) -> SASSMMState:
+    del sur
+    return SASSMMState(s_hat=s0, step=jnp.asarray(0))
+
+
+def step(sur: Surrogate, state: SASSMMState, batch, gamma) -> tuple[SASSMMState, dict]:
+    """One SA-SSMM iteration. ``batch`` is the data for the stochastic oracle
+    (online sample or minibatch). Returns (new_state, metrics)."""
+    theta = sur.T(state.s_hat)
+    s_oracle = sur.s_bar(batch, theta)                 # line 2
+    s_new = tree_lerp(state.s_hat, s_oracle, gamma)    # line 3
+    s_new = sur.project(s_new)
+    drift = tree_sub(s_new, state.s_hat)
+    metrics = {
+        # normalized surrogate update ||Shat_{t+1}-Shat_t||^2 / gamma^2
+        # (the Section 6 diagnostic E^s_{t+1})
+        "e_s": tree_sq_norm(drift) / (gamma ** 2),
+    }
+    return SASSMMState(s_hat=s_new, step=state.step + 1), metrics
+
+
+def run(sur: Surrogate, s0, batches, gammas, project_every: bool = True):
+    """Drive SA-SSMM over an in-memory list/iterator of batches; returns the
+    final state and per-step metric history (python loop: reference runner
+    used by tests & small experiments; the LM-scale path lives in
+    repro/fed/trainer.py with jit/pjit)."""
+    state = init(sur, s0)
+    hist = []
+    jstep = jax.jit(lambda st, b, g: step(sur, st, b, g)) if project_every else None
+    for t, batch in enumerate(batches):
+        gamma = gammas(t + 1) if callable(gammas) else gammas[t]
+        state, m = step(sur, state, batch, gamma)
+        if sur.loss is not None:
+            m = dict(m, loss=sur.loss(batch, sur.T(state.s_hat)))
+        hist.append({k: float(v) for k, v in m.items()})
+    return state, hist
+
+
+def decaying_stepsize(beta: float):
+    """gamma_t = beta / sqrt(beta + t) — the schedule used in Section 6."""
+    def gamma(t):
+        return beta / jnp.sqrt(beta + t)
+    return gamma

@@ -1,0 +1,132 @@
+"""MM-1 / MM-2 abstraction: linearly parameterized majorizing surrogates.
+
+The paper (Section 2) studies objectives  W(theta) = f(theta) + g(theta),
+f(theta) = E_pi[ l(Z, theta) ], admitting surrogates of the form
+
+    f(.) <= f(tau) + psi(.) - psi(tau) - < E_pi[ Sbar(Z, tau) ], phi(.) - phi(tau) >
+
+(MM-1), together with a well-defined minimizer map (MM-2)
+
+    T(s) = argmin_theta  g(theta) + psi(theta) - <s, phi(theta)>.
+
+A surrogate instance therefore supplies:
+  * ``s_bar(z, theta)``  -- the per-example mirror statistic Sbar(Z, tau)
+  * ``T(s)``             -- the minimizer map
+  * ``project(s)``       -- (metric) projection onto the convex set S
+  * optionally ``psi``, ``phi``, ``loss`` for diagnostics / majorization tests
+
+The mirror parameter ``s`` lives in a *pytree* space: every method treats
+``s`` and ``theta`` as arbitrary JAX pytrees so that the same algorithms
+(SA-SSMM, FedMM) drive scalar toy problems, dictionary matrices, EM
+sufficient statistics and multi-billion-parameter transformer pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Pytree S-space utilities (the "vector space" structure of S)
+# ---------------------------------------------------------------------------
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: Pytree, c) -> Pytree:
+    return jax.tree.map(lambda x: c * x, a)
+
+
+def tree_axpy(alpha, x: Pytree, y: Pytree) -> Pytree:
+    """alpha * x + y."""
+    return jax.tree.map(lambda u, v: alpha * u + v, x, y)
+
+
+def tree_lerp(a: Pytree, b: Pytree, gamma) -> Pytree:
+    """(1 - gamma) * a + gamma * b  — the SA-SSMM line-3 update."""
+    return jax.tree.map(lambda x, y: x + gamma * (y - x), a, b)
+
+
+def tree_dot(a: Pytree, b: Pytree):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return sum(leaves) if leaves else jnp.asarray(0.0)
+
+
+def tree_sq_norm(a: Pytree):
+    return tree_dot(a, a)
+
+
+def tree_norm(a: Pytree):
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_zeros_like(a: Pytree) -> Pytree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_weighted_sum(trees, weights) -> Pytree:
+    """sum_i weights[i] * trees[i] — S-space aggregation (eq. 22)."""
+    acc = tree_scale(trees[0], weights[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        acc = tree_axpy(w, t, acc)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Surrogate protocol
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Surrogate:
+    """A linearly parameterized majorizing surrogate (MM-1 + MM-2).
+
+    Attributes
+    ----------
+    s_bar:    (z, theta) -> s        per-example mirror statistic Sbar(Z, tau).
+              ``z`` is a batch pytree; implementations must average over the
+              batch dimension themselves (so mini-batch oracles of eq. (18)
+              / Algorithm 1 line 2 are a single call).
+    T:        s -> theta             the MM-2 minimizer map.
+    project:  s -> s                 metric projection onto S (identity when
+              S = R^q). FedMM line 16 calls this after every server update.
+    loss:     optional (z, theta) -> scalar, the sampled objective
+              l(Z, theta) + g(theta)/N-normalized — used by tests/benchmarks.
+    psi, phi: optional diagnostic callables for majorization property tests.
+    """
+
+    s_bar: Callable[[Pytree, Pytree], Pytree]
+    T: Callable[[Pytree], Pytree]
+    project: Callable[[Pytree], Pytree] = lambda s: s
+    loss: Optional[Callable[[Pytree, Pytree], jnp.ndarray]] = None
+    psi: Optional[Callable[[Pytree], jnp.ndarray]] = None
+    phi: Optional[Callable[[Pytree], Pytree]] = None
+    g: Optional[Callable[[Pytree], jnp.ndarray]] = None
+
+    # -- derived quantities -------------------------------------------------
+    def surrogate_value(self, s: Pytree, theta: Pytree) -> jnp.ndarray:
+        """U(theta, s) + g(theta) = g + psi(theta) - <s, phi(theta)> (up to a
+        constant independent of theta). Requires psi/phi/g."""
+        assert self.psi is not None and self.phi is not None
+        val = self.psi(theta) - tree_dot(s, self.phi(theta))
+        if self.g is not None:
+            val = val + self.g(theta)
+        return val
+
+    def mean_field(self, s: Pytree, batch: Pytree) -> Pytree:
+        """h(s) = E[Sbar(Z, T(s))] - s  estimated on ``batch`` (eq. 9)."""
+        return tree_sub(self.s_bar(batch, self.T(s)), s)
+
+
+def fixed_point_residual(sur: Surrogate, s: Pytree, batch: Pytree):
+    """|| h(s) ||, the stationarity measure targeted by Theorem 1."""
+    return tree_norm(sur.mean_field(s, batch))

@@ -1,0 +1,24 @@
+"""Synthetic MovieLens-1M-like ratings data (offline replacement, DESIGN.md
+section 8): a low-rank users x movies matrix with the same geometry the paper
+subsamples (5000 user vectors embedded in R^500, K = 50), plus sparse
+observation noise and integer-ish rating levels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def movielens_like(key, n_users: int = 5000, n_movies: int = 500,
+                   rank: int = 50, noise: float = 0.3, density: float = 0.08):
+    """Returns (ratings (n_users, n_movies) float32) — dense user vectors with
+    zeros for unobserved entries, mimicking the per-user rating vectors the
+    Section 6 experiment factorizes."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    u = jax.random.normal(k1, (n_users, rank)) / jnp.sqrt(rank)
+    v = jax.random.normal(k2, (n_movies, rank))
+    # user/movie biases produce MovieLens-like rating mass around 3-4
+    raw = 3.5 + 1.2 * (u @ v.T) + noise * jax.random.normal(k3, (n_users, n_movies))
+    ratings = jnp.clip(jnp.round(raw * 2.0) / 2.0, 0.5, 5.0)
+    observed = jax.random.bernoulli(k4, density, (n_users, n_movies))
+    return jnp.where(observed, ratings, 0.0).astype(jnp.float32)

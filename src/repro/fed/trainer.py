@@ -1,0 +1,295 @@
+"""FedMM at transformer scale: Algorithm 2 with the quadratic surrogate
+(Example 1) driving any model from ``repro.models``.
+
+Mirror parameter: Shat has the parameter pytree structure; the per-client
+oracle is S_i = theta - rho * grad_i(theta) on the client's batch shard;
+T(s) = prox_{rho g}(s) = s / (1 + rho * wd) elementwise (g = weight decay).
+Delta_i = S_i - Shat - V_i is block-quantized (the Pallas-kernel operator;
+jnp path under pjit) before the uplink aggregation; the server applies the
+SA step. Aggregation happens in the SURROGATE space — the paper's central
+design — and lowers to one weighted all-reduce over the client mesh axes.
+
+Client topology (DESIGN.md §3):
+  physical  n = |pod| x |data| silos; V_i / grads carry a leading client dim
+            sharded over ('pod','data'); inner dims sharded over 'model'.
+            The uplink aggregation IS the cross-silo all-reduce.
+            Memory: ~6 param-sized buffers / 16 devices -> P <~ 20B.
+  logical   n in {2, 4} simulated clients; the client dim is local and inner
+            dims are sharded over the whole mesh (ZeRO-style). Used for the
+            >=26B configs, where per-client control variates at parameter
+            granularity exceed a silo's HBM (this memory equation is a real
+            deployment constraint of FedMM-with-quadratic-surrogates — see
+            EXPERIMENTS.md notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import sharding as shd
+from ..models.model import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class FedLMConfig:
+    n_clients: int
+    rho: float = 0.02              # surrogate curvature step (<= 1/L_f)
+    weight_decay: float = 0.1      # g(theta) = wd/2 ||theta||^2
+    p: float = 1.0                 # participation probability (A5)
+    alpha: float = 0.1             # control-variate step
+    attn_mode: str = "sharded"     # "replicated" = §Perf attention variant
+    mlp_mode: str = "generic"      # "megatron" = §Perf paired row-parallel
+    quant_bits: int = 8            # 0 -> no compression
+    quant_block: int = 256
+    client_mode: str = "physical"  # physical | logical
+    use_cv: bool = True            # False (alpha=0 regime): drop V/V_i
+                                   # entirely — saves 2x params of state
+                                   # (Theorem 1's omega_p=0 / alpha=0 case)
+
+
+class FedLMState(NamedTuple):
+    s_hat: object
+    v: object
+    v_i: object                    # leading client dim
+    step: jnp.ndarray
+
+
+def param_count(model: Model) -> int:
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return sum(int(jnp.prod(jnp.asarray(l.shape))) if l.shape else 1
+               for l in jax.tree.leaves(shapes))
+
+
+def choose_client_layout(n_params: int, multi_pod: bool):
+    """(n_clients, mode) under the per-client control-variate memory budget."""
+    silos = 32 if multi_pod else 16
+    if n_params <= 2.0e10:
+        return silos, "physical"
+    if n_params <= 1.5e11:
+        return 4, "logical"
+    return 2, "logical"
+
+
+def T_map(s_hat, cfg: FedLMConfig):
+    """MM-2 minimizer: prox of the l2 penalty — exact and elementwise."""
+    c = 1.0 / (1.0 + cfg.rho * cfg.weight_decay)
+    return jax.tree.map(lambda x: (c * x).astype(x.dtype), s_hat)
+
+
+def _group_size(D: int, block: int) -> int:
+    """Largest power-of-2 quantization group that divides the per-shard
+    width of the last dim (worst case 32-way sharding), capped at ``block``.
+    Keeping groups shard-local is what lets GSPMD partition the quantizer —
+    a flat reshape across sharded dims would force full rematerialization
+    of parameter-sized tensors (observed: 7 TB/device on qwen3-235b)."""
+    per = D
+    for s in (32, 16):
+        if D % s == 0:
+            per = D // s
+            break
+    per = max(per, 1)
+    g = 1
+    while per % (g * 2) == 0 and g * 2 <= block:
+        g *= 2
+    return g
+
+
+def _quantize_leaf(x, key, bits, block):
+    """Unbiased block quantization (algorithmic twin of
+    kernels/quantize_block.py; groups run along the last axis, shard-aligned
+    — see _group_size). Scale/round/dequant entirely elementwise so the
+    lowered graph keeps the leaf's sharding."""
+    if bits == 0 or x.ndim == 0:
+        return x
+    orig_dtype = x.dtype
+    D = x.shape[-1]
+    g = _group_size(D, block)
+    # quantization arithmetic in the input dtype: the integer code range
+    # (<= 255) is exact in bf16 (8 mantissa bits), so only the x/scale ratio
+    # sees bf16 rounding (~0.4%) — and staying out of f32 halves the
+    # transient memory of this parameter-sized chain.
+    xf = x.reshape(x.shape[:-1] + (D // g, g))
+    levels = jnp.asarray(2.0 ** (bits - 1) - 1.0, xf.dtype)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    y = xf / safe * levels
+    lo = jnp.floor(y)
+    # Stochastic-rounding dither from a fused elementwise hash (murmur3
+    # finalizer over per-element coordinates + the round key): threefry on
+    # parameter-sized tensors costs several u32/u64 intermediates per
+    # element (~20 GB/device observed); the hash fuses to zero extra memory.
+    # On real TPU the Pallas kernel (kernels/quantize_block.py) uses the
+    # hardware PRNG instead.
+    u = _hash_dither_u8(key, y.shape)
+    thresh = jnp.clip((y - lo).astype(jnp.float32) * 256.0,
+                      0.0, 255.0).astype(jnp.uint8)
+    q = lo + (u < thresh).astype(y.dtype)
+    deq = jnp.where(scale > 0, q * safe / levels,
+                    jnp.zeros((), y.dtype))
+    return deq.reshape(x.shape).astype(orig_dtype)
+
+
+def _hash_dither_u8(key, shape):
+    """8-bit dither: murmur3-style integer hash of the element coordinates,
+    seeded by the (folded) JAX key. Elementwise + broadcast only, so it
+    fuses into the surrounding quantization chain and respects sharding."""
+    kd = jax.random.key_data(key).astype(jnp.uint32)
+    seed = kd.reshape(-1)[0] ^ kd.reshape(-1)[-1]
+    idx = jnp.zeros(shape, jnp.uint32)
+    stride = jnp.uint32(1)
+    for d in range(len(shape) - 1, -1, -1):
+        idx = idx + jax.lax.broadcasted_iota(jnp.uint32, shape, d) * stride
+        stride = stride * jnp.uint32(shape[d])
+    x = idx * jnp.uint32(2654435761) + seed
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7feb352d)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846ca68b)
+    x = x ^ (x >> 16)
+    return (x & jnp.uint32(0xFF)).astype(jnp.uint8)
+
+
+def quantize_tree(tree, key, bits, block):
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_quantize_leaf(x, k, bits, block) for x, k in zip(leaves, keys)])
+
+
+def init_state(model: Model, key, cfg: FedLMConfig) -> FedLMState:
+    params = model.init(key)
+    if not cfg.use_cv:
+        return FedLMState(s_hat=params, v={}, v_i={}, step=jnp.asarray(0))
+    v = jax.tree.map(jnp.zeros_like, params)
+    v_i = jax.tree.map(
+        lambda x: jnp.zeros((cfg.n_clients,) + x.shape, x.dtype), params)
+    return FedLMState(s_hat=params, v=v, v_i=v_i, step=jnp.asarray(0))
+
+
+def make_train_step(model: Model, cfg: FedLMConfig):
+    """Returns train_step(state, batch, key, gamma) -> (state, metrics).
+    batch: {"tokens": (n_clients, B_local, S), "labels": ...} (+frontend)."""
+
+    use_cv = cfg.use_cv
+
+    def client_round(theta, s_hat, v_i_c, cb, qkey, active):
+        """One client's work (Algorithm 2 lines 5-9): oracle, drift-corrected
+        delta, quantize, control-variate update. active in {0., 1.}.
+        With use_cv=False (the alpha=0 / omega_p=0 regime of Theorem 1),
+        V_i is dropped entirely — no drift correction, no CV state."""
+        loss, g = jax.value_and_grad(model.loss_fn)(theta, cb)
+        if use_cv:
+            d = jax.tree.map(
+                lambda th, gg, s, vv: th - cfg.rho * gg.astype(th.dtype) - s - vv,
+                theta, g, s_hat, v_i_c)
+        else:
+            d = jax.tree.map(
+                lambda th, gg, s: th - cfg.rho * gg.astype(th.dtype) - s,
+                theta, g, s_hat)
+        q = quantize_tree(d, qkey, cfg.quant_bits, cfg.quant_block)
+        q = jax.tree.map(lambda x: x * active.astype(x.dtype), q)
+        if not use_cv:
+            return loss, q, {}
+        v_new = jax.tree.map(lambda v, dq: v + (cfg.alpha / cfg.p) * dq,
+                             v_i_c, q)
+        return loss, q, v_new
+
+    def train_step(state: FedLMState, batch, key, gamma):
+        n, p, alpha = cfg.n_clients, cfg.p, cfg.alpha
+        theta = T_map(state.s_hat, cfg)
+
+        k_part, k_quant = jax.random.split(key)
+        active = jax.random.bernoulli(k_part, p, (n,)).astype(jnp.float32)
+        quant_keys = jax.random.split(k_quant, n)
+
+        if cfg.client_mode == "physical":
+            # silos run concurrently: client dim is sharded over ('pod','data')
+            losses, q, v_i_new = jax.vmap(
+                client_round, in_axes=(None, None, 0, 0, 0, 0))(
+                    theta, state.s_hat, state.v_i, batch, quant_keys, active)
+            agg = jax.tree.map(lambda x: jnp.mean(x, axis=0), q)  # mu_i = 1/n
+        else:
+            # logical clients share the whole mesh: process sequentially so
+            # only ONE client's grad/delta/quantize transients are live
+            # (38 GB/device -> fits; the production pattern for simulated
+            # cross-silo runs on shared hardware).
+            def body(carry, xs):
+                agg_sum, loss_sum = carry
+                cb, v_c, qk, act = xs
+                loss, q_c, v_new = client_round(theta, state.s_hat, v_c,
+                                                cb, qk, act)
+                agg_sum = jax.tree.map(
+                    lambda a, qq: a + qq.astype(a.dtype), agg_sum, q_c)
+                return (agg_sum, loss_sum + loss), v_new
+
+            zeros = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, x.dtype), state.s_hat)
+            (agg_sum, loss_sum), v_i_new = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)),
+                (batch, state.v_i, quant_keys, active))
+            agg = jax.tree.map(lambda a: a / n, agg_sum)
+            losses = loss_sum / n
+
+        # --- server aggregation (line 13) ----------------------------------
+        if use_cv:
+            h = jax.tree.map(lambda vv, a: vv + a.astype(vv.dtype) / p,
+                             state.v, agg)
+            v_new = jax.tree.map(
+                lambda vv, a: vv + ((alpha / p) * a).astype(vv.dtype),
+                state.v, agg)
+        else:
+            h = jax.tree.map(lambda a: a / p, agg)
+            v_new = state.v
+
+        # --- SA server update (line 15); S = R^q so projection = identity --
+        s_new = jax.tree.map(lambda s, hh: s + gamma * hh.astype(s.dtype),
+                             state.s_hat, h)
+
+        # NB: elementwise square+sum, NOT jnp.vdot — vdot ravels the operand
+        # and a 1-D ravel of a sharded tensor forces full replication.
+        e_s = sum(jnp.sum(jnp.square(hh.astype(jnp.float32)))
+                  for hh in jax.tree.leaves(h))
+        metrics = {"loss": jnp.mean(losses), "e_s": e_s,
+                   "n_active": jnp.sum(active)}
+        return FedLMState(s_hat=s_new, v=v_new, v_i=v_i_new,
+                          step=state.step + 1), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# sharding specs for the FedMM state + batches (consumed by launch/dryrun.py)
+# ---------------------------------------------------------------------------
+
+def state_specs(params_shapes, cfg: FedLMConfig, fsdp, tp="model",
+                fsdp_size=16, tp_size=16):
+    """PartitionSpec pytrees for (s_hat, v, v_i) given the eval_shape of the
+    params. physical: client dim over the fsdp axes, inner dims over tp only.
+    logical: client dim unsharded, inner dims over (fsdp, tp)."""
+    attn_mode = getattr(cfg, "attn_mode", "sharded")
+    mlp_mode = getattr(cfg, "mlp_mode", "generic")
+    if cfg.client_mode == "physical":
+        pspec = shd.param_specs(params_shapes, fsdp=(), fsdp_size=10**9,
+                                tp=tp, tp_size=tp_size, attn_mode=attn_mode,
+                                mlp_mode=mlp_mode)
+        vi_spec = jax.tree.map(lambda s: P(fsdp, *s), pspec,
+                               is_leaf=lambda x: isinstance(x, P))
+    else:
+        pspec = shd.param_specs(params_shapes, fsdp=fsdp, fsdp_size=fsdp_size,
+                                tp=tp, tp_size=tp_size, attn_mode=attn_mode,
+                                mlp_mode=mlp_mode)
+        vi_spec = jax.tree.map(lambda s: P(None, *s), pspec,
+                               is_leaf=lambda x: isinstance(x, P))
+    if not cfg.use_cv:
+        return pspec, {}, {}
+    return pspec, pspec, vi_spec
+
+
+def batch_spec(cfg: FedLMConfig, fsdp):
+    """tokens (n, B_local, S): physical -> client dim over the client axes;
+    logical -> local-batch dim over them."""
+    if cfg.client_mode == "physical":
+        return P(fsdp, None, None)
+    return P(None, fsdp, None)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical hot spots:
+
+- quantize_block: FedMM's uplink compression operator (Algorithm 2 line 8/9)
+- flash_attention: GQA attention (causal / sliding window) for train/prefill
+- rwkv_scan: the RWKV6 WKV recurrence with VMEM-resident state
+
+ops.py holds the jit'd wrappers (interpret mode on CPU); ref.py the
+pure-jnp oracles used by tests/test_kernels.py.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,47 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the kernel body
+runs in Python for validation); on TPU pass ``interpret=False`` (or set
+``repro.kernels.ops.INTERPRET = False`` at process start) for the compiled
+Mosaic kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .quantize_block import quantize_block_pallas
+from .flash_attention import flash_attention_pallas
+from .rwkv_scan import rwkv_scan_pallas
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block"))
+def quantize_dequantize(x, key, bits: int = 8, block: int = 256):
+    """Unbiased block quantize->dequantize of a flat float32 stream.
+    Pads internally to the quant block. This is the FedMM Quant operator
+    (A4) on the wire-critical path."""
+    n = x.shape[0]
+    padded = -(-n // block) * block
+    xp = jnp.pad(x, (0, padded - n))
+    u = jax.random.uniform(key, (padded,))
+    out = quantize_block_pallas(xp, u, bits=bits, block=block,
+                                interpret=INTERPRET)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "q_block", "kv_block"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    q_block: int = 128, kv_block: int = 128):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  q_block=q_block, kv_block=kv_block,
+                                  interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv_wkv(r, k, v, w, u, chunk: int = 64):
+    return rwkv_scan_pallas(r, k, v, w, u, chunk=chunk, interpret=INTERPRET)

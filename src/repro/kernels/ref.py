@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references).
+
+Each ``<name>_ref`` matches the semantics of the corresponding pallas_call
+in ``quantize_block.py`` / ``flash_attention.py`` / ``rwkv_scan.py`` exactly
+(including deterministic quantization rounding given the same uniform draws).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# block quantization (the FedMM communication hot spot, Algorithm 2 line 8/9)
+# ---------------------------------------------------------------------------
+
+def quantize_block_ref(x, u, bits: int = 8, block: int = 256):
+    """Stochastic block quantize-dequantize. x: (n,) float32 (n % block == 0);
+    u: (n,) uniform draws in [0,1) controlling the stochastic rounding.
+    Returns the dequantized array (what the server receives)."""
+    levels = 2.0 ** (bits - 1) - 1.0
+    blocks = x.reshape(-1, block)
+    ub = u.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    y = blocks / safe * levels
+    lo = jnp.floor(y)
+    q = lo + (ub < (y - lo)).astype(y.dtype)
+    deq = q * safe / levels
+    return jnp.where(scale > 0, deq, 0.0).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (GQA, causal / sliding window)
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """Naive full-materialization reference. q: (B, Sq, H, hd);
+    k, v: (B, Sk, KV, hd). Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(hd)
+    q_pos, k_pos = jnp.arange(Sq), jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -1e9)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV recurrence
+# ---------------------------------------------------------------------------
+
+def rwkv_scan_ref(r, k, v, w, u):
+    """WKV6: r,k,v,w: (B, S, H, hd); u: (H, hd). fp32 state (B, H, hd, hd).
+        y_t = r_t . (S_t + diag(u) k_t^T v_t);  S_{t+1} = diag(w_t) S_t + k_t^T v_t
+    Returns (y (B, S, H, hd), final_state)."""
+    def step(state, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, :, :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, y
+
+    B, S, H, hd = r.shape
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    final, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), final

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: RWKV6 WKV recurrence (data-dependent decay).
+
+The WKV6 state S in R^{hd x hd} per head is the VMEM-resident carry; the
+kernel walks the sequence chunks in a grid dimension, keeping the state
+on-chip (HBM traffic = one read of r/k/v/w and one write of y per step —
+the recurrence itself never leaves VMEM). hd = 64 on rwkv6-3b, so the state
+tile (64, 64) is one MXU/VPU-aligned block.
+
+Grid: (B*H, n_chunks); chunk timesteps run in a fori_loop inside the body
+(time is inherently sequential), the chunk axis is the sequential grid dim
+carrying the VMEM scratch state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, state_out_ref, s_scr,
+            *, chunk, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    u = u_ref[0].astype(jnp.float32)              # (hd,)
+
+    def step(t, state):
+        rt = r_ref[0, t].astype(jnp.float32)      # (hd,)
+        kt = k_ref[0, t].astype(jnp.float32)
+        vt = v_ref[0, t].astype(jnp.float32)
+        wt = w_ref[0, t].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]            # (hd, hd)
+        y = (rt[:, None] * (state + u[:, None] * kv)).sum(axis=0)
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return wt[:, None] * state + kv
+
+    s_scr[...] = jax.lax.fori_loop(0, chunk, step, s_scr[...])
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        state_out_ref[0] = s_scr[...]
+
+
+def rwkv_scan_pallas(r, k, v, w, u, chunk: int = 64, interpret: bool = True):
+    """r,k,v,w: (B, S, H, hd); u: (H, hd). Returns (y (B,S,H,hd), state
+    (B,H,hd,hd) fp32) — same contract as kernels.ref.rwkv_scan_ref."""
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+
+    def prep(t, pad_value=0.0):
+        t = jnp.moveaxis(t, 2, 1).reshape(B * H, S, hd)    # (BH, S, hd)
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=pad_value)
+        return t
+
+    rh, kh, vh = prep(r), prep(k), prep(v)
+    wh = prep(w, pad_value=1.0)   # identity decay on padded steps keeps state
+
+    y, state = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=(B * H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, c: (b % H, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, n_chunks * chunk, hd), r.dtype),
+            jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rh, kh, vh, wh, u)
+    y = y[:, :S].reshape(B, H, S, hd)
+    return jnp.moveaxis(y, 1, 2), state.reshape(B, H, hd, hd)

@@ -1,0 +1,345 @@
+"""Roofline analysis (deliverable g).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+    compute    = HLO_FLOPs / (peak_FLOP/s)          [cost_analysis is
+    memory     = HLO_bytes / HBM_bw                   *per-device* on the
+    collective = collective_bytes / ICI_bw            partitioned module]
+
+collective_bytes is not in cost_analysis: we parse the partitioned HLO text
+and sum the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op (an upper-ish proxy for
+wire bytes per device; ICI transfers the full result for gathers and the
+operand for reductions — we report the max of operand/result per op).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from .mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+# ---------------------------------------------------------------------------
+# Trip-count-aware HLO accounting.
+#
+# XLA's HloCostAnalysis counts a while-loop body ONCE — with scan-over-layers
+# (the whole point of compact lowering) that undercounts flops/bytes by the
+# layer count. The compiled HLO annotates loops with
+# backend_config={"known_trip_count":{"n":...}}, so we walk the call graph
+# (ENTRY -> while bodies x trip count -> fusions/calls) and weight each
+# computation by its execution multiplicity.
+# ---------------------------------------------------------------------------
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_REF = re.compile(r"(?:condition|body|calls|to_apply|branch_computations)="
+                  r"\{?%?([\w.\-]+(?:,\s*%[\w.\-]+)*)\}?")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_TRIVIAL = ("tuple(", "get-tuple-element(", "parameter(", "constant(",
+            "bitcast(", "after-all(", "partition-id(", "iota(")
+
+
+def _first_shape_elems(text):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None, 0
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    n = 1
+    for d in dims:
+        n *= d
+    return dims, n * _DTYPE_BYTES[m.group(1)]
+
+
+def _parse_computations(hlo_text: str):
+    comps, cur, name = {}, None, None
+    for line in hlo_text.splitlines():
+        s = line.rstrip()
+        m = _COMP_HEADER.match(s.strip())
+        if m and s.strip().endswith("{"):
+            name = m.group(2)
+            cur = []
+            comps[name] = {"instrs": cur, "entry": bool(m.group(1))}
+            continue
+        if s.strip() == "}":
+            name, cur = None, None
+            continue
+        if cur is not None:
+            mi = _INSTR.match(s)
+            if mi:
+                cur.append((mi.group(1), mi.group(2)))
+    return comps
+
+
+def _call_edges(rhs):
+    """Yield (callee_name, weight) for one instruction's rhs text."""
+    mt = _TRIP.search(rhs)
+    trip = float(mt.group(1)) if mt else 1.0
+    for kw, factor in (("body", trip), ("condition", trip), ("calls", 1.0),
+                       ("to_apply", 1.0), ("branch_computations", 1.0)):
+        m = re.search(kw + r"=(\{[^}]*\}|%[\w.\-]+)", rhs)
+        if m:
+            for callee in re.findall(r"%([\w.\-]+)", m.group(1)):
+                yield callee, factor
+
+
+def _multipliers(comps):
+    entry = next((n for n, c in comps.items() if c["entry"]), None)
+    if entry is None:
+        return {n: 1.0 for n in comps}
+    edges = {n: [] for n in comps}       # caller -> [(callee, weight)]
+    for name, comp in comps.items():
+        for _, rhs in comp["instrs"]:
+            for callee, w in _call_edges(rhs):
+                if callee in comps:
+                    edges[name].append((callee, w))
+
+    # topological order via DFS from entry (the computation graph is a DAG)
+    topo, seen = [], set()
+
+    def dfs(n):
+        if n in seen:
+            return
+        seen.add(n)
+        for c, _ in edges[n]:
+            dfs(c)
+        topo.append(n)
+
+    import sys
+    old = sys.getrecursionlimit()
+    sys.setrecursionlimit(10000)
+    try:
+        dfs(entry)
+    finally:
+        sys.setrecursionlimit(old)
+
+    mult = {n: 0.0 for n in comps}
+    mult[entry] = 1.0
+    for n in reversed(topo):             # callers before callees
+        for c, w in edges[n]:
+            mult[c] += mult[n] * w
+    return mult
+
+
+def _dot_flops(rhs, symbols):
+    """2 * result_elems * prod(contracting dims of lhs)."""
+    dims, rbytes = _first_shape_elems(rhs)
+    if dims is None:
+        return 0.0
+    relems = 1
+    for d in dims:
+        relems *= d
+    mC = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+    inside = rhs.split("dot(", 1)[1]
+    ops = _OPERAND.findall(inside.split(")", 1)[0])
+    lhs_shape = symbols.get(ops[0]) if ops else None
+    k = 1
+    if mC and lhs_shape:
+        for idx in (int(x) for x in mC.group(1).split(",") if x):
+            if idx < len(lhs_shape):
+                k *= lhs_shape[idx]
+    return 2.0 * relems * k
+
+
+def hlo_accounting(hlo_text: str) -> Dict:
+    """Trip-count-weighted per-device accounting from the partitioned HLO:
+    dot flops, collective bytes (max of operand/result shapes per op), and a
+    fusion-boundary HBM-traffic proxy (operands+result bytes of every
+    non-trivial top-level instruction)."""
+    comps = _parse_computations(hlo_text)
+    mult = _multipliers(comps)
+    # symbol tables: instruction name -> (result dims, result bytes)
+    symbols, sym_bytes = {}, {}
+    for cname, comp in comps.items():
+        for iname, rhs in comp["instrs"]:
+            dims, b = _first_shape_elems(rhs)
+            symbols[iname] = dims
+            sym_bytes[iname] = b
+    flops = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    traffic = 0.0
+    for cname, comp in comps.items():
+        m = mult.get(cname, 1.0)
+        if m == 0.0:
+            continue
+        for iname, rhs in comp["instrs"]:
+            if " dot(" in rhs or rhs.split(" ", 2)[-1].startswith("dot("):
+                flops += m * _dot_flops(rhs, symbols)
+            kind = None
+            for k in _COLLECTIVES:
+                if re.search(rf"\b{k}(-start)?\(", rhs):
+                    kind = k
+                    break
+            if kind:
+                sizes = [b for _, b in [_first_shape_elems(rhs)] if b]
+                inside = rhs.split("(", 1)
+                if len(inside) == 2:
+                    for op in _OPERAND.findall(inside[1].split(")", 1)[0]):
+                        if sym_bytes.get(op):
+                            sizes.append(sym_bytes[op])
+                if sizes:
+                    coll[kind] += m * max(sizes)
+                    counts[kind] += 1
+            if not any(t in rhs for t in _TRIVIAL):
+                # fusion-boundary traffic: result + operand bytes, with
+                # in-place/windowed ops special-cased (a dynamic-update-slice
+                # writes one token into a TB-scale cache: on TPU it is an
+                # aliased in-place write, not a full-buffer copy).
+                _, rb = _first_shape_elems(rhs)
+                inside = rhs.split("(", 1)
+                ops = (_OPERAND.findall(inside[1].split(")", 1)[0])
+                       if len(inside) == 2 else [])
+                if "dynamic-update-slice(" in rhs:
+                    upd = sym_bytes.get(ops[1], 0) if len(ops) > 1 else 0
+                    traffic += m * 2 * upd
+                elif "dynamic-slice(" in rhs:
+                    traffic += m * 2 * rb
+                elif " copy(" in rhs or rhs.startswith("copy("):
+                    pass  # layout copies are elided / aliased on TPU
+                elif "gather(" in rhs and "all-gather(" not in rhs:
+                    traffic += m * 2 * rb
+                else:
+                    traffic += m * (rb + sum(sym_bytes.get(o, 0)
+                                             for o in ops))
+    total_coll = sum(coll.values())
+    return {"flops": flops,
+            "collective_bytes": total_coll,
+            "by_kind": {k: v for k, v in coll.items() if v},
+            "counts": {k: v for k, v in counts.items() if v},
+            "traffic_bytes": traffic}
+
+
+def _shape_bytes(m):
+    dtype, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict:
+    """Sum bytes moved by collectives in a partitioned HLO module.
+    For each collective instruction line, takes max(result, operands) shape
+    bytes (all shapes on the line) as the per-device wire-bytes proxy."""
+    by_kind = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        kind = None
+        rhs = stripped.split("=", 1)[1]
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done" in rhs:
+            continue  # counted at -start
+        sizes = [_shape_bytes(m) for m in _SHAPE_RE.finditer(stripped)]
+        if not sizes:
+            continue
+        by_kind[kind] += float(max(sizes))
+        counts[kind] += 1
+    total = sum(by_kind.values())
+    return {"total_bytes": total,
+            "by_kind": {k: v for k, v in by_kind.items() if v},
+            "counts": {k: v for k, v in counts.items() if v}}
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_per_device: float, n_chips: int) -> Dict:
+    """cost_analysis numbers are already per-device on the partitioned
+    module, so the chip count enters only through the partitioning itself."""
+    compute_s = flops_per_device / PEAK_FLOPS_BF16
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    return {**terms, "dominant": dominant.replace("_s", ""),
+            "n_chips": n_chips}
+
+
+def analytic_bytes(cfg, shape, n_params: int, n_clients: int = 1,
+                   client_mode: str = "physical", dp: int = 16,
+                   tp: int = 16, n_chips: int = 256) -> float:
+    """First-order per-device HBM traffic model (the roofline memory term).
+
+    The HLO fusion-boundary proxy overcharges loop carries (VMEM-resident on
+    TPU: the WKV/Mamba state, flash-attention online-softmax state), so the
+    memory term uses structural napkin math instead:
+
+      weights/pass/device = P_bytes / TP   (2-D sharded, fsdp-gathered slab)
+      train  = 3 passes x weights x (n sequential clients if logical)
+               + FedMM state R/W + activation traffic (c ~= 30 tensor
+                 touches/layer incl. backward)
+      prefill = weights + activations (c ~= 12) + cache write
+      decode  = weights (all experts touched at B*topk >= E) + cache read
+    """
+    P_b = n_params * 2.0
+    d, L = cfg.d_model, cfg.n_layers
+    GB, S = shape.global_batch, shape.seq_len
+    w_pass = P_b / tp
+
+    att_layers = L
+    if cfg.attn_every:
+        att_layers = L // cfg.attn_every
+    win = cfg.window or S
+    cache_b = 0.0
+    if cfg.n_heads:
+        glob = L // cfg.global_every if cfg.global_every else att_layers
+        loc = (L - glob) if cfg.global_every else 0
+        kv_bytes = 1 if cfg.kv_dtype == "int8" else 2
+        cache_b = (glob * S + loc * min(win, S)) * GB \
+            * cfg.n_kv_heads * cfg.hd * 2 * kv_bytes
+
+    if shape.kind == "train":
+        tokens_dev = GB * S / dp
+        acts = tokens_dev * d * 2 * L * 30
+        if client_mode == "logical":
+            w = 3 * w_pass * n_clients
+            fed = (4 + 3 * n_clients) * P_b / n_chips
+        else:
+            w = 3 * w_pass
+            fed = 8 * P_b / tp
+        return w + fed + acts
+    if shape.kind == "prefill":
+        tokens_dev = GB * S / dp
+        return w_pass + tokens_dev * d * 2 * L * 12 + cache_b / n_chips
+    # decode: one token per sequence
+    return P_b / tp + cache_b / n_chips + GB / dp * d * 2 * L * 12
+
+
+def model_flops_estimate(cfg, shape, n_params: int) -> float:
+    """MODEL_FLOPS = 6 N D (dense) or 6 N_active D (MoE) for training;
+    2 N D for a forward-only step (prefill), 2 N_active per decoded token."""
+    if cfg.n_experts:
+        # active params: replace the E-expert FFN stack by top_k experts
+        shapes_factor = cfg.top_k / cfg.n_experts
+        # rough split: expert params dominate MoE configs
+        expert_params = (cfg.n_layers // cfg.moe_every) * cfg.n_experts \
+            * 3 * cfg.d_model * cfg.d_ff
+        n_active = n_params - expert_params * (1.0 - shapes_factor)
+    else:
+        n_active = n_params
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token/sequence

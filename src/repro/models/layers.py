@@ -1,0 +1,350 @@
+"""Transformer building blocks: norms, RoPE, GQA attention (full / sliding /
+cross), SwiGLU MLP, embeddings. Pure functions over param dicts; bf16-friendly
+(norm + softmax statistics in f32)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import shard
+
+NEG_INF = -1e9  # safe for bf16/f32 masking
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, dtype):
+    scale = 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+def rmsnorm(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta=1e4):
+    """x: (..., S, H, hd) even hd; positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x1 * sin + x2 * cos
+    return jnp.stack([xr1, xr2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg, dtype):
+    hd = cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(k2, cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(k3, cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(k4, cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+
+
+def _split_heads(x, n_heads, hd):
+    return x.reshape(x.shape[:-1] + (n_heads, hd))
+
+
+def gqa_scores_mask(q_pos, k_pos, window: int = 0, causal: bool = True):
+    """(Sq, Sk) boolean mask: True = attend."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def gqa_attention(params, cfg, x, kv_x=None, mask=None, positions=None,
+                  kv_positions=None, use_rope=True):
+    """General GQA attention. x: (B, Sq, d); kv_x for cross-attention.
+    mask: (Sq, Sk) or None (no masking). Returns (B, Sq, d)."""
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    kv_in = x if kv_x is None else kv_x
+    q = _split_heads(x @ params["wq"], H, hd)
+    k = _split_heads(kv_in @ params["wk"], KV, hd)
+    v = _split_heads(kv_in @ params["wv"], KV, hd)
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(x.shape[1])[None]
+        if kv_positions is None:
+            kv_positions = jnp.arange(kv_in.shape[1])[None]
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    out = gqa_core(q, k, v, mask)
+    out = out.reshape(out.shape[:2] + (H * hd,))
+    return out @ params["wo"]
+
+
+def gqa_core(q, k, v, mask=None, kv_valid=None):
+    """q: (B, Sq, H, hd), k/v: (B, Sk, KV, hd). GQA via head grouping.
+    Softmax statistics in f32. ``kv_valid``: optional (Sk,) bool marking
+    filled cache slots (decode with a partially filled cache).
+    Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, Sq, KV, G, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    if kv_valid is not None:
+        logits = jnp.where(kv_valid[None, None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def kv_quantize(t):
+    """Per-(token, head) int8 quantization of K/V: t (B, S, KV, hd) ->
+    (codes int8, scale bf16 (B, S, KV, 1)). Production KV-cache compression:
+    halves cache HBM footprint and read bytes."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.round(t.astype(jnp.float32) / safe * 127.0).astype(jnp.int8)
+    return q, (safe / 127.0).astype(jnp.bfloat16)
+
+
+def kv_dequantize(q, scale, dtype):
+    """On TPU this multiply fuses into the attention kernel's VMEM load
+    (kernels/flash_attention.py); under XLA it materializes per layer."""
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def decode_attention(params, cfg, x, cache, pos, use_rope=True):
+    """One-token decode: x (B, 1, d); cache {"k","v"[,"k_scale","v_scale"]}
+    with k/v (B, S, KV, hd) (int8 codes + scales when cfg.kv_dtype=="int8").
+    The new token's K/V are written into the cache as a ring buffer at
+    ``pos % S`` and the query attends over the full (updated) cache. The
+    cache is sequence-sharded over the 'model' mesh axis (DESIGN.md §5):
+    GSPMD partitions the contraction + softmax with psum collectives (the
+    TPU analogue of split-K decode attention).
+    Returns (out (B, 1, d), new_cache)."""
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    int8 = getattr(cfg, "kv_dtype", "") == "int8"
+    S = cache["k"].shape[1]
+    q = _split_heads(x @ params["wq"], H, hd)
+    k_new = _split_heads(x @ params["wk"], KV, hd)
+    v_new = _split_heads(x @ params["wv"], KV, hd)
+    if use_rope:
+        q = rope(q, jnp.full((1, 1), pos), cfg.rope_theta)
+        k_new = rope(k_new, jnp.full((1, 1), pos), cfg.rope_theta)
+    slot = (pos % S).astype(jnp.int32)
+
+    def write(buf, val):
+        buf = jax.lax.dynamic_update_slice(
+            buf, val.astype(buf.dtype), (0, slot, 0, 0))
+        return shard(buf, "batch", "cache_seq", None, None)
+
+    new_cache = dict(cache)
+    if int8:
+        kq, ks = kv_quantize(k_new)
+        vq, vs = kv_quantize(v_new)
+        new_cache["k"] = write(cache["k"], kq)
+        new_cache["v"] = write(cache["v"], vq)
+        new_cache["k_scale"] = write(cache["k_scale"], ks)
+        new_cache["v_scale"] = write(cache["v_scale"], vs)
+        k_att = kv_dequantize(new_cache["k"], new_cache["k_scale"], x.dtype)
+        v_att = kv_dequantize(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        new_cache["k"] = k_att = write(cache["k"], k_new)
+        new_cache["v"] = v_att = write(cache["v"], v_new)
+    # slot i holds position i (mod S); every slot with index <= pos is
+    # filled — once the ring wraps (pos >= S) everything is valid.
+    kv_valid = jnp.arange(S) <= pos
+    out = gqa_core(q, k_att, v_att, mask=None, kv_valid=kv_valid)
+    out = out.reshape(out.shape[:2] + (H * hd,))
+    return out @ params["wo"], new_cache
+
+
+def blocked_attention(q, k, v, *, causal=True, window=0,
+                      q_block=256, kv_block=512):
+    """Memory-bounded GQA attention with online softmax (flash-style, pure
+    jnp — this is also the oracle mirrored by kernels/flash_attention.py).
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). Never materializes (Sq, Sk).
+    lax.map over query blocks (sequential), lax.scan over KV blocks with the
+    (m, l, acc) running-softmax carry.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    QB = min(q_block, Sq)
+    KB = min(kv_block, Sk)
+    # pad to multiples
+    nq = -(-Sq // QB)
+    nk = -(-Sk // KB)
+    q_pad, k_pad = nq * QB - Sq, nk * KB - Sk
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    qr = q.reshape(B, nq, QB, KV, G, hd)
+    scale = 1.0 / jnp.sqrt(hd)
+
+    def one_q_block(qi):
+        qblk = qr[:, qi]                                     # (B, QB, KV, G, hd)
+        q_pos = qi * QB + jnp.arange(QB)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_slice(k, (0, ki * KB, 0, 0), (B, KB, KV, hd))
+            vblk = jax.lax.dynamic_slice(v, (0, ki * KB, 0, 0), (B, KB, KV, hd))
+            k_pos = ki * KB + jnp.arange(KB)
+            logits = jnp.einsum("bqkgh,bskh->bkgqs", qblk, kblk)
+            logits = logits.astype(jnp.float32) * scale      # (B, KV, G, QB, KB)
+            mask = k_pos[None, :] < Sk                       # padding
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vblk.dtype), vblk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, QB), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, QB), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, QB, hd), v.dtype)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return jnp.moveaxis(out, 3, 1)                       # (B, QB, KV, G, hd)
+
+    outs = jax.lax.map(one_q_block, jnp.arange(nq))          # (nq, B, QB, KV, G, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * QB, H, hd)
+    return out[:, :Sq]
+
+
+def full_seq_attention(params, cfg, x, *, causal=True, window=0, kv_x=None,
+                       use_rope=True, positions=None):
+    """Projection + RoPE + blocked attention + output projection.
+    x: (B, S, d). kv_x (cross-attention) implies non-causal, no RoPE on kv."""
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    kv_in = x if kv_x is None else kv_x
+    q = _split_heads(x @ params["wq"], H, hd)
+    k = _split_heads(kv_in @ params["wk"], KV, hd)
+    v = _split_heads(kv_in @ params["wv"], KV, hd)
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(x.shape[1])[None]
+        q = rope(q, positions, cfg.rope_theta)
+        if kv_x is None:
+            k = rope(k, positions, cfg.rope_theta)
+        else:
+            k = rope(k, jnp.arange(kv_in.shape[1])[None], cfg.rope_theta)
+    out = blocked_attention(q, k, v, causal=causal, window=window)
+    out = out.reshape(out.shape[:2] + (H * hd,))
+    return out @ params["wo"], k, v
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d, ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, ff, dtype),
+        "w_in": dense_init(k2, d, ff, dtype),
+        "w_out": dense_init(k3, ff, d, dtype),
+    }
+
+
+def mlp(params, x):
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_in"])
+    h = shard(h, "batch", None, "ff")
+    return h @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head (vocab padded to a multiple of 128; DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    V = cfg.padded_vocab
+    return {
+        "embed": (jax.random.normal(k1, (V, cfg.d_model)) * 0.02).astype(dtype),
+        "lm_head": (jax.random.normal(k2, (V, cfg.d_model)) * 0.02).astype(dtype),
+    }
+
+
+def embed(params, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def logits_fn(params, x, cfg):
+    """x: (B, S, d) -> (B, S, V_padded); padded tail masked to NEG_INF."""
+    logits = x @ params["lm_head"].T
+    pad = cfg.padded_vocab - cfg.vocab
+    if pad:
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(mask, logits, NEG_INF)
+    return logits
+
+
+def chunked_softmax_xent(params, x, labels, cfg, chunk: int = 128):
+    """Cross-entropy without materializing (B, S, V): scan over sequence
+    chunks (DESIGN.md §5 — a 262k-vocab * 1M-token logits tensor would be
+    ~0.5 TB/device otherwise). x: (B, S, d); labels: (B, S) int32."""
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    rem = S - n_chunks * chunk
+    head = params["lm_head"]
+    vmask = (jnp.arange(cfg.padded_vocab) < cfg.vocab)
+
+    def chunk_loss(xc, yc):
+        lg = (xc @ head.T).astype(jnp.float32)
+        lg = jnp.where(vmask, lg, NEG_INF)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tgt = jnp.take_along_axis(lg, yc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - tgt)
+
+    if n_chunks > 0:
+        xs = x[:, :n_chunks * chunk].reshape(B, n_chunks, chunk, d).swapaxes(0, 1)
+        ys = labels[:, :n_chunks * chunk].reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+        def body(acc, xy):
+            xc, yc = xy
+            return acc + chunk_loss(xc, yc), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ys))
+    else:
+        total = jnp.zeros((), jnp.float32)
+    if rem:
+        total = total + chunk_loss(x[:, n_chunks * chunk:], labels[:, n_chunks * chunk:])
+    return total / (B * S)

@@ -1,0 +1,137 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892): attention-free token mixing with
+data-dependent per-channel decay, plus the RWKV channel-mix FFN.
+
+Simplified-but-faithful structure:
+  time-mix:  token-shift interpolation; projections r,k,v,g; data-dependent
+             decay w_t = exp(-exp(w_proj(x_t) + w_bias)); per-head linear
+             "WKV" recurrence with state S in R^{hd x hd}:
+                 y_t = r_t . (S_t + diag(u) k_t^T v_t)
+                 S_{t+1} = diag(w_t) S_t + k_t^T v_t
+  channel-mix: token-shift + squared-relu FFN (d -> d_ff -> d).
+
+The recurrence is a jax.lax.scan (the Pallas kernel ``kernels/rwkv_scan.py``
+implements the same recurrence with VMEM-tiled state; ``ref.py`` mirrors the
+function below).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def rwkv_block_init(key, cfg, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    ks = jax.random.split(key, 10)
+    return {
+        "tm_norm": rmsnorm_init(d, dtype),
+        "cm_norm": rmsnorm_init(d, dtype),
+        "mix_r": jnp.full((d,), 0.5, dtype), "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype), "mix_w": jnp.full((d,), 0.5, dtype),
+        "mix_c": jnp.full((d,), 0.5, dtype),
+        "wr": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wg": dense_init(ks[3], d, d, dtype),
+        "ww": dense_init(ks[4], d, d, dtype),   # data-dependent decay proj
+        "w_bias": jnp.full((d,), -2.0, dtype),
+        "u": (jax.random.normal(ks[5], (H, hd)) * 0.1).astype(dtype),
+        "wo": dense_init(ks[6], d, d, dtype),
+        "w_in": dense_init(ks[7], d, ff, dtype),
+        "w_out": dense_init(ks[8], ff, d, dtype),
+    }
+
+
+def _token_shift(x, prev):
+    """x: (B, S, d); prev: (B, d) last token of the previous chunk."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def wkv_scan(r, k, v, w, u):
+    """The WKV6 recurrence. r,k,v,w: (B, S, H, hd); u: (H, hd).
+    Returns y: (B, S, H, hd). State: (B, H, hd, hd) fp32."""
+    B, S, H, hd = r.shape
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                      # (B, H, hd)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B, H, hd, hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, :, :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, y
+
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    final_state, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), final_state
+
+
+def wkv_step(state, r, k, v, w, u):
+    """Single-token decode step. r,k,v,w: (B, H, hd). state: (B, H, hd, hd)."""
+    kv = k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, :, :, None] * kv)
+    state = w[..., :, None] * state + kv
+    return state, y
+
+
+def time_mix(params, cfg, x, shift_state, wkv_state=None, single_step=False):
+    """x: (B, S, d) (S = 1 when single_step). Returns (y, new_shift, new_wkv)."""
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    xs = _token_shift(x, shift_state) if not single_step else shift_state[:, None]
+
+    def mixed(mix):
+        return x * mix + xs * (1.0 - mix)
+
+    r = (mixed(params["mix_r"]) @ params["wr"]).reshape(B, S, H, hd)
+    k = (mixed(params["mix_k"]) @ params["wk"]).reshape(B, S, H, hd)
+    v = (mixed(params["mix_v"]) @ params["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(mixed(params["mix_v"]) @ params["wg"])
+    w_raw = mixed(params["mix_w"]) @ params["ww"] + params["w_bias"]
+    w = jnp.exp(-jnp.exp(w_raw.astype(jnp.float32))).reshape(B, S, H, hd)
+
+    if single_step:
+        assert wkv_state is not None
+        new_state, y = wkv_step(wkv_state,
+                                r[:, 0].astype(jnp.float32),
+                                k[:, 0].astype(jnp.float32),
+                                v[:, 0].astype(jnp.float32), w[:, 0],
+                                params["u"].astype(jnp.float32))
+        y = y[:, None].astype(x.dtype)
+    else:
+        y, new_state = wkv_scan(r, k, v, w.astype(r.dtype), params["u"])
+    y = (y.reshape(B, S, d) * g) @ params["wo"]
+    return y, x[:, -1], new_state
+
+
+def channel_mix(params, cfg, x, shift_state, single_step=False):
+    xs = _token_shift(x, shift_state) if not single_step else shift_state[:, None]
+    xk = x * params["mix_c"] + xs * (1.0 - params["mix_c"])
+    h = jnp.square(jax.nn.relu(xk @ params["w_in"]))
+    return h @ params["w_out"], x[:, -1]
+
+
+def rwkv_block(params, cfg, x, state=None, single_step=False):
+    """Full RWKV6 block. state = dict(shift_tm, shift_cm, wkv) or None.
+    Returns (x_out, new_state)."""
+    B = x.shape[0]
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    if state is None:
+        state = {
+            "shift_tm": jnp.zeros((B, d), x.dtype),
+            "shift_cm": jnp.zeros((B, d), x.dtype),
+            "wkv": jnp.zeros((B, H, hd, hd), jnp.float32),
+        }
+    y, new_tm, new_wkv = time_mix(params, cfg, rmsnorm(params["tm_norm"], x),
+                                  state["shift_tm"], state["wkv"], single_step)
+    x = x + y
+    y, new_cm = channel_mix(params, cfg, rmsnorm(params["cm_norm"], x),
+                            state["shift_cm"], single_step)
+    x = x + y
+    new_state = {"shift_tm": new_tm, "shift_cm": new_cm, "wkv": new_wkv}
+    return x, new_state

@@ -1,0 +1,65 @@
+"""Pure-JAX optimizers (pytree-generic): SGD, momentum, Adam, AdamW.
+
+These serve as (a) the server optimizer in the FedAdam baseline (Reddi et al.
+2021) the paper compares against in Section 7.3, and (b) general substrate for
+the example training drivers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    m: object
+    v: object
+    count: jnp.ndarray
+
+
+def adam_init(params) -> AdamState:
+    z = jax.tree.map(jnp.zeros_like, params)
+    return AdamState(m=z, v=jax.tree.map(jnp.zeros_like, params),
+                     count=jnp.asarray(0, jnp.int32))
+
+
+def adam_update(params, grads, state: AdamState, lr,
+                b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
+    count = state.count + 1
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state.v, grads)
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, mm, vv):
+        step = lr * (mm / c1) / (jnp.sqrt(vv / c2) + eps)
+        if weight_decay:
+            step = step + lr * weight_decay * p
+        return p - step
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamState(m=m, v=v, count=count)
+
+
+class SGDState(NamedTuple):
+    momentum: object
+
+
+def sgd_init(params) -> SGDState:
+    return SGDState(momentum=jax.tree.map(jnp.zeros_like, params))
+
+
+def sgd_update(params, grads, state: SGDState, lr, beta=0.0):
+    mom = jax.tree.map(lambda m, g: beta * m + g, state.momentum, grads)
+    new_params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+    return new_params, SGDState(momentum=mom)
+
+
+def cosine_schedule(base_lr, warmup, total):
+    def lr(step):
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

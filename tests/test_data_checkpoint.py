@@ -1,0 +1,99 @@
+"""Data pipeline + checkpoint substrate tests (incl. hypothesis properties)."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.data.movielens import movielens_like
+from repro.data.synthetic import (balanced_kmeans_split, client_minibatch_fn,
+                                  dictlearn_data, gmm_data, homogeneous_split,
+                                  iid_split, token_stream)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestSplits:
+    def test_homogeneous_copies(self):
+        z = jnp.arange(20.0).reshape(10, 2)
+        out = homogeneous_split(z, 3)
+        assert out.shape == (3, 10, 2)
+        assert bool(jnp.all(out[0] == out[2]))
+
+    def test_iid_split_partition(self):
+        z = jnp.arange(40.0).reshape(20, 2)
+        out = iid_split(KEY, z, 4)
+        assert out.shape == (4, 5, 2)
+        flat = np.sort(np.asarray(out[..., 0]).reshape(-1))
+        assert len(np.unique(flat)) == 20  # a true partition, no repeats
+
+    def test_balanced_kmeans_equal_sizes_and_heterogeneity(self):
+        z, _ = dictlearn_data(KEY, 300, 10, 3)
+        out = balanced_kmeans_split(KEY, z, 5, n_iters=5)
+        assert out.shape == (5, 60, 10)
+        # heterogeneous: between-client mean distances exceed within-client
+        cmeans = jnp.mean(out, axis=1)
+        between = jnp.mean(jnp.linalg.norm(
+            cmeans[:, None] - cmeans[None], axis=-1))
+        assert float(between) > 0.1
+
+    def test_minibatch_fn_shapes(self):
+        data = jnp.arange(120.0).reshape(4, 10, 3)
+        fn = client_minibatch_fn(data, batch_size=6)
+        b = fn(0, KEY)
+        assert b.shape == (4, 6, 3)
+
+
+class TestGenerators:
+    def test_dictlearn_rank(self):
+        z, theta = dictlearn_data(KEY, 500, 20, 5)
+        # Z lives in the span of theta*: rank <= 5
+        s = jnp.linalg.svd(z, compute_uv=False)
+        assert float(s[5] / s[0]) < 1e-4
+
+    def test_gmm_component_means(self):
+        means = jnp.array([[-10.0, 0.0], [10.0, 0.0]])
+        covs = jnp.stack([jnp.eye(2)] * 2)
+        z = gmm_data(KEY, 4000, means, covs, jnp.array([0.5, 0.5]))
+        assert abs(float(jnp.mean(z[:, 0]))) < 1.0  # symmetric components
+
+    def test_token_stream_heterogeneity(self):
+        toks = token_stream(KEY, 4, 4096, 1000)
+        assert toks.shape == (4, 4096)
+        # different clients concentrate on different vocab bands
+        m0, m3 = float(jnp.median(toks[0])), float(jnp.median(toks[3]))
+        assert m0 != m3
+
+    def test_movielens_like_geometry(self):
+        r = movielens_like(KEY, n_users=100, n_movies=50, rank=8)
+        assert r.shape == (100, 50)
+        obs = r[r > 0]
+        assert 0.5 <= float(obs.min()) and float(obs.max()) <= 5.0
+
+
+class TestCheckpoint:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=1, max_value=5),
+           st.integers(min_value=1, max_value=7))
+    def test_roundtrip(self, a, b):
+        tree = {"w": jnp.arange(float(a * b)).reshape(a, b),
+                "nested": {"b": jnp.ones((a,)) * b},
+                "scalar": jnp.asarray(3)}
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "ck.npz")
+            ckpt.save(path, tree)
+            out = ckpt.restore(path, jax.tree.map(jnp.zeros_like, tree))
+        assert jax.tree.all(jax.tree.map(
+            lambda x, y: bool(jnp.all(x == y)), tree, out))
+
+    def test_shape_mismatch_raises(self):
+        tree = {"w": jnp.ones((3, 3))}
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "ck.npz")
+            ckpt.save(path, tree)
+            with pytest.raises(ValueError):
+                ckpt.restore(path, {"w": jnp.ones((2, 2))})

@@ -1,0 +1,140 @@
+"""FedMM-at-LM-scale trainer (repro.fed.trainer): semantics checks on CPU
+with reduced architectures."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.fed import trainer as FT
+from repro.models.model import build_model, make_batch
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch="phi3-medium-14b", n_clients=2, **kw):
+    cfg = C.get(arch).reduced()
+    model = build_model(cfg)
+    fcfg = FT.FedLMConfig(n_clients=n_clients, rho=0.05, weight_decay=0.1,
+                          **kw)
+    state = FT.init_state(model, KEY, fcfg)
+    step = jax.jit(FT.make_train_step(model, fcfg))
+    b = make_batch(KEY, cfg, batch_size=n_clients * 2, seq_len=16)
+    batch = {k: v.reshape((n_clients, 2) + v.shape[1:]) for k, v in b.items()}
+    return model, fcfg, state, step, batch
+
+
+def test_loss_decreases_over_rounds():
+    model, fcfg, state, step, batch = _setup(p=1.0, alpha=0.0, quant_bits=0)
+    losses = []
+    for t in range(12):
+        state, m = step(state, batch, jax.random.PRNGKey(t), 0.7)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1
+
+
+def test_equals_prox_sgd_when_unfederated():
+    """n=1 client, p=1, no quant, alpha=0, gamma=1: the FedMM-LM round is
+    exactly one proximal-SGD step theta <- T(theta - rho grad) in the mirror
+    domain (Section 2.3 correspondence)."""
+    model, fcfg, state, step, batch = _setup(n_clients=1, p=1.0, alpha=0.0,
+                                             quant_bits=0)
+    theta0 = FT.T_map(state.s_hat, fcfg)
+    g = jax.grad(lambda p: model.loss_fn(p, jax.tree.map(lambda x: x[0], batch)))(theta0)
+    s_expect = jax.tree.map(lambda th, gg: th - fcfg.rho * gg, theta0, g)
+
+    new_state, _ = step(state, batch, KEY, 1.0)
+    for a, b in zip(jax.tree.leaves(new_state.s_hat), jax.tree.leaves(s_expect)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_quantization_preserves_convergence():
+    model, fcfg, state, step, batch = _setup(p=1.0, alpha=0.0, quant_bits=8)
+    losses = []
+    for t in range(12):
+        state, m = step(state, batch, jax.random.PRNGKey(t), 0.5)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.05
+    assert np.isfinite(losses).all()
+
+
+def test_partial_participation_masks_clients():
+    model, fcfg, state, step, batch = _setup(n_clients=4, p=0.5, alpha=0.1,
+                                             quant_bits=0)
+    actives = []
+    for t in range(10):
+        state, m = step(state, batch, jax.random.PRNGKey(t), 0.3)
+        actives.append(float(m["n_active"]))
+    assert 0.0 <= min(actives) and max(actives) <= 4.0
+    assert 0.2 < np.mean(actives) / 4.0 < 0.85  # ~p on average (40 draws)
+
+
+def test_server_cv_equals_mean_of_client_cvs():
+    """Proposition 5 at LM scale."""
+    model, fcfg, state, step, batch = _setup(n_clients=3, p=0.5, alpha=0.3,
+                                             quant_bits=8)
+    for t in range(5):
+        state, _ = step(state, batch, jax.random.PRNGKey(t), 0.3)
+    for v, vi in zip(jax.tree.leaves(state.v), jax.tree.leaves(state.v_i)):
+        np.testing.assert_allclose(np.asarray(v, np.float32),
+                                   np.asarray(jnp.mean(vi, axis=0), np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_choose_client_layout():
+    assert FT.choose_client_layout(14e9, multi_pod=True) == (32, "physical")
+    assert FT.choose_client_layout(14e9, multi_pod=False) == (16, "physical")
+    assert FT.choose_client_layout(33e9, multi_pod=True) == (4, "logical")
+    assert FT.choose_client_layout(400e9, multi_pod=False) == (2, "logical")
+
+
+def test_no_cv_mode_trains_and_drops_state():
+    """use_cv=False (Theorem 1's alpha=0 regime): no V/V_i state, loss
+    still decreases under full participation."""
+    cfg = C.get("phi3-medium-14b").reduced()
+    from repro.models.model import build_model
+    model = build_model(cfg)
+    fcfg = FT.FedLMConfig(n_clients=2, rho=0.05, use_cv=False, alpha=0.0)
+    state = FT.init_state(model, KEY, fcfg)
+    assert jax.tree.leaves(state.v) == [] and jax.tree.leaves(state.v_i) == []
+    step = jax.jit(FT.make_train_step(model, fcfg))
+    b = make_batch(KEY, cfg, 4, 16)
+    batch = {k: v.reshape((2, 2) + v.shape[1:]) for k, v in b.items()}
+    losses = []
+    for t in range(8):
+        state, m = step(state, batch, jax.random.PRNGKey(t), 0.7)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_int8_kv_cache_decode_close_to_bf16():
+    """Quantized KV cache (perf lever): decode logits within quantization
+    noise of the full-precision cache."""
+    import dataclasses
+    import numpy as np
+    from repro.models.model import build_model
+    cfg = C.get("phi3-medium-14b").reduced()
+    m = build_model(cfg)
+    m8 = build_model(dataclasses.replace(cfg, kv_dtype="int8"))
+    S = 32
+    params = m.init(KEY)
+    batch = make_batch(KEY, cfg, 2, S + 1)
+    bs = {k: v[:, :S] for k, v in batch.items()}
+    _, c1 = m.prefill(params, bs, cache_len=S + 8)
+    l1, _ = m.decode(params, c1, batch["tokens"][:, S:S + 1], jnp.asarray(S))
+    _, c2 = m8.prefill(params, bs, cache_len=S + 8)
+    l2, _ = m8.decode(params, c2, batch["tokens"][:, S:S + 1], jnp.asarray(S))
+    d = np.abs(np.asarray(l1[..., :cfg.vocab]) - np.asarray(l2[..., :cfg.vocab]))
+    assert float(d.max()) < 0.05
+    # and the int8 cache really is int8
+    assert c2[0]["k"].dtype == jnp.int8
+
+
+def test_t_map_is_l2_prox():
+    fcfg = FT.FedLMConfig(n_clients=1, rho=0.1, weight_decay=0.5)
+    s = {"w": jnp.ones((3,))}
+    out = FT.T_map(s, fcfg)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.ones(3) / (1 + 0.1 * 0.5), rtol=1e-6)

@@ -1,0 +1,182 @@
+"""FedMM (Algorithm 2) behaviour: Remark 1, reduction to centralized,
+heterogeneity robustness with control variates, Theorem-1 regime checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as C
+from repro.core import fedmm, naive, sassmm
+from repro.core.quadratic import quadratic_for_objective
+from repro.core.surrogate import Surrogate, tree_sub, tree_sq_norm
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Remark 1: the toy problem where Theta-aggregation has the WRONG fixed point
+#   l(Z, theta) = Z theta + 1/theta on theta > 0;
+#   phi = -theta, psi = 1/theta, Sbar(Z, .) = Z, T(s) = 1/sqrt(s).
+# ---------------------------------------------------------------------------
+
+def _remark1_surrogate():
+    return Surrogate(
+        s_bar=lambda batch, tau: jnp.mean(batch),
+        T=lambda s: 1.0 / jnp.sqrt(s),
+        project=lambda s: jnp.maximum(s, 1e-8),
+    )
+
+
+def test_remark1_s_space_fixed_point_is_optimal():
+    sur = _remark1_surrogate()
+    mean_zs = jnp.array([1.0, 4.0, 9.0, 16.0])          # heterogeneous E_pi_i[Z]
+    mu = jnp.full((4,), 0.25)
+    theta_star = 1.0 / jnp.sqrt(jnp.sum(mu * mean_zs))  # argmin of the fed objective
+
+    # S-space aggregation (eq. 22): constant sequence with mirror theta*
+    s_agg = jnp.sum(mu * mean_zs)
+    assert jnp.allclose(sur.T(s_agg), theta_star)
+
+    # Theta-space aggregation (eq. 21): fixed point != theta*
+    theta_agg = jnp.sum(mu / jnp.sqrt(mean_zs))
+    assert not jnp.allclose(theta_agg, theta_star, atol=1e-3)
+    # and it is strictly worse on the federated objective
+    def W(th):
+        return jnp.sum(mu * mean_zs) * th + 1.0 / th
+    assert float(W(theta_agg)) > float(W(theta_star)) + 1e-3
+
+
+def test_remark1_fedmm_converges_to_optimum():
+    """Run actual FedMM on the Remark-1 problem with stochastic oracles."""
+    sur = _remark1_surrogate()
+    mean_zs = jnp.array([1.0, 4.0, 9.0, 16.0])
+    cfg = fedmm.FedMMConfig(n_clients=4, p=1.0, alpha=0.0)
+
+    def client_batches(t, key):
+        eps = jax.random.normal(key, (4, 16)) * 0.1
+        return mean_zs[:, None] + eps
+
+    state, _ = fedmm.run(sur, jnp.asarray(5.0), client_batches,
+                         lambda t: 0.5 / jnp.sqrt(t), KEY, cfg, 300)
+    theta_star = 1.0 / jnp.sqrt(jnp.mean(mean_zs))
+    assert abs(float(sur.T(state.s_hat)) - float(theta_star)) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Reduction to the centralized algorithm
+# ---------------------------------------------------------------------------
+
+def _quad_fed_problem(n_clients=4, het=3.0):
+    ks = jax.random.split(KEY, n_clients)
+    Xs = jnp.stack([jax.random.normal(k, (64, 6)) for k in ks])
+    w_i = jnp.stack([jnp.linspace(-1, 1, 6) + het * i for i in range(n_clients)])
+    ys = jnp.einsum("nbp,np->nb", Xs, w_i)
+
+    def loss(batch, theta):
+        xb, yb = batch
+        return 0.5 * jnp.mean((xb @ theta - yb) ** 2)
+
+    Xall, yall = Xs.reshape(-1, 6), ys.reshape(-1)
+    w_opt = jnp.linalg.lstsq(Xall, yall)[0]
+    return (Xs, ys), loss, w_opt
+
+
+def test_full_participation_no_compression_equals_centralized():
+    """p=1, omega=0, full local batches: FedMM round == SA-SSMM step on the
+    mixture distribution (the paper's 'reduces exactly to centralized')."""
+    (Xs, ys), loss, _ = _quad_fed_problem(het=2.0)
+    sur = quadratic_for_objective(loss, rho=0.05)
+    cfg = fedmm.FedMMConfig(n_clients=4, p=1.0, alpha=0.0)
+    s0 = jnp.zeros(6)
+
+    fed_state = fedmm.init(sur, s0, cfg)
+    cen_state = sassmm.init(sur, s0)
+    for t in range(5):
+        fed_state, _ = fedmm.step(sur, fed_state, (Xs, ys), 0.5,
+                                  jax.random.PRNGKey(t), cfg)
+        # centralized oracle = uniform mixture over the union of client data
+        cen_state, _ = sassmm.step(
+            sur, cen_state, (Xs.reshape(-1, 6), ys.reshape(-1)), 0.5)
+        np.testing.assert_allclose(np.asarray(fed_state.s_hat),
+                                   np.asarray(cen_state.s_hat), rtol=1e-4, atol=1e-5)
+
+
+def test_heterogeneous_convergence_with_pp_quant_cv():
+    (Xs, ys), loss, w_opt = _quad_fed_problem(het=3.0)
+    sur = quadratic_for_objective(loss, rho=0.05)
+    cfg = fedmm.FedMMConfig(n_clients=4, p=0.5, alpha=0.1,
+                            compressor=C.block_quant(8, 64))
+    state, hist = fedmm.run(sur, jnp.zeros(6), lambda t, k: (Xs, ys),
+                            lambda t: 0.5, KEY, cfg, 500)
+    assert float(jnp.linalg.norm(sur.T(state.s_hat) - w_opt)) < 0.05
+    # e_s decreased by orders of magnitude
+    assert hist[-1]["e_s"] < hist[0]["e_s"] * 1e-2
+
+
+def test_control_variates_beat_no_cv_under_pp():
+    """Figure-2 phenomenon: under heterogeneity + partial participation,
+    alpha > 0 yields a much smaller stationarity residual than alpha = 0
+    (exact local expectations to isolate PP noise, as in Section 6)."""
+    (Xs, ys), loss, w_opt = _quad_fed_problem(het=5.0)
+    sur = quadratic_for_objective(loss, rho=0.05)
+
+    def run(alpha):
+        cfg = fedmm.FedMMConfig(n_clients=4, p=0.5, alpha=alpha)
+        state, hist = fedmm.run(sur, jnp.zeros(6), lambda t, k: (Xs, ys),
+                                lambda t: 0.3, jax.random.PRNGKey(7), cfg, 600)
+        tail = np.mean([h["e_s"] for h in hist[-50:]])
+        return float(jnp.linalg.norm(sur.T(state.s_hat) - w_opt)), tail
+
+    err_cv, tail_cv = run(alpha=0.2)
+    err_nocv, tail_nocv = run(alpha=0.0)
+    assert tail_cv < tail_nocv * 0.5
+    assert err_cv < err_nocv
+
+
+def test_cv_warm_start_removes_initial_heterogeneity_term():
+    """Theorem 1: initializing V_{0,i} = h_i(S0) kills the heterogeneity term."""
+    (Xs, ys), loss, w_opt = _quad_fed_problem(het=5.0)
+    sur = quadratic_for_objective(loss, rho=0.05)
+    cfg = fedmm.FedMMConfig(n_clients=4, p=0.5, alpha=0.2)
+    s0 = jnp.zeros(6)
+    v0 = fedmm.init_control_variates_at_h(sur, s0, (Xs, ys), cfg)
+    state, hist = fedmm.run(sur, s0, lambda t, k: (Xs, ys),
+                            lambda t: 0.3, jax.random.PRNGKey(9), cfg, 300, v0_i=v0)
+    state0, hist0 = fedmm.run(sur, s0, lambda t, k: (Xs, ys),
+                              lambda t: 0.3, jax.random.PRNGKey(9), cfg, 300)
+    head = np.mean([h["e_s"] for h in hist[:20]])
+    head0 = np.mean([h["e_s"] for h in hist0[:20]])
+    assert head <= head0  # warm start never worse early on
+
+
+def test_naive_theta_aggregation_biased_on_remark1_style_problem():
+    """theta-aggregation converges to the wrong point on a problem with a
+    nonlinear T while FedMM finds the optimum (Section 3.1/6 message)."""
+    sur = _remark1_surrogate()
+    mean_zs = jnp.array([1.0, 4.0, 9.0, 16.0])
+    theta_star = 1.0 / jnp.sqrt(jnp.mean(mean_zs))
+    cfg = fedmm.FedMMConfig(n_clients=4, p=1.0, alpha=0.0)
+
+    def cb(t, key):
+        return mean_zs[:, None] + 0.0 * jax.random.normal(key, (4, 4))
+
+    st_naive, _ = naive.run(sur, jnp.asarray(1.0), cb, lambda t: 0.5, KEY, cfg, 400)
+    st_fed, _ = fedmm.run(sur, jnp.asarray(5.0), cb, lambda t: 0.5, KEY, cfg, 400)
+    err_naive = abs(float(st_naive.theta) - float(theta_star))
+    err_fed = abs(float(sur.T(st_fed.s_hat)) - float(theta_star))
+    assert err_fed < 1e-3
+    assert err_naive > 10 * err_fed
+
+
+def test_server_control_variate_invariant():
+    """Proposition 5: V_t == sum_i mu_i V_{t,i} along the whole path."""
+    (Xs, ys), loss, _ = _quad_fed_problem()
+    sur = quadratic_for_objective(loss, rho=0.05)
+    cfg = fedmm.FedMMConfig(n_clients=4, p=0.5, alpha=0.3,
+                            compressor=C.rand_k(0.5))
+    state = fedmm.init(sur, jnp.zeros(6), cfg)
+    for t in range(10):
+        state, _ = fedmm.step(sur, state, (Xs, ys), 0.3, jax.random.PRNGKey(t), cfg)
+        v_from_clients = jnp.mean(state.v_i, axis=0)
+        np.testing.assert_allclose(np.asarray(state.v),
+                                   np.asarray(v_from_clients), rtol=1e-4, atol=1e-6)

@@ -1,0 +1,99 @@
+"""FedMM-OT (Algorithm 3): ICNN properties, Gaussian OT ground truth,
+and end-to-end L2-UVP improvement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fedmm_ot as ot
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_icnn_is_convex_along_segments():
+    spec = ot.ICNNSpec(dim=4, hidden=(16, 16, 16))
+    params = ot.icnn_init(KEY, spec)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(k1, (32, 4))
+    y = jax.random.normal(k2, (32, 4))
+    for lam in (0.25, 0.5, 0.75):
+        mid = ot.icnn_forward(params, spec, lam * x + (1 - lam) * y)
+        bound = lam * ot.icnn_forward(params, spec, x) \
+            + (1 - lam) * ot.icnn_forward(params, spec, y)
+        assert bool(jnp.all(mid <= bound + 1e-5))
+
+
+def test_icnn_grad_shape_and_strong_convexity():
+    spec = ot.ICNNSpec(dim=3, strong_convexity=0.5)
+    params = ot.icnn_init(KEY, spec)
+    x = jax.random.normal(KEY, (8, 3))
+    g = ot.icnn_grad(params, spec, x)
+    assert g.shape == (8, 3)
+    # monotone gradient (strong convexity): <gx - gy, x - y> >= m ||x-y||^2
+    y = x + 0.1
+    gy = ot.icnn_grad(params, spec, y)
+    inner = jnp.sum((g - gy) * (x - y), axis=-1)
+    assert bool(jnp.all(inner >= 0.5 * jnp.sum((x - y) ** 2, axis=-1) - 1e-5))
+
+
+def test_gaussian_ot_map_pushforward():
+    """The closed-form map pushes N(m_p, S_p) onto N(m_q, S_q)."""
+    d = 3
+    k1, k2 = jax.random.split(KEY)
+    A1 = jax.random.normal(k1, (d, d)) * 0.4
+    cov_p = A1 @ A1.T + jnp.eye(d)
+    A2 = jax.random.normal(k2, (d, d)) * 0.4
+    cov_q = A2 @ A2.T + 0.5 * jnp.eye(d)
+    m_p, m_q = jnp.zeros(d), jnp.ones(d)
+    tmap, A = ot.gaussian_ot_map(m_p, cov_p, m_q, cov_q)
+    # pushforward covariance: A S_p A^T == S_q;  A symmetric PSD (Brenier)
+    np.testing.assert_allclose(np.asarray(A @ cov_p @ A.T),
+                               np.asarray(cov_q), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(A), np.asarray(A.T), atol=1e-5)
+    assert float(jnp.linalg.eigvalsh(A).min()) > 0.0
+    # sample check
+    x = jax.random.multivariate_normal(KEY, m_p, cov_p, (20000,))
+    y = tmap(x)
+    np.testing.assert_allclose(np.asarray(jnp.cov(y.T)), np.asarray(cov_q),
+                               rtol=0.15, atol=0.1)
+
+
+def test_l2_uvp_zero_for_true_map():
+    d = 2
+    cov_p, cov_q = jnp.eye(d), 2.0 * jnp.eye(d)
+    tmap, _ = ot.gaussian_ot_map(jnp.zeros(d), cov_p, jnp.zeros(d), cov_q)
+    x = jax.random.normal(KEY, (256, d))
+    assert float(ot.l2_uvp(tmap, tmap, x, cov_q)) == pytest.approx(0.0)
+
+
+def test_fedmm_ot_improves_l2_uvp():
+    """A few FedMM-OT rounds reduce L2-UVP on a Gaussian->Gaussian task."""
+    d, n_clients = 2, 4
+    cov_p = jnp.eye(d)
+    cov_q = jnp.array([[2.0, 0.5], [0.5, 1.0]])
+    m_p, m_q = jnp.zeros(d), jnp.zeros(d)
+    true_map, _ = ot.gaussian_ot_map(m_p, cov_p, m_q, cov_q)
+
+    spec = ot.ICNNSpec(dim=d, hidden=(32, 32, 32), strong_convexity=0.1)
+    cfg = ot.FedOTConfig(n_clients=n_clients, p=1.0, alpha=0.01, lam=2.0,
+                         client_lr=2e-2, client_steps=10,
+                         server_steps=20, server_lr=1e-2)
+    state = ot.init(KEY, spec, cfg)
+
+    kx, ky = jax.random.split(jax.random.PRNGKey(2))
+    x_all = jax.random.multivariate_normal(kx, m_p, cov_p, (n_clients * 128,))
+    # heterogeneous split: sort by first coordinate (k-means-like banding)
+    x_all = x_all[jnp.argsort(x_all[:, 0])]
+    client_x = x_all.reshape(n_clients, 128, d)
+    y_q = jax.random.multivariate_normal(ky, m_q, cov_q, (256,))
+
+    def fitted(st):
+        return lambda xx: ot.icnn_grad(st.omega, spec, xx)
+
+    x_eval = x_all[:256]
+    uvp0 = float(ot.l2_uvp(fitted(state), true_map, x_eval, cov_q))
+    step_j = jax.jit(lambda st, k: ot.step(st, spec, cfg, client_x, y_q, 1.0, k))
+    for t in range(40):
+        state, _ = step_j(state, jax.random.PRNGKey(t))
+    uvp1 = float(ot.l2_uvp(fitted(state), true_map, x_eval, cov_q))
+    assert uvp1 < uvp0 * 0.3

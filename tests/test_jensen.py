@@ -1,0 +1,104 @@
+"""Jensen surrogate (EM) tests: GMM MAP-EM + Poisson-EM (Appendix C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fedmm, sassmm
+from repro.core.jensen import GMMSpec, gmm_neg_loglik, make_gmm_em, make_poisson_em
+from repro.data.synthetic import gmm_data
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _gmm_setup(p=2, L=3, n=600, lam=0.01):
+    means_true = jnp.array([[-4.0, 0.0], [0.0, 4.0], [4.0, 0.0]])[:L, :p]
+    covs = jnp.stack([jnp.eye(p)] * L)
+    weights = jnp.full((L,), 1.0 / L)
+    z = gmm_data(KEY, n, means_true, covs, weights)
+    spec = GMMSpec(weights=weights, covs=covs, lam=lam)
+    return z, means_true, spec
+
+
+class TestGMMEM:
+    def test_em_monotone_descent(self):
+        """Full-batch EM (gamma = 1) never increases the penalized NLL."""
+        z, means_true, spec = _gmm_setup()
+        sur = make_gmm_em(spec)
+        means0 = means_true + 1.5
+        state = sassmm.init(sur, sur.s_bar(z, means0))
+        prev = np.inf
+        for _ in range(20):
+            val = float(gmm_neg_loglik(z, sur.T(state.s_hat), spec))
+            assert val <= prev + 1e-5
+            prev = val
+            state, _ = sassmm.step(sur, state, z, gamma=1.0)
+
+    def test_em_recovers_means(self):
+        z, means_true, spec = _gmm_setup(n=2000)
+        sur = make_gmm_em(spec)
+        state = sassmm.init(sur, sur.s_bar(z, means_true + 1.0))
+        for _ in range(50):
+            state, _ = sassmm.step(sur, state, z, gamma=1.0)
+        err = float(jnp.max(jnp.abs(sur.T(state.s_hat) - means_true)))
+        assert err < 0.4
+
+    def test_m_step_fermat(self):
+        """T(s) zeroes the gradient of the penalized surrogate M-step."""
+        z, means_true, spec = _gmm_setup()
+        sur = make_gmm_em(spec)
+        s = sur.s_bar(z, means_true)
+        means_hat = sur.T(s)
+
+        def m_obj(m):
+            # -<s, phi(theta)> + g: quadratic form of the penalized M-step
+            quad = jnp.einsum("l,lp,lpq,lq->", s["s2"],
+                              m, jnp.linalg.inv(spec.covs), m) * 0.5
+            lin = jnp.einsum("lp,lpq,lq->", s["s1"], jnp.linalg.inv(spec.covs), m)
+            return quad - lin + 0.5 * spec.lam * jnp.sum(m * m)
+
+        g = jax.grad(m_obj)(means_hat)
+        assert float(jnp.abs(g).max()) < 1e-4
+
+    def test_federated_em_heterogeneous(self):
+        """FedEM = FedMM with the Jensen surrogate (Dieuleveut et al. 2021):
+        clients hold different mixture components yet the federated EM
+        recovers all means — impossible locally."""
+        z, means_true, spec = _gmm_setup(n=1200)
+        sur = make_gmm_em(spec)
+        # heterogeneous: sort points by nearest true component -> 3 clients
+        d = jnp.sum((z[:, None] - means_true[None]) ** 2, axis=-1)
+        comp = jnp.argmin(d, axis=1)
+        per = min(int(jnp.sum(comp == c)) for c in range(3))
+        client_data = jnp.stack([z[comp == c][:per] for c in range(3)])
+        cfg = fedmm.FedMMConfig(n_clients=3, p=1.0, alpha=0.0)
+        state, _ = fedmm.run(sur, sur.s_bar(z, means_true + 1.0),
+                             lambda t, k: client_data,
+                             lambda t: 1.0 / jnp.sqrt(t), KEY, cfg, 100)
+        err = float(jnp.max(jnp.abs(sur.T(state.s_hat) - means_true)))
+        assert err < 0.6
+
+
+class TestPoissonEM:
+    def test_T_closed_form(self):
+        sur = make_poisson_em(mean_z=3.0, lam=0.5)
+        s = jnp.asarray(-1.0)
+        theta = sur.T(s)
+        # T = argmin lam e^t - E[Z] t - s e^t -> (lam - s) e^t = E[Z]
+        assert jnp.allclose((0.5 - s) * jnp.exp(theta), 3.0, atol=1e-5)
+
+    def test_projection_into_S(self):
+        sur = make_poisson_em(mean_z=3.0, lam=0.5)
+        assert float(sur.project(jnp.asarray(1.0))) < 0.0
+        assert float(sur.project(jnp.asarray(-100.0))) >= -50.0
+
+    def test_b_geometry_bounds(self):
+        """App E.2: B(s) = E[Z]/(lam-s)^2 with v_min/v_max on S = [-M, 0]."""
+        from repro.core.jensen import poisson_em_metric
+        B = poisson_em_metric(mean_z=2.0, lam=1.0)
+        M = 10.0
+        s_grid = jnp.linspace(-M, 0.0, 101)
+        vals = jax.vmap(B)(s_grid)
+        v_min, v_max = 2.0 / (1.0 + M) ** 2, 2.0 / 1.0 ** 2
+        assert float(vals.min()) >= v_min - 1e-6
+        assert float(vals.max()) <= v_max + 1e-6

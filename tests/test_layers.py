@@ -1,0 +1,197 @@
+"""Layer-level equivalence tests: blocked (flash-style) attention vs naive,
+recurrent scan vs single-step decode for Mamba and RWKV6, MoE dispatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import rwkv as R
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B=2, S=64, H=4, KV=2, hd=16, key=KEY):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, S, H, hd))
+    k = jax.random.normal(k2, (B, S, KV, hd))
+    v = jax.random.normal(k3, (B, S, KV, hd))
+    return q, k, v
+
+
+class TestBlockedAttention:
+    @pytest.mark.parametrize("S,qb,kb", [(64, 16, 16), (60, 16, 32), (64, 64, 64),
+                                         (37, 8, 8)])
+    def test_matches_naive_causal(self, S, qb, kb):
+        q, k, v = _qkv(S=S)
+        mask = L.gqa_scores_mask(jnp.arange(S), jnp.arange(S))
+        ref = L.gqa_core(q, k, v, mask)
+        out = L.blocked_attention(q, k, v, causal=True, q_block=qb, kv_block=kb)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_matches_naive_sliding_window(self):
+        S, W = 64, 8
+        q, k, v = _qkv(S=S)
+        mask = L.gqa_scores_mask(jnp.arange(S), jnp.arange(S), window=W)
+        ref = L.gqa_core(q, k, v, mask)
+        out = L.blocked_attention(q, k, v, causal=True, window=W,
+                                  q_block=16, kv_block=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_cross_attention_non_causal(self):
+        q, _, _ = _qkv(S=32)
+        _, k, v = _qkv(S=48, key=jax.random.PRNGKey(1))
+        ref = L.gqa_core(q, k, v, mask=None)
+        out = L.blocked_attention(q, k, v, causal=False, q_block=8, kv_block=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-5)
+
+
+class TestRoPE:
+    def test_relative_property(self):
+        """RoPE dot products depend only on position differences."""
+        hd = 16
+        q = jax.random.normal(KEY, (1, 1, 1, hd))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+        def dot(p_q, p_k):
+            qr = L.rope(q, jnp.array([[p_q]]))
+            kr = L.rope(k, jnp.array([[p_k]]))
+            return float(jnp.sum(qr * kr))
+        assert dot(5, 3) == pytest.approx(dot(105, 103), rel=1e-4)
+        assert dot(5, 3) != pytest.approx(dot(5, 4), rel=1e-3)
+
+    def test_norm_preserved(self):
+        x = jax.random.normal(KEY, (2, 8, 4, 32))
+        xr = L.rope(x, jnp.arange(8)[None])
+        np.testing.assert_allclose(np.asarray(jnp.linalg.norm(xr, axis=-1)),
+                                   np.asarray(jnp.linalg.norm(x, axis=-1)),
+                                   rtol=1e-5)
+
+
+class TestMamba:
+    def test_scan_equals_stepwise(self):
+        cfg = C.get("jamba-1.5-large-398b").reduced()
+        params = M.mamba_init(KEY, cfg, jnp.float32)
+        B, S = 2, 12
+        x = jax.random.normal(KEY, (B, S, cfg.d_model)) * 0.5
+        y_full, _ = M.mamba_block(params, cfg, x)
+        # step-by-step with carried state
+        state = {"conv": jnp.zeros((B, cfg.d_conv - 1, cfg.expand * cfg.d_model)),
+                 "ssm": jnp.zeros((B, cfg.expand * cfg.d_model, cfg.d_state))}
+        ys = []
+        for t in range(S):
+            y, state = M.mamba_block(params, cfg, x[:, t:t + 1],
+                                     state=state, single_step=True)
+            ys.append(y)
+        y_steps = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_steps), np.asarray(y_full),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestRWKV:
+    def test_wkv_scan_equals_stepwise(self):
+        B, S, H, hd = 2, 10, 3, 8
+        ks = jax.random.split(KEY, 4)
+        r, k, v = (jax.random.normal(kk, (B, S, H, hd)) for kk in ks[:3])
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, hd)))  # in (0,1)
+        u = jax.random.normal(KEY, (H, hd)) * 0.1
+        y_full, state_full = R.wkv_scan(r, k, v, w, u)
+        state = jnp.zeros((B, H, hd, hd))
+        ys = []
+        for t in range(S):
+            state, y = R.wkv_step(state, r[:, t], k[:, t], v[:, t], w[:, t], u)
+            ys.append(y[:, None])
+        np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                                   np.asarray(y_full), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(state), np.asarray(state_full),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_block_full_vs_steps(self):
+        cfg = C.get("rwkv6-3b").reduced()
+        params = R.rwkv_block_init(KEY, cfg, jnp.float32)
+        B, S = 2, 8
+        x = jax.random.normal(KEY, (B, S, cfg.d_model)) * 0.5
+        y_full, _ = R.rwkv_block(params, cfg, x)
+        state = None
+        ys = []
+        for t in range(S):
+            y, state = R.rwkv_block(params, cfg, x[:, t:t + 1],
+                                    state=state, single_step=True) \
+                if state is not None else R.rwkv_block(params, cfg, x[:, t:t + 1])
+            ys.append(y)
+        # first step without state == zero-state single step, so compare all
+        y_steps = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_steps), np.asarray(y_full),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestMoE:
+    def _cfg(self):
+        return C.get("qwen3-moe-235b-a22b").reduced()
+
+    def test_output_shape_and_finite(self):
+        cfg = self._cfg()
+        params = MOE.moe_init(KEY, cfg, jnp.float32)
+        x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+        y, aux = MOE.moe_block(params, cfg, x)
+        assert y.shape == x.shape
+        assert bool(jnp.all(jnp.isfinite(y))) and float(aux) > 0
+
+    def test_matches_dense_reference(self):
+        """Sort-based dispatch == dense per-token expert mixture when nothing
+        is dropped (capacity_factor >= E/k covers worst-case imbalance)."""
+        import dataclasses
+        cfg = dataclasses.replace(self._cfg(), capacity_factor=float(
+            self._cfg().n_experts))
+        params = MOE.moe_init(KEY, cfg, jnp.float32)
+        x = jax.random.normal(KEY, (1, 16, cfg.d_model))
+        y, _ = MOE.moe_block(params, cfg, x)
+
+        # dense reference
+        xt = x.reshape(-1, cfg.d_model)
+        logits = xt @ params["router"]
+        probs = jax.nn.softmax(logits, -1)
+        gate, eid = jax.lax.top_k(probs, cfg.top_k)
+        gate = gate / gate.sum(-1, keepdims=True)
+        w = params["experts"]
+
+        def expert(e, t):
+            h = jax.nn.silu(t @ w["w_gate"][e]) * (t @ w["w_in"][e])
+            return h @ w["w_out"][e]
+
+        ref = jnp.zeros_like(xt)
+        for tok in range(xt.shape[0]):
+            for j in range(cfg.top_k):
+                ref = ref.at[tok].add(gate[tok, j]
+                                      * expert(eid[tok, j], xt[tok]))
+        np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model)),
+                                   np.asarray(ref), rtol=1e-3, atol=1e-4)
+
+    def test_capacity_drops_tokens(self):
+        """With capacity_factor << 1 most assignments are dropped, output
+        norm shrinks but stays finite."""
+        import dataclasses
+        cfg = dataclasses.replace(self._cfg(), capacity_factor=0.1)
+        params = MOE.moe_init(KEY, cfg, jnp.float32)
+        x = jax.random.normal(KEY, (2, 32, cfg.d_model))
+        y, _ = MOE.moe_block(params, cfg, x)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+
+class TestChunkedXent:
+    def test_matches_full_softmax(self):
+        cfg = C.get("phi3-medium-14b").reduced()
+        emb = L.embedding_init(KEY, cfg, jnp.float32)
+        x = jax.random.normal(KEY, (2, 20, cfg.d_model)) * 0.3
+        labels = jax.random.randint(KEY, (2, 20), 0, cfg.vocab)
+        out = L.chunked_softmax_xent(emb, x, labels, cfg, chunk=7)
+        logits = L.logits_fn(emb, x, cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, -1)
+        tgt = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+        ref = jnp.mean(lse - tgt)
+        assert float(out) == pytest.approx(float(ref), rel=1e-5)

@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED variant of each
+assigned architecture runs one forward/train step on CPU with correct output
+shapes and no NaNs; decode is consistent with the full forward where the
+semantics are exactly comparable (see notes inline)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models.model import build_model, make_batch
+from repro.optim.optimizers import sgd_init, sgd_update
+
+KEY = jax.random.PRNGKey(0)
+S = 32  # multiple of the reduced sliding window (16)
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {aid: build_model(C.get(aid).reduced()) for aid in C.ARCH_IDS}
+
+
+@pytest.mark.parametrize("aid", C.ARCH_IDS)
+def test_forward_and_train_step(models, aid):
+    model = models[aid]
+    cfg = model.cfg
+    params = model.init(KEY)
+    batch = make_batch(KEY, cfg, batch_size=2, seq_len=S)
+    loss = model.loss_fn(params, batch)
+    assert loss.shape == () and bool(jnp.isfinite(loss))
+    # a plausible initial loss (~ log vocab)
+    assert 0.5 * np.log(cfg.vocab) < float(loss) < 2.5 * np.log(cfg.vocab)
+
+    # one SGD train step decreases loss on the same batch
+    grads = jax.grad(model.loss_fn)(params, batch)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in jax.tree.leaves(grads))
+    opt = sgd_init(params)
+    params2, _ = sgd_update(params, grads, opt, lr=0.2)
+    assert float(model.loss_fn(params2, batch)) < float(loss)
+
+
+@pytest.mark.parametrize("aid", C.ARCH_IDS)
+def test_prefill_decode_shapes_no_nan(models, aid):
+    model = models[aid]
+    cfg = model.cfg
+    params = model.init(KEY)
+    batch = make_batch(KEY, cfg, batch_size=2, seq_len=S)
+    last, cache = model.prefill(params, batch)
+    assert last.shape == (2, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(last[..., :cfg.vocab])))
+    logits, cache2 = model.decode(params, cache, batch["tokens"][:, :1],
+                                  jnp.asarray(S))
+    assert logits.shape == (2, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits[..., :cfg.vocab])))
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+RECURRENT = ["rwkv6-3b"]
+ATTENTION_ONLY = ["phi3-medium-14b", "deepseek-coder-33b", "mistral-large-123b",
+                  "gemma3-12b", "llama4-maverick-400b-a17b",
+                  "qwen3-moe-235b-a22b", "internvl2-26b"]
+
+
+@pytest.mark.parametrize("aid", RECURRENT)
+def test_decode_consistency_recurrent(models, aid):
+    """Recurrent archs: decode(prefill(x[:S]), x[S]) == prefill(x[:S+1])
+    last-token logits exactly (state carry is exact)."""
+    model = models[aid]
+    cfg = model.cfg
+    params = model.init(KEY)
+    batch = make_batch(KEY, cfg, batch_size=2, seq_len=S + 1)
+    b_s = {"tokens": batch["tokens"][:, :S], "labels": batch["labels"][:, :S]}
+    _, cache = model.prefill(params, b_s)
+    logits, _ = model.decode(params, cache, batch["tokens"][:, S:S + 1],
+                             jnp.asarray(S))
+    ref, _ = model.prefill(params, {"tokens": batch["tokens"],
+                                    "labels": batch["labels"]})
+    np.testing.assert_allclose(np.asarray(logits[..., :cfg.vocab]),
+                               np.asarray(ref[..., :cfg.vocab]),
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("aid", ["phi3-medium-14b", "gemma3-12b",
+                                 "qwen3-moe-235b-a22b", "internvl2-26b",
+                                 "whisper-base", "jamba-1.5-large-398b",
+                                 "llama4-maverick-400b-a17b",
+                                 "deepseek-coder-33b", "mistral-large-123b"]
+                         )
+def test_decode_consistency_attention(models, aid):
+    """decode(prefill(x[:S], cache_len=S+8), x[S], pos=S) must equal the
+    last-token logits of prefill(x[:S+1]) exactly: the cache keeps position i
+    at slot i, unwritten slots are masked by the slot<=pos rule, and the new
+    token is written at slot S. Covers MoE (qwen3/llama4), cross-attention
+    (whisper), VLM fusion (internvl), hybrid (jamba, window-free ring) and
+    sliding-window (gemma3, where only the window-local slots matter).
+
+    MoE archs are rebuilt with a no-drop capacity factor: capacity-based
+    token dropping is *not causal* (a later token can evict an earlier one
+    from an expert), so exact decode/prefill equivalence only holds when
+    nothing drops — the production configs keep cf=1.25 and accept the
+    usual MoE train/serve divergence (noted in DESIGN.md)."""
+    cfg = models[aid].cfg
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = make_batch(KEY, cfg, batch_size=2, seq_len=S + 1)
+    b_s = {k: (v[:, :S] if (v.ndim == 2 and v.shape[1] == S + 1) else v)
+           for k, v in batch.items()}
+    n_prefix = cfg.n_frontend_tokens if cfg.family == "vlm" else 0
+    _, cache = model.prefill(params, b_s, cache_len=n_prefix + S + 8)
+    logits, _ = model.decode(params, cache, batch["tokens"][:, S:S + 1],
+                             jnp.asarray(n_prefix + S))
+    ref, _ = model.prefill(params, batch)
+    np.testing.assert_allclose(np.asarray(logits[..., :cfg.vocab]),
+                               np.asarray(ref[..., :cfg.vocab]),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_long_500k_eligibility_flags():
+    """DESIGN.md long_500k policy is encoded in config metadata."""
+    eligible = {aid for aid in C.ARCH_IDS if C.get(aid).is_subquadratic}
+    assert eligible == {"rwkv6-3b", "jamba-1.5-large-398b", "gemma3-12b"}
+
+
+def test_vocab_padding_multiple_of_128():
+    for aid in C.ARCH_IDS:
+        cfg = C.get(aid)
+        assert cfg.padded_vocab % 128 == 0
+        assert cfg.padded_vocab >= cfg.vocab

@@ -1,0 +1,106 @@
+"""Hypothesis property tests on system-level invariants (deliverable c):
+S-space aggregation linearity, FedMM oracle unbiasedness, quantizer group
+structure, T-map contraction, and sharding-spec well-formedness across
+random shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+from repro.core.surrogate import (tree_add, tree_lerp, tree_scale, tree_sub,
+                                  tree_weighted_sum)
+from repro.fed.trainer import _group_size, _quantize_leaf, T_map, FedLMConfig
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 10**6))
+def test_s_space_aggregation_is_functional_averaging(n, seed):
+    """Linearity (the paper's central fact): for surrogates U(theta, s) =
+    psi - <s, phi>, sum_i mu_i U(theta, s_i) == U(theta, sum_i mu_i s_i)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, n + 2)
+    s_list = [jax.random.normal(k, (5,)) for k in ks[:n]]
+    mu = jax.nn.softmax(jax.random.normal(ks[n], (n,)))
+    phi = jax.random.normal(ks[n + 1], (5,))
+    s_agg = tree_weighted_sum(s_list, list(mu))
+    lhs = sum(float(m) * float(jnp.dot(s, phi)) for m, s in zip(mu, s_list))
+    rhs = float(jnp.dot(s_agg, phi))
+    assert lhs == pytest.approx(rhs, rel=1e-4, abs=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.05, 1.0), st.integers(0, 10**6))
+def test_sa_update_stays_in_convex_hull(gamma, seed):
+    """Shat + gamma (S - Shat) stays within [min, max] of the two points
+    coordinatewise (the convexity argument after Algorithm 1)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a, b = jax.random.normal(k1, (8,)), jax.random.normal(k2, (8,))
+    out = tree_lerp(a, b, gamma)
+    lo, hi = jnp.minimum(a, b), jnp.maximum(a, b)
+    assert bool(jnp.all(out >= lo - 1e-6)) and bool(jnp.all(out <= hi + 1e-6))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4096), st.sampled_from([64, 128, 256]))
+def test_quantizer_group_is_shard_safe(D, block):
+    """_group_size returns a power-of-2 group that divides the per-shard
+    width for both 16- and 32-way sharding whenever those divide D."""
+    g = _group_size(D, block)
+    assert g >= 1 and (g & (g - 1)) == 0 and g <= block
+    if D % 32 == 0:
+        assert (D // 32) % g == 0
+    elif D % 16 == 0:
+        assert (D // 16) % g == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 64), st.integers(0, 10**6))
+def test_quantize_leaf_bounded_error(rows, cols, seed):
+    cols = cols * 2  # even
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols)) * 5.0
+    out = _quantize_leaf(x, jax.random.PRNGKey(seed + 1), bits=8, block=256)
+    assert out.shape == x.shape and out.dtype == x.dtype
+    g = _group_size(cols, 256)
+    xg = x.reshape(rows, cols // g, g)
+    scale = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    bound = (scale / 127.0).repeat(g, -1).reshape(x.shape)
+    assert bool(jnp.all(jnp.abs(out - x) <= bound + 1e-5))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.001, 1.0), st.floats(0.0, 2.0), st.integers(0, 10**6))
+def test_t_map_nonexpansive(rho, wd, seed):
+    """T = prox of (wd/2)||.||^2 is a contraction: ||T(a)-T(b)|| <= ||a-b||."""
+    cfg = FedLMConfig(n_clients=1, rho=rho, weight_decay=wd)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = {"w": jax.random.normal(k1, (6,))}
+    b = {"w": jax.random.normal(k2, (6,))}
+    da = float(jnp.linalg.norm(T_map(a, cfg)["w"] - T_map(b, cfg)["w"]))
+    db = float(jnp.linalg.norm(a["w"] - b["w"]))
+    assert da <= db + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 8), st.integers(0, 10**6))
+def test_param_specs_always_valid(depth, width, seed):
+    """param_specs yields a PartitionSpec per leaf with rank == leaf rank
+    and only divisible dims sharded, for random pytree shapes."""
+    from jax.sharding import PartitionSpec as P
+    from repro.models.sharding import param_specs
+    rng = np.random.default_rng(seed)
+    tree = {}
+    for i in range(depth):
+        shape = tuple(int(rng.choice([1, 3, 16, 64, 512, 1536]))
+                      for _ in range(int(rng.integers(1, 4))))
+        tree[f"leaf{i}/w_in"] = jax.ShapeDtypeStruct(shape, jnp.float32)
+    specs = param_specs(tree, fsdp=("data",), fsdp_size=16, tp="model",
+                        tp_size=16)
+    for name, leaf in tree.items():
+        spec = specs[name]
+        assert len(spec) <= len(leaf.shape)
+        for dim, s in enumerate(spec):
+            if s is not None:
+                size = 16
+                assert leaf.shape[dim] % size == 0

@@ -1,0 +1,87 @@
+"""SA-SSMM (Algorithm 1) behaviour on online dictionary learning and
+stochastic settings (Section 2.2-2.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sassmm
+from repro.core.variational import DictLearnSpec, make_dictlearn
+from repro.core.quadratic import quadratic_for_objective
+from repro.data.synthetic import dictlearn_data
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_constant_gamma_geometric_forgetting():
+    """With constant gamma, Shat_{t+1} = (1-g)^{t+1} S0 + g sum (1-g)^j S_{t+1-j}
+    (Section 2.2)."""
+    sur = make_dictlearn(DictLearnSpec(p=6, K=3))
+    z, _ = dictlearn_data(KEY, 64, 6, 3)
+    gamma = 0.25
+    s0 = sur.s_bar(z, jax.random.normal(KEY, (6, 3)) * 0.1)
+    state = sassmm.init(sur, s0)
+    oracles = []
+    for t in range(4):
+        theta = sur.T(state.s_hat)
+        oracles.append(sur.s_bar(z[t * 16:(t + 1) * 16], theta))
+        state, _ = sassmm.step(sur, state, z[t * 16:(t + 1) * 16], gamma)
+    # closed form reconstruction
+    expect = jax.tree.map(lambda x: (1 - gamma) ** 4 * x, s0)
+    for j, o in enumerate(oracles):
+        w = gamma * (1 - gamma) ** (3 - j)
+        expect = jax.tree.map(lambda e, oo: e + w * oo, expect, o)
+    for ka in ("s1", "s2"):
+        np.testing.assert_allclose(np.asarray(state.s_hat[ka]),
+                                   np.asarray(expect[ka]), rtol=1e-4, atol=1e-5)
+
+
+def test_gamma_1_over_t_is_empirical_average():
+    """gamma_t = 1/t makes Shat_T the empirical mean of the oracles."""
+    def s_bar(batch, tau):
+        del tau
+        return jnp.mean(batch)
+
+    sur = sassmm.Surrogate if False else None
+    from repro.core.surrogate import Surrogate
+    sur = Surrogate(s_bar=s_bar, T=lambda s: s)
+    state = sassmm.init(sur, jnp.asarray(0.0))
+    vals = jnp.arange(1.0, 11.0)
+    for t, v in enumerate(vals):
+        state, _ = sassmm.step(sur, state, v[None], gamma=1.0 / (t + 1))
+    assert jnp.allclose(state.s_hat, vals.mean(), atol=1e-6)
+
+
+def test_online_dictionary_learning_decreases_loss():
+    """Online SA-SSMM on dictionary learning (Mairal 2010 correspondence)."""
+    spec = DictLearnSpec(p=16, K=4, lam=0.1, eta=0.2)
+    sur = make_dictlearn(spec)
+    z, theta_star = dictlearn_data(KEY, 2048, 16, 4)
+    theta0 = jax.random.normal(jax.random.PRNGKey(1), (16, 4)) * 0.3
+    state = sassmm.init(sur, sur.s_bar(z[:32], theta0))
+    losses = []
+    gamma_fn = sassmm.decaying_stepsize(1.0)
+    for t in range(60):
+        batch = z[(t * 32) % 2048:((t * 32) % 2048) + 32]
+        state, _ = sassmm.step(sur, state, batch, float(gamma_fn(t + 1)))
+        if t % 10 == 0:
+            losses.append(float(sur.loss(z[:256], sur.T(state.s_hat))))
+    assert losses[-1] < losses[0] * 0.9
+
+
+def test_e_s_metric_decreases():
+    X = jax.random.normal(KEY, (512, 8))
+    y = X @ jnp.linspace(0, 1, 8)
+
+    def loss(batch, theta):
+        xb, yb = batch
+        return 0.5 * jnp.mean((xb @ theta - yb) ** 2)
+
+    sur = quadratic_for_objective(loss, rho=0.05)
+    state = sassmm.init(sur, jnp.zeros(8))
+    es = []
+    for t in range(200):
+        i = (t * 64) % 512
+        state, m = sassmm.step(sur, state, (X[i:i + 64], y[i:i + 64]),
+                               gamma=float(1.0 / np.sqrt(1 + t)))
+        es.append(float(m["e_s"]))
+    assert np.mean(es[-20:]) < np.mean(es[:20]) * 0.1

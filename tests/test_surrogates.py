@@ -1,0 +1,189 @@
+"""MM-1/MM-2 structural properties of the three surrogate families."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import prox, sassmm
+from repro.core.quadratic import quadratic_for_objective, make_quadratic_surrogate
+from repro.core.variational import DictLearnSpec, make_dictlearn, sparse_code
+from repro.core.surrogate import tree_dot, tree_sub, tree_sq_norm
+from repro.data.synthetic import dictlearn_data
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _quad_problem():
+    X = jax.random.normal(KEY, (128, 6))
+    w = jnp.linspace(-1, 1, 6)
+    y = X @ w
+
+    def loss(batch, theta):
+        xb, yb = batch
+        return 0.5 * jnp.mean((xb @ theta - yb) ** 2)
+
+    lip = float(jnp.linalg.norm(X.T @ X / X.shape[0], ord=2))
+    return (X, y), loss, lip, w
+
+
+class TestQuadraticSurrogate:
+    def test_majorization_and_tangency(self):
+        """MM-1: U(theta, s_tau) >= f(theta), equality at theta = tau."""
+        batch, loss, lip, _ = _quad_problem()
+        rho = 0.9 / lip
+        sur = quadratic_for_objective(loss, rho=rho)
+        tau = jnp.ones(6) * 0.3
+        s_tau = sur.s_bar(batch, tau)
+
+        def U(theta):
+            # psi(theta) - <s, phi(theta)> + const chosen so U(tau) = f(tau)
+            val = sur.psi(theta) - tree_dot(s_tau, sur.phi(theta))
+            const = loss(batch, tau) - (sur.psi(tau) - tree_dot(s_tau, sur.phi(tau)))
+            return val + const
+
+        assert jnp.allclose(U(tau), loss(batch, tau), atol=1e-5)
+        for seed in range(5):
+            theta = tau + jax.random.normal(jax.random.PRNGKey(seed), (6,))
+            assert U(theta) >= loss(batch, theta) - 1e-5
+
+    def test_T_is_minimizer(self):
+        """MM-2 / Fermat: T(s) minimizes g + psi - <s, phi>."""
+        batch, loss, lip, _ = _quad_problem()
+        sur = quadratic_for_objective(loss, rho=0.5 / lip, lam_l2=0.1)
+        s = jnp.linspace(-1, 1, 6)
+        theta_star = sur.T(s)
+
+        def obj(theta):
+            return sur.g(theta) + sur.psi(theta) - tree_dot(s, sur.phi(theta))
+
+        g = jax.grad(obj)(theta_star)
+        assert float(jnp.linalg.norm(g)) < 1e-5
+
+    def test_sassmm_gamma1_is_prox_gradient(self):
+        """With gamma_t = 1 the mirror sequence of Algorithm 1 is exactly
+        proximal gradient descent (Section 2.3)."""
+        batch, loss, lip, _ = _quad_problem()
+        rho, lam = 0.5 / lip, 0.05
+        sur = quadratic_for_objective(loss, rho=rho, lam_l2=lam)
+        grad = jax.grad(lambda th: loss(batch, th))
+
+        theta_ref = jnp.zeros(6)
+        state = sassmm.init(sur, sur.s_bar(batch, theta_ref))
+        for _ in range(10):
+            # reference prox-GD
+            theta_ref = prox.prox_l2(theta_ref - rho * grad(theta_ref), rho, lam)
+            state, _ = sassmm.step(sur, state, batch, gamma=1.0)
+            assert jnp.allclose(sur.T(state.s_hat),
+                                prox.prox_l2(theta_ref - rho * grad(theta_ref), rho, lam),
+                                atol=1e-5) or jnp.allclose(sur.T(state.s_hat), theta_ref, atol=1e-5)
+
+    def test_descent_property(self):
+        """Deterministic MM (full batch, gamma = 1) monotonically decreases
+        f + g (Lange 2013, ch. 12)."""
+        batch, loss, lip, _ = _quad_problem()
+        sur = quadratic_for_objective(loss, rho=0.9 / lip, lam_l2=0.01)
+        state = sassmm.init(sur, sur.s_bar(batch, jnp.ones(6) * 2.0))
+        prev = jnp.inf
+        for _ in range(15):
+            theta = sur.T(state.s_hat)
+            val = loss(batch, theta) + sur.g(theta)
+            assert val <= prev + 1e-6
+            prev = val
+            state, _ = sassmm.step(sur, state, batch, gamma=1.0)
+
+
+class TestVariationalSurrogate:
+    def setup_method(self):
+        self.spec = DictLearnSpec(p=20, K=5, lam=0.1, eta=0.2)
+        z, theta_star = dictlearn_data(KEY, 200, 20, 5)
+        self.z, self.theta_star = z, theta_star
+        self.sur = make_dictlearn(self.spec)
+
+    def test_sbar_shapes_and_psd(self):
+        theta = jax.random.normal(KEY, (20, 5)) * 0.1
+        s = self.sur.s_bar(self.z, theta)
+        assert s["s1"].shape == (5, 5) and s["s2"].shape == (20, 5)
+        eigs = jnp.linalg.eigvalsh(s["s1"])
+        assert eigs.min() >= -1e-5  # s1 = E[h h^T] is PSD
+
+    def test_T_solves_quadratic(self):
+        """T(s) zeroes the gradient of the surrogate objective (eq. 17)."""
+        h = jax.random.normal(KEY, (50, 5))
+        s1 = h.T @ h / 50.0
+        s2 = jax.random.normal(jax.random.PRNGKey(1), (20, 5))
+        theta = self.sur.T({"s1": s1, "s2": s2})
+
+        def obj(th):
+            return (self.spec.eta * jnp.sum(th ** 2)
+                    + jnp.trace(th.T @ th @ s1) - 2.0 * jnp.sum(th * s2))
+
+        g = jax.grad(obj)(theta)
+        assert float(jnp.abs(g).max()) < 1e-3
+
+    def test_variational_majorization(self):
+        """l(Z, theta) = min_h ltilde <= ltilde(Z, M(Z,tau), theta): the
+        surrogate evaluated through h*(tau) majorizes the variational loss."""
+        tau = jax.random.normal(KEY, (20, 5)) * 0.5
+        theta = jax.random.normal(jax.random.PRNGKey(2), (20, 5)) * 0.5
+        z = self.z[:32]
+        h_tau = sparse_code(z, tau, self.spec)
+        h_theta = sparse_code(z, theta, self.spec)
+
+        def ltilde(h, th):
+            return jnp.mean(0.5 * jnp.sum((z - h @ th.T) ** 2, axis=1)
+                            + self.spec.lam * jnp.sum(jnp.abs(h), axis=1))
+
+        # surrogate at theta (using tau's code) >= loss at theta (theta's code)
+        assert ltilde(h_tau, theta) >= ltilde(h_theta, theta) - 1e-4
+        # tangency at theta = tau
+        assert jnp.allclose(ltilde(h_tau, tau), ltilde(h_tau, tau))
+
+    def test_projection_restores_psd(self):
+        s1 = jnp.diag(jnp.array([1.0, -0.5, 0.2, 0.1, -0.01]))
+        s = self.sur.project({"s1": s1, "s2": jnp.zeros((20, 5))})
+        assert jnp.linalg.eigvalsh(s["s1"]).min() >= -1e-6
+
+    def test_mm_descent_dictionary_learning(self):
+        """Full-batch MM (gamma=1) monotonically decreases the dictionary
+        learning objective (eq. 28 with fixed data)."""
+        theta0 = jax.random.normal(KEY, (20, 5)) * 0.1
+        state = sassmm.init(self.sur, self.sur.s_bar(self.z, theta0))
+        prev = jnp.inf
+        for _ in range(8):
+            val = self.sur.loss(self.z, self.sur.T(state.s_hat))
+            assert float(val) <= float(prev) + 1e-4
+            prev = val
+            state, _ = sassmm.step(self.sur, state, self.z, gamma=1.0)
+
+
+class TestProx:
+    def test_prox_l1_soft_threshold(self):
+        s = jnp.array([-2.0, -0.05, 0.0, 0.05, 2.0])
+        out = prox.prox_l1(s, rho=1.0, lam=0.1)
+        assert jnp.allclose(out, jnp.array([-1.9, 0.0, 0.0, 0.0, 1.9]))
+
+    def test_prox_l2_shrink(self):
+        s = jnp.ones(4)
+        assert jnp.allclose(prox.prox_l2(s, 2.0, 0.5), s / 2.0)
+
+    def test_unit_columns(self):
+        theta = jnp.array([[3.0, 0.1], [4.0, 0.1]])
+        out = prox.prox_unit_columns(theta)
+        norms = jnp.linalg.norm(out, axis=0)
+        assert norms[0] <= 1.0 + 1e-6 and jnp.allclose(out[:, 1], theta[:, 1])
+
+    def test_lasso_ista_optimality(self):
+        """ISTA solution satisfies the lasso KKT conditions."""
+        theta = jax.random.normal(KEY, (20, 5))
+        z = jax.random.normal(jax.random.PRNGKey(3), (20,))
+        lam = 0.1
+        h = prox.lasso_ista(z, theta, lam, n_iters=500)
+        grad = theta.T @ (theta @ h - z)
+        # KKT: |grad_j| <= lam where h_j = 0; grad_j = -lam*sign(h_j) else
+        on = jnp.abs(h) > 1e-6
+        assert float(jnp.max(jnp.abs(grad + lam * jnp.sign(h)) * on)) < 5e-3
+        assert float(jnp.max(jnp.abs(grad) * (~on))) <= lam + 5e-3
+
+    def test_project_psd(self):
+        m = jnp.array([[1.0, 2.0], [2.0, -3.0]])
+        p = prox.project_psd(m)
+        assert jnp.linalg.eigvalsh(p).min() >= -1e-6
