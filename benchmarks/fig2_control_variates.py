@@ -49,12 +49,17 @@ def main(reduced=True, rounds=120):
             "setting": exp.name,
             "es_tail_alpha0": tail(h0), "es_tail_alpha001": tail(h1),
             "loss_alpha0": h0[-1]["loss"], "loss_alpha001": h1[-1]["loss"],
+            # unified-compressor accounting (uplink MB over the whole run,
+            # Lemma-1 effective omega under p=0.5)
+            "uplink_mb": float(np.sum([x["comm_bytes"] for x in h1])) / 1e6,
+            "omega_eff": h1[-1]["omega_eff"],
             "seconds": time.time() - t0,
         }
         rows.append(row)
         print(f"[fig2] {exp.name:22s} E^s tail: alpha=0 {row['es_tail_alpha0']:.3e}"
               f"  alpha=.01 {row['es_tail_alpha001']:.3e}   loss "
               f"{row['loss_alpha0']:.3f} vs {row['loss_alpha001']:.3f} "
+              f"uplink={row['uplink_mb']:.1f}MB omega_p={row['omega_eff']:.2f} "
               f"({row['seconds']:.0f}s)", flush=True)
     return rows
 

@@ -1,16 +1,20 @@
 """Kernel microbenchmarks: wall time of the Pallas kernels (interpret mode
 on CPU — structural check + oracle comparison; on TPU the same harness times
-the compiled Mosaic kernels) and of their jnp oracles under jit.
+the compiled Mosaic kernels), of their jnp oracles under jit, and of the
+unified ``core.compression`` quantize path (hash vs threefry dither).
 
 Emits ``name,us_per_call,derived`` CSV rows (benchmarks/run.py contract).
+``--smoke`` shrinks sizes/reps for CI collection-health runs.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import compression as C
 from repro.kernels import ops, ref
 
 KEY = jax.random.PRNGKey(0)
@@ -26,41 +30,55 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def main():
+def main(smoke: bool = False):
     rows = []
+    reps = 1 if smoke else 5
+    qn = 1 << (12 if smoke else 16)
+    qtag = "4k" if smoke else "64k"
 
-    # quantize: jnp oracle vs pallas(interpret)
-    x = jax.random.normal(KEY, (1 << 16,))
-    u = jax.random.uniform(jax.random.PRNGKey(1), (1 << 16,))
-    t_ref = _time(jax.jit(lambda a, b: ref.quantize_block_ref(a, b)), x, u)
-    rows.append(("quantize_block_ref_64k", t_ref,
+    # quantize: jnp oracle vs pallas(interpret) vs unified Compressor front-end
+    x = jax.random.normal(KEY, (qn,))
+    u = jax.random.uniform(jax.random.PRNGKey(1), (qn,))
+    t_ref = _time(jax.jit(lambda a, b: ref.quantize_block_ref(a, b)), x, u,
+                  reps=reps)
+    rows.append((f"quantize_block_ref_{qtag}", t_ref,
                  f"{x.size * 4 / (t_ref / 1e6) / 1e9:.2f}GB/s"))
     t_k = _time(lambda a, b: ops.quantize_dequantize(a, jax.random.PRNGKey(2)),
-                x, u)
-    rows.append(("quantize_block_pallas_interp_64k", t_k, ""))
+                x, u, reps=reps)
+    rows.append((f"quantize_block_pallas_interp_{qtag}", t_k, ""))
+    for dither in ("hash", "uniform"):
+        comp = C.block_quant(8, 256, dither=dither,
+                             kernel_threshold=1 << 30)  # force the jnp path
+        fn = jax.jit(lambda a, c=comp: c.apply(jax.random.PRNGKey(2), a))
+        t_c = _time(fn, x, reps=reps)
+        rows.append((f"quantize_compressor_{dither}_{qtag}", t_c,
+                     f"{x.size * 4 / (t_c / 1e6) / 1e9:.2f}GB/s"))
 
     # flash attention
-    q = jax.random.normal(KEY, (1, 512, 4, 64))
-    k = jax.random.normal(jax.random.PRNGKey(1), (1, 512, 2, 64))
-    v = jax.random.normal(jax.random.PRNGKey(2), (1, 512, 2, 64))
+    S_attn = 128 if smoke else 512
+    q = jax.random.normal(KEY, (1, S_attn, 4, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, S_attn, 2, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, S_attn, 2, 64))
     t_ref = _time(jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c)),
-                  q, k, v)
-    flops = 2 * 2 * 512 * 512 * 4 * 64
-    rows.append(("flash_attention_ref_512", t_ref,
+                  q, k, v, reps=reps)
+    flops = 2 * 2 * S_attn * S_attn * 4 * 64
+    rows.append((f"flash_attention_ref_{S_attn}", t_ref,
                  f"{flops / (t_ref / 1e6) / 1e9:.2f}GF/s"))
-    t_k = _time(lambda a, b, c: ops.flash_attention(a, b, c), q, k, v)
-    rows.append(("flash_attention_pallas_interp_512", t_k, ""))
+    t_k = _time(lambda a, b, c: ops.flash_attention(a, b, c), q, k, v,
+                reps=reps)
+    rows.append((f"flash_attention_pallas_interp_{S_attn}", t_k, ""))
 
     # rwkv scan
-    B, S, H, hd = 1, 256, 4, 64
+    B, S, H, hd = 1, (64 if smoke else 256), 4, 64
     ks = jax.random.split(KEY, 4)
     r, kk, vv = (jax.random.normal(x_, (B, S, H, hd)) for x_ in ks[:3])
     w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, hd)))
     uu = jax.random.normal(KEY, (H, hd)) * 0.1
-    t_ref = _time(jax.jit(lambda *a: ref.rwkv_scan_ref(*a)), r, kk, vv, w, uu)
-    rows.append(("rwkv_scan_ref_256", t_ref, ""))
-    t_k = _time(lambda *a: ops.rwkv_wkv(*a), r, kk, vv, w, uu)
-    rows.append(("rwkv_scan_pallas_interp_256", t_k, ""))
+    t_ref = _time(jax.jit(lambda *a: ref.rwkv_scan_ref(*a)), r, kk, vv, w, uu,
+                  reps=reps)
+    rows.append((f"rwkv_scan_ref_{S}", t_ref, ""))
+    t_k = _time(lambda *a: ops.rwkv_wkv(*a), r, kk, vv, w, uu, reps=reps)
+    rows.append((f"rwkv_scan_pallas_interp_{S}", t_k, ""))
 
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
@@ -68,4 +86,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes / 1 rep (CI collection-health run)")
+    main(smoke=ap.parse_args().smoke)

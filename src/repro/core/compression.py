@@ -6,32 +6,108 @@ Every operator is a pair (compress_fn, omega) with
     E[Quant(s)] = s,      E[||Quant(s) - s||^2] <= omega ||s||^2.
 
 Operators act leaf-wise on pytrees and fold the RNG key per leaf.
-The block 8/4-bit quantizer mirrors ``kernels/quantize_block.py`` (the Pallas
-hot-spot implementation); this module is the algorithm-level API which
-dispatches to the kernel for large leaves.
+
+This module is the ONE compression subsystem of the repo: the reference
+Algorithm 2 (``core/fedmm.py``), the transformer-scale trainer
+(``fed/trainer.py``), the benchmarks, and the tests all route through the
+``Compressor`` objects built here. The stochastic-rounding block quantizer
+has exactly one rounding semantics, defined by the pure-jnp oracle
+``kernels/ref.py:quantize_groups_ref``; ``quantize_leaf`` below dispatches
+
+  * large leaves (>= ``KERNEL_DISPATCH_MIN`` elements, 128-aligned group;
+    flat in shard_safe mode) to the Pallas kernel
+    ``kernels/quantize_block.py`` via ``kernels/ops.py`` (interpret mode
+    on CPU, compiled Mosaic on TPU), and
+  * everything else to the jnp oracle — in shard_safe mode applied
+    group-wise along the LAST axis only, an elementwise-fusable graph that
+    preserves GSPMD sharding (a flat reshape across sharded dims would
+    rematerialize the leaf).
+
+Grouping has two modes behind ``shard_safe=``:
+
+  * ``shard_safe=False`` (default — the paper's block-p quantizer, used by
+    the reference Algorithm 2 and the figures): each leaf is flattened and
+    padded to full ``block``-sized groups, so every leaf is genuinely
+    quantized at the requested block size;
+  * ``shard_safe=True`` (the trainer at transformer scale): groups stay
+    along the LAST axis with size ``group_size(D, block)`` — the largest
+    power-of-2 that divides the per-shard width under worst-case 32-way
+    sharding. Leaves whose last dim yields g == 1 pass through unquantized
+    (and are billed as uncompressed f32 by ``payload_bytes``).
+
+The stochastic-rounding dither comes from one of two sources behind the
+``dither=`` flag:
+
+  * ``"uniform"`` — ``jax.random.uniform`` (threefry; statistically clean,
+    but several u32 intermediates per element on parameter-sized tensors);
+  * ``"hash"``    — a fused murmur3-finalizer hash of the element index and
+    the folded key, producing 24-bit-resolution uniforms in [0, 1). Zero
+    extra memory; the trainer's default at scale.
+
+Both paths compare the dither against the round-up fraction in float32
+(24-bit resolution), so the quantizer is unbiased to ~2^-24 per element —
+see ``tests/test_compression_unified.py`` for the 1/sqrt(trials) check.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ops as kernel_ops
+from ..kernels import ref as kernel_ref
+
 Pytree = object
+
+# Flat leaves at least this large go to the Pallas kernel.
+KERNEL_DISPATCH_MIN = 1 << 16
 
 
 @dataclasses.dataclass(frozen=True)
 class Compressor:
-    """An unbiased compressor satisfying A4(omega)."""
+    """An unbiased compressor satisfying A4(omega), with communication
+    accounting (payload bytes per uplink, effective omega under Lemma 1)."""
 
     apply: Callable  # (key, pytree) -> pytree
     omega: float     # relative variance bound
     bits: float      # payload bits per coordinate (for communication accounting)
     name: str = "compressor"
+    # per-leaf payload model: (shape, itemsize) -> bytes on the wire
+    # (None -> bits/8 * n)
+    payload_fn: Optional[Callable] = None
 
     def __call__(self, key, s):
         return self.apply(key, s)
+
+    def _leaf_payload(self, shape, itemsize: float = 4.0) -> float:
+        n = float(math.prod(shape)) if shape else 1.0
+        if self.payload_fn is not None:
+            return float(self.payload_fn(tuple(shape), float(itemsize)))
+        return n * self.bits / 8.0
+
+    def payload_bytes(self, tree) -> float:
+        """Uplink bytes for one client's payload of ``tree``'s shape.
+        Accepts arrays or ShapeDtypeStructs (shape + dtype are read, so
+        uncompressed bf16 leaves bill 2 bytes/coord, not 4)."""
+        total = 0.0
+        for leaf in jax.tree.leaves(tree):
+            shape = getattr(leaf, "shape", ())
+            dt = getattr(leaf, "dtype", None)
+            itemsize = float(jnp.dtype(dt).itemsize) if dt is not None else 4.0
+            total += self._leaf_payload(shape, itemsize)
+        return total
+
+    def round_metrics(self, tree, p: float = 1.0) -> dict:
+        """Static per-round accounting: payload per client, A4 variance
+        bound, and the Lemma-1 effective bound under participation p."""
+        return {
+            "payload_bytes_per_client": self.payload_bytes(tree),
+            "omega": self.omega,
+            "omega_eff": effective_omega(self.omega, p),
+        }
 
 
 def _tree_keyed_map(fn, key, tree):
@@ -45,50 +121,151 @@ def _tree_keyed_map(fn, key, tree):
 # ---------------------------------------------------------------------------
 
 def identity() -> Compressor:
-    return Compressor(apply=lambda key, s: s, omega=0.0, bits=32.0, name="identity")
+    return Compressor(
+        apply=lambda key, s: s, omega=0.0, bits=32.0, name="identity",
+        payload_fn=lambda shape, itemsize:
+            (float(math.prod(shape)) if shape else 1.0) * itemsize)
 
 
 # ---------------------------------------------------------------------------
 # Stochastic uniform quantization in blocks (block-p quantization of
-# Dieuleveut et al. 2021, Supp. B; QSGD-style): per block of size B,
-# scale = max|x|, stochastic-round x/scale to 2^(b-1) levels.
-# omega <= 1 / levels... conservative bound: omega = sqrt(B)/levels style;
-# for the purposes of A4 tests we estimate empirically and assert the bound
-# omega = B / levels^2 used below (see tests).
+# Dieuleveut et al. 2021, Supp. B; QSGD-style): per group of size g along the
+# last axis, scale = max|x|, stochastic-round x/scale to 2^(b-1) levels.
+# A4 bound: per-coord Var <= (scale/levels)^2 / 4 and scale^2 <= ||group||^2,
+# so E||Q(s)-s||^2 <= g/(4 levels^2) ||s||^2 <= block/(4 levels^2) ||s||^2.
 # ---------------------------------------------------------------------------
 
-def _block_quant_leaf(key, x, bits, block):
-    flat = x.reshape(-1)
-    n = flat.shape[0]
+def group_size(D: int, block: int) -> int:
+    """Largest power-of-2 quantization group that divides the per-shard
+    width of the last dim (worst case 32-way sharding), capped at ``block``.
+    Keeping groups shard-local is what lets GSPMD partition the quantizer —
+    a flat reshape across sharded dims would force full rematerialization
+    of parameter-sized tensors (observed: 7 TB/device on qwen3-235b)."""
+    per = D
+    for s in (32, 16):
+        if D % s == 0:
+            per = D // s
+            break
+    per = max(per, 1)
+    g = 1
+    while per % (g * 2) == 0 and g * 2 <= block:
+        g *= 2
+    return g
+
+
+def hash_dither(key, shape):
+    """Stochastic-rounding dither: murmur3-style integer hash of the element
+    coordinates, seeded by the (folded) JAX key, mapped to float32 uniforms
+    in [0, 1) with 24-bit resolution. Elementwise + broadcast only, so it
+    fuses into the surrounding quantization chain, costs zero extra HBM, and
+    respects sharding (threefry on parameter-sized tensors costs several
+    u32/u64 intermediates per element — ~20 GB/device observed)."""
+    kd = jax.random.key_data(key).astype(jnp.uint32)
+    seed = kd.reshape(-1)[0] ^ kd.reshape(-1)[-1]
+    idx = jnp.zeros(shape, jnp.uint32)
+    stride = jnp.uint32(1)
+    for d in range(len(shape) - 1, -1, -1):
+        idx = idx + jax.lax.broadcasted_iota(jnp.uint32, shape, d) * stride
+        stride = stride * jnp.uint32(shape[d])
+    x = idx * jnp.uint32(2654435761) + seed
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    # top 24 bits -> [0, 1): exact in f32, so P(u < t) = t +- 2^-24. The old
+    # trainer path compared a uint8-truncated threshold instead, which
+    # systematically rounded fractions near 1 down (bias up to ~0.4%/elem).
+    return (x >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+
+
+def _make_dither(dither: str, key, shape):
+    if dither == "hash":
+        return hash_dither(key, shape)
+    if dither == "uniform":
+        return jax.random.uniform(key, shape, jnp.float32)
+    raise ValueError(f"unknown dither source {dither!r} (want 'hash'|'uniform')")
+
+
+def quantize_leaf(key, x, bits: int = 8, block: int = 256,
+                  dither: str = "uniform", shard_safe: bool = False,
+                  kernel_threshold: int = KERNEL_DISPATCH_MIN):
+    """Quantize-dequantize ONE array leaf. Single source of truth for the
+    repo's stochastic-rounding block quantizer: grouping via ``shard_safe``
+    (see module docstring), dither via ``dither=``, math via the kernel
+    oracle pair (Pallas for large leaves, the jnp oracle otherwise —
+    bit-identical given the same draws)."""
+    if bits == 0 or x.ndim == 0 or x.size == 0:
+        return x
+    orig_dtype = x.dtype
+
+    if shard_safe:
+        # groups along the last axis only: elementwise-fusable, preserves
+        # GSPMD sharding of parameter-sized leaves
+        D = x.shape[-1]
+        g = group_size(D, block)
+        if g < 2:
+            return x  # one-element groups reproduce x exactly; skip the work
+        u = _make_dither(dither, key, x.shape)
+        # Kernel dispatch only when the group is a legal lane width: the
+        # Pallas BlockSpec keeps lanes == g, which must stay 128-aligned for
+        # the VPU (a (rows, 2) block would fail Mosaic lowering on real
+        # TPU). Smaller groups take the elementwise jnp-oracle path below.
+        if x.ndim == 1 and x.size >= kernel_threshold and g % 128 == 0:
+            out = kernel_ops.quantize_dequantize_with_dither(
+                x.astype(jnp.float32), u, bits=bits, block=g)
+            return out.astype(orig_dtype)
+        xg = x.astype(jnp.float32).reshape(x.shape[:-1] + (D // g, g))
+        deq = kernel_ref.quantize_groups_ref(xg, u.reshape(xg.shape),
+                                             bits=bits)
+        return deq.reshape(x.shape).astype(orig_dtype)
+
+    # reference block-p semantics (Dieuleveut et al. 2021, Supp. B): flat
+    # stream padded to full blocks — every leaf quantized at the requested
+    # block size (pad entries quantize to 0 and are discarded)
+    n = x.size
     pad = (-n) % block
-    flat = jnp.pad(flat, (0, pad))
-    blocks = flat.reshape(-1, block)
-    levels = 2.0 ** (bits - 1) - 1.0
-    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
-    safe = jnp.where(scale > 0, scale, 1.0)
-    y = blocks / safe * levels                      # in [-levels, levels]
-    lo = jnp.floor(y)
-    p = y - lo                                      # P(round up)
-    u = jax.random.uniform(key, y.shape)
-    q = lo + (u < p).astype(y.dtype)                # stochastic rounding -> unbiased
-    deq = q * safe / levels
-    deq = jnp.where(scale > 0, deq, 0.0)
-    return deq.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+    u = _make_dither(dither, key, (n + pad,))
+    flat = x.astype(jnp.float32).reshape(-1)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    if n >= kernel_threshold and block % 128 == 0:
+        out = kernel_ops.quantize_dequantize_with_dither(flat, u, bits=bits,
+                                                         block=block)
+    else:
+        out = kernel_ref.quantize_block_ref(flat, u, bits=bits, block=block)
+    return out[:n].reshape(x.shape).astype(orig_dtype)
 
 
-def block_quant(bits: int = 8, block: int = 256) -> Compressor:
+def block_quant(bits: int = 8, block: int = 256, dither: str = "uniform",
+                shard_safe: bool = False,
+                kernel_threshold: int = KERNEL_DISPATCH_MIN) -> Compressor:
     levels = 2.0 ** (bits - 1) - 1.0
-    # Var of stochastic rounding per coord <= (scale/levels)^2 / 4 and
-    # scale^2 <= ||block||^2, so E||Q(s)-s||^2 <= block/(4 levels^2) ||s||^2.
     omega = block / (4.0 * levels * levels)
 
     def apply(key, s):
         return _tree_keyed_map(
-            lambda k, x: _block_quant_leaf(k, x.astype(jnp.float32), bits, block).astype(x.dtype),
+            lambda k, x: quantize_leaf(k, x, bits=bits, block=block,
+                                       dither=dither, shard_safe=shard_safe,
+                                       kernel_threshold=kernel_threshold),
             key, s)
 
+    def payload(shape, itemsize):
+        # codes at `bits` per coordinate + one f32 scale per group; leaves
+        # apply() passes through unquantized (ndim-0 always; in shard-safe
+        # mode also g == 1 last dims) travel uncompressed at their dtype
+        n = float(math.prod(shape)) if shape else 1.0
+        if not shape:
+            return n * itemsize
+        if not shard_safe:
+            return n * bits / 8.0 + math.ceil(n / block) * 4.0
+        g = group_size(shape[-1], block)
+        if g < 2:
+            return n * itemsize
+        return n * bits / 8.0 + (n / g) * 4.0
+
+    tag = f"{dither},shard" if shard_safe else dither
     return Compressor(apply=apply, omega=float(omega), bits=float(bits),
-                      name=f"block_quant{bits}b{block}")
+                      name=f"block_quant{bits}b{block}[{tag}]",
+                      payload_fn=payload)
 
 
 # ---------------------------------------------------------------------------
@@ -108,7 +285,10 @@ def rand_k(fraction: float) -> Compressor:
         return _tree_keyed_map(leaf, key, s)
 
     return Compressor(apply=apply, omega=float(omega), bits=32.0 * fraction,
-                      name=f"rand_k{fraction:g}")
+                      name=f"rand_k{fraction:g}",
+                      payload_fn=lambda shape, itemsize:
+                          (float(math.prod(shape)) if shape else 1.0)
+                          * fraction * itemsize)
 
 
 # ---------------------------------------------------------------------------
@@ -128,7 +308,9 @@ def with_participation(base: Compressor, p: float) -> Compressor:
         return jax.tree.map(lambda x: (u / p) * x, q)
 
     return Compressor(apply=apply, omega=float(omega_p), bits=base.bits * p,
-                      name=f"{base.name}+pp{p:g}")
+                      name=f"{base.name}+pp{p:g}",
+                      payload_fn=lambda shape, itemsize:
+                          p * base._leaf_payload(shape, itemsize))
 
 
 def effective_omega(omega: float, p: float) -> float:

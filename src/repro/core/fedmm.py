@@ -16,7 +16,11 @@ Reference (cross-silo, n explicit clients) implementation. Each round:
 
 The distributed (mesh-sharded, transformer-scale) version of the same update
 lives in ``repro.fed.trainer``; this module is the algorithmically complete
-oracle used by the paper's experiments and by the tests.
+oracle used by the paper's experiments and by the tests. Both consume the
+SAME ``core.compression.Compressor`` objects for Quant (A4), so the two
+paths produce identical dequantized payloads for identical keys, and both
+surface the compressor's per-round communication accounting (payload bytes,
+Lemma-1 effective omega) in their ``step`` metrics.
 """
 from __future__ import annotations
 
@@ -109,10 +113,15 @@ def step(sur: Surrogate, state: FedMMState, client_batches, gamma, key,
     v_new = tree_add(state.v, tree_scale(agg, alpha / p))
 
     drift = tree_sub(s_new, state.s_hat)
+    # per-round communication accounting (static shapes -> Python floats;
+    # only the active-client count is traced)
+    comm = cfg.compressor.round_metrics(state.s_hat, p=p)
     metrics = {
         "e_s": tree_sq_norm(drift) / (gamma ** 2),                 # E^s_{t+1}
         "n_active": jnp.sum(mask),
         "h_norm_sq": tree_sq_norm(h_oracle),
+        "comm_bytes": comm["payload_bytes_per_client"] * jnp.sum(mask),
+        "omega_eff": jnp.asarray(comm["omega_eff"], jnp.float32),
     }
     new_state = FedMMState(s_hat=s_new, v=v_new, v_i=v_i_new, step=state.step + 1)
     return new_state, metrics

@@ -4,10 +4,18 @@
 Mirror parameter: Shat has the parameter pytree structure; the per-client
 oracle is S_i = theta - rho * grad_i(theta) on the client's batch shard;
 T(s) = prox_{rho g}(s) = s / (1 + rho * wd) elementwise (g = weight decay).
-Delta_i = S_i - Shat - V_i is block-quantized (the Pallas-kernel operator;
-jnp path under pjit) before the uplink aggregation; the server applies the
-SA step. Aggregation happens in the SURROGATE space — the paper's central
-design — and lowers to one weighted all-reduce over the client mesh axes.
+Delta_i = S_i - Shat - V_i is compressed by a ``repro.core.compression.
+Compressor`` (by default the unified block quantizer with the fused-hash
+dither: shard-aligned groups along the last axis, elementwise jnp graph
+under pjit for multi-dim leaves, Pallas-kernel dispatch for large flat
+leaves) before the uplink aggregation; the server applies the SA step.
+Aggregation happens in the SURROGATE space — the paper's central design —
+and lowers to one weighted all-reduce over the client mesh axes.
+
+This module owns NO quantizer of its own: ``resolve_compressor`` builds the
+operator from (quant_bits, quant_block, quant_dither) or takes an explicit
+``FedLMConfig.compressor``, so this trainer, ``core/fedmm.py``, and the raw
+kernel produce identical dequantized payloads for identical keys.
 
 Client topology (DESIGN.md §3):
   physical  n = |pod| x |data| silos; V_i / grads carry a leading client dim
@@ -30,6 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..core import compression
+from ..core.compression import Compressor
 from ..models import sharding as shd
 from ..models.model import Model
 
@@ -45,10 +55,25 @@ class FedLMConfig:
     mlp_mode: str = "generic"      # "megatron" = §Perf paired row-parallel
     quant_bits: int = 8            # 0 -> no compression
     quant_block: int = 256
+    quant_dither: str = "hash"     # fused-hash dither (zero-memory at scale)
+    compressor: Optional[Compressor] = None  # overrides the quant_* fields
     client_mode: str = "physical"  # physical | logical
     use_cv: bool = True            # False (alpha=0 regime): drop V/V_i
                                    # entirely — saves 2x params of state
                                    # (Theorem 1's omega_p=0 / alpha=0 case)
+
+
+def resolve_compressor(cfg: FedLMConfig) -> Compressor:
+    """The ONE uplink compressor this trainer uses: an explicit
+    ``cfg.compressor`` if given, else the unified block quantizer from
+    ``core.compression`` parameterized by the quant_* fields (identity
+    when quant_bits == 0)."""
+    if cfg.compressor is not None:
+        return cfg.compressor
+    if not cfg.quant_bits:
+        return compression.identity()
+    return compression.block_quant(cfg.quant_bits, cfg.quant_block,
+                                   dither=cfg.quant_dither, shard_safe=True)
 
 
 class FedLMState(NamedTuple):
@@ -80,84 +105,6 @@ def T_map(s_hat, cfg: FedLMConfig):
     return jax.tree.map(lambda x: (c * x).astype(x.dtype), s_hat)
 
 
-def _group_size(D: int, block: int) -> int:
-    """Largest power-of-2 quantization group that divides the per-shard
-    width of the last dim (worst case 32-way sharding), capped at ``block``.
-    Keeping groups shard-local is what lets GSPMD partition the quantizer —
-    a flat reshape across sharded dims would force full rematerialization
-    of parameter-sized tensors (observed: 7 TB/device on qwen3-235b)."""
-    per = D
-    for s in (32, 16):
-        if D % s == 0:
-            per = D // s
-            break
-    per = max(per, 1)
-    g = 1
-    while per % (g * 2) == 0 and g * 2 <= block:
-        g *= 2
-    return g
-
-
-def _quantize_leaf(x, key, bits, block):
-    """Unbiased block quantization (algorithmic twin of
-    kernels/quantize_block.py; groups run along the last axis, shard-aligned
-    — see _group_size). Scale/round/dequant entirely elementwise so the
-    lowered graph keeps the leaf's sharding."""
-    if bits == 0 or x.ndim == 0:
-        return x
-    orig_dtype = x.dtype
-    D = x.shape[-1]
-    g = _group_size(D, block)
-    # quantization arithmetic in the input dtype: the integer code range
-    # (<= 255) is exact in bf16 (8 mantissa bits), so only the x/scale ratio
-    # sees bf16 rounding (~0.4%) — and staying out of f32 halves the
-    # transient memory of this parameter-sized chain.
-    xf = x.reshape(x.shape[:-1] + (D // g, g))
-    levels = jnp.asarray(2.0 ** (bits - 1) - 1.0, xf.dtype)
-    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
-    safe = jnp.where(scale > 0, scale, 1.0)
-    y = xf / safe * levels
-    lo = jnp.floor(y)
-    # Stochastic-rounding dither from a fused elementwise hash (murmur3
-    # finalizer over per-element coordinates + the round key): threefry on
-    # parameter-sized tensors costs several u32/u64 intermediates per
-    # element (~20 GB/device observed); the hash fuses to zero extra memory.
-    # On real TPU the Pallas kernel (kernels/quantize_block.py) uses the
-    # hardware PRNG instead.
-    u = _hash_dither_u8(key, y.shape)
-    thresh = jnp.clip((y - lo).astype(jnp.float32) * 256.0,
-                      0.0, 255.0).astype(jnp.uint8)
-    q = lo + (u < thresh).astype(y.dtype)
-    deq = jnp.where(scale > 0, q * safe / levels,
-                    jnp.zeros((), y.dtype))
-    return deq.reshape(x.shape).astype(orig_dtype)
-
-
-def _hash_dither_u8(key, shape):
-    """8-bit dither: murmur3-style integer hash of the element coordinates,
-    seeded by the (folded) JAX key. Elementwise + broadcast only, so it
-    fuses into the surrounding quantization chain and respects sharding."""
-    kd = jax.random.key_data(key).astype(jnp.uint32)
-    seed = kd.reshape(-1)[0] ^ kd.reshape(-1)[-1]
-    idx = jnp.zeros(shape, jnp.uint32)
-    stride = jnp.uint32(1)
-    for d in range(len(shape) - 1, -1, -1):
-        idx = idx + jax.lax.broadcasted_iota(jnp.uint32, shape, d) * stride
-        stride = stride * jnp.uint32(shape[d])
-    x = idx * jnp.uint32(2654435761) + seed
-    x = (x ^ (x >> 16)) * jnp.uint32(0x7feb352d)
-    x = (x ^ (x >> 15)) * jnp.uint32(0x846ca68b)
-    x = x ^ (x >> 16)
-    return (x & jnp.uint32(0xFF)).astype(jnp.uint8)
-
-
-def quantize_tree(tree, key, bits, block):
-    leaves, treedef = jax.tree.flatten(tree)
-    keys = jax.random.split(key, len(leaves))
-    return jax.tree.unflatten(
-        treedef, [_quantize_leaf(x, k, bits, block) for x, k in zip(leaves, keys)])
-
-
 def init_state(model: Model, key, cfg: FedLMConfig) -> FedLMState:
     params = model.init(key)
     if not cfg.use_cv:
@@ -173,10 +120,11 @@ def make_train_step(model: Model, cfg: FedLMConfig):
     batch: {"tokens": (n_clients, B_local, S), "labels": ...} (+frontend)."""
 
     use_cv = cfg.use_cv
+    comp = resolve_compressor(cfg)
 
     def client_round(theta, s_hat, v_i_c, cb, qkey, active):
         """One client's work (Algorithm 2 lines 5-9): oracle, drift-corrected
-        delta, quantize, control-variate update. active in {0., 1.}.
+        delta, compress (A4), control-variate update. active in {0., 1.}.
         With use_cv=False (the alpha=0 / omega_p=0 regime of Theorem 1),
         V_i is dropped entirely — no drift correction, no CV state."""
         loss, g = jax.value_and_grad(model.loss_fn)(theta, cb)
@@ -188,7 +136,7 @@ def make_train_step(model: Model, cfg: FedLMConfig):
             d = jax.tree.map(
                 lambda th, gg, s: th - cfg.rho * gg.astype(th.dtype) - s,
                 theta, g, s_hat)
-        q = quantize_tree(d, qkey, cfg.quant_bits, cfg.quant_block)
+        q = comp.apply(qkey, d)
         q = jax.tree.map(lambda x: x * active.astype(x.dtype), q)
         if not use_cv:
             return loss, q, {}
@@ -251,8 +199,14 @@ def make_train_step(model: Model, cfg: FedLMConfig):
         # and a 1-D ravel of a sharded tensor forces full replication.
         e_s = sum(jnp.sum(jnp.square(hh.astype(jnp.float32)))
                   for hh in jax.tree.leaves(h))
+        # per-round communication accounting (shapes are static under jit:
+        # payload per client is a Python float, only n_active is traced)
+        comm = comp.round_metrics(state.s_hat, p=p)
         metrics = {"loss": jnp.mean(losses), "e_s": e_s,
-                   "n_active": jnp.sum(active)}
+                   "n_active": jnp.sum(active),
+                   "comm_bytes": comm["payload_bytes_per_client"]
+                   * jnp.sum(active),
+                   "omega_eff": jnp.asarray(comm["omega_eff"], jnp.float32)}
         return FedLMState(s_hat=s_new, v=v_new, v_i=v_i_new,
                           step=state.step + 1), metrics
 

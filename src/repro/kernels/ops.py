@@ -20,17 +20,29 @@ INTERPRET = jax.default_backend() == "cpu"
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "block"))
-def quantize_dequantize(x, key, bits: int = 8, block: int = 256):
-    """Unbiased block quantize->dequantize of a flat float32 stream.
-    Pads internally to the quant block. This is the FedMM Quant operator
-    (A4) on the wire-critical path."""
+def quantize_dequantize_with_dither(x, u, bits: int = 8, block: int = 256):
+    """Block quantize->dequantize of a flat float32 stream with caller-
+    provided uniform draws ``u`` (same shape as ``x``). Pads internally to
+    the quant block. This is the entry point ``core/compression.py`` uses
+    for its kernel dispatch: the dither source (fused hash / jax.random)
+    stays orthogonal to the kernel, so kernel and jnp-oracle paths are
+    bit-identical given the same draws."""
     n = x.shape[0]
     padded = -(-n // block) * block
     xp = jnp.pad(x, (0, padded - n))
-    u = jax.random.uniform(key, (padded,))
-    out = quantize_block_pallas(xp, u, bits=bits, block=block,
+    up = jnp.pad(u, (0, padded - n))
+    out = quantize_block_pallas(xp, up, bits=bits, block=block,
                                 interpret=INTERPRET)
     return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block"))
+def quantize_dequantize(x, key, bits: int = 8, block: int = 256):
+    """Unbiased block quantize->dequantize of a flat float32 stream.
+    Draws the stochastic-rounding dither from ``key`` (threefry). This is
+    the FedMM Quant operator (A4) on the wire-critical path."""
+    u = jax.random.uniform(key, x.shape)
+    return quantize_dequantize_with_dither(x, u, bits=bits, block=block)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window",

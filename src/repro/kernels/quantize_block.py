@@ -10,6 +10,12 @@ on-chip in one pass (one HBM read + one HBM write per element).
 Grid: 1-D over row-tiles of the (n_blocks, block) reshaped stream.
 BlockSpec keeps lanes = ``block`` (128-aligned for the VPU) and sublanes =
 ``rows_per_tile``.
+
+The kernel body is the SAME computation as ``ref.quantize_groups_ref`` (the
+pure-jnp oracle) — together they are the repo's single quantizer
+implementation. All callers reach it through ``core/compression.py``, which
+generates the dither, picks shard-aligned groups, and dispatches large flat
+leaves here (via ``ops.quantize_dequantize_with_dither``).
 """
 from __future__ import annotations
 

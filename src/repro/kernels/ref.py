@@ -14,20 +14,31 @@ import jax.numpy as jnp
 # block quantization (the FedMM communication hot spot, Algorithm 2 line 8/9)
 # ---------------------------------------------------------------------------
 
+def quantize_groups_ref(x, u, bits: int = 8):
+    """THE rounding semantics of the repo's quantizer, in grouped form.
+
+    x: (..., g) — quantization groups along the last axis; u: same shape,
+    uniform draws in [0,1) controlling the stochastic rounding. Returns the
+    dequantized array (what the server receives). ``quantize_block_ref``
+    and the Pallas kernel are this exact computation on a flat stream;
+    ``core/compression.py`` applies it with shard-aligned grouping."""
+    levels = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    y = x / safe * levels
+    lo = jnp.floor(y)
+    q = lo + (u < (y - lo)).astype(y.dtype)
+    deq = q * safe / levels
+    return jnp.where(scale > 0, deq, 0.0)
+
+
 def quantize_block_ref(x, u, bits: int = 8, block: int = 256):
     """Stochastic block quantize-dequantize. x: (n,) float32 (n % block == 0);
     u: (n,) uniform draws in [0,1) controlling the stochastic rounding.
     Returns the dequantized array (what the server receives)."""
-    levels = 2.0 ** (bits - 1) - 1.0
-    blocks = x.reshape(-1, block)
-    ub = u.reshape(-1, block)
-    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
-    safe = jnp.where(scale > 0, scale, 1.0)
-    y = blocks / safe * levels
-    lo = jnp.floor(y)
-    q = lo + (ub < (y - lo)).astype(y.dtype)
-    deq = q * safe / levels
-    return jnp.where(scale > 0, deq, 0.0).reshape(-1)
+    out = quantize_groups_ref(x.reshape(-1, block), u.reshape(-1, block),
+                              bits=bits)
+    return out.reshape(-1)
 
 
 # ---------------------------------------------------------------------------

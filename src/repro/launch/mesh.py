@@ -23,9 +23,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = int(np.prod(shape))
     devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    # jax.sharding.AxisType only exists on newer jax; Auto is the default
+    # axis type there, so omitting it is equivalent on older releases.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.sharding.Mesh(devices, axes)
     return jax.sharding.Mesh(
-        devices, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        devices, axes, axis_types=(axis_type.Auto,) * len(axes))
 
 
 def client_axes(multi_pod: bool):

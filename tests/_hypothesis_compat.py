@@ -1,0 +1,29 @@
+"""Graceful degradation when hypothesis is not installed: property tests
+skip individually while the non-property tests in the same module keep
+running (a module-level ``pytest.importorskip`` would drop those too).
+
+Usage:  ``from _hypothesis_compat import given, settings, st``
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+    def _skip_factory(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    given = settings = _skip_factory
+
+    class _FakeStrategies:
+        """Accepts any strategy construction; values are never used because
+        the test body is skip-marked before it can run."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _FakeStrategies()

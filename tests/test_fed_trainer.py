@@ -24,6 +24,7 @@ def _setup(arch="phi3-medium-14b", n_clients=2, **kw):
     return model, fcfg, state, step, batch
 
 
+@pytest.mark.slow
 def test_loss_decreases_over_rounds():
     model, fcfg, state, step, batch = _setup(p=1.0, alpha=0.0, quant_bits=0)
     losses = []
@@ -33,6 +34,7 @@ def test_loss_decreases_over_rounds():
     assert losses[-1] < losses[0] - 0.1
 
 
+@pytest.mark.slow
 def test_equals_prox_sgd_when_unfederated():
     """n=1 client, p=1, no quant, alpha=0, gamma=1: the FedMM-LM round is
     exactly one proximal-SGD step theta <- T(theta - rho grad) in the mirror
@@ -58,8 +60,16 @@ def test_quantization_preserves_convergence():
         losses.append(float(m["loss"]))
     assert losses[-1] < losses[0] - 0.05
     assert np.isfinite(losses).all()
+    # unified-compressor communication accounting is surfaced per round
+    comp = FT.resolve_compressor(fcfg)
+    assert float(m["comm_bytes"]) == pytest.approx(
+        comp.payload_bytes(state.s_hat) * float(m["n_active"]))
+    from repro.core.compression import effective_omega
+    assert float(m["omega_eff"]) == pytest.approx(
+        effective_omega(comp.omega, fcfg.p), rel=1e-6)
 
 
+@pytest.mark.slow
 def test_partial_participation_masks_clients():
     model, fcfg, state, step, batch = _setup(n_clients=4, p=0.5, alpha=0.1,
                                              quant_bits=0)
@@ -71,6 +81,7 @@ def test_partial_participation_masks_clients():
     assert 0.2 < np.mean(actives) / 4.0 < 0.85  # ~p on average (40 draws)
 
 
+@pytest.mark.slow
 def test_server_cv_equals_mean_of_client_cvs():
     """Proposition 5 at LM scale."""
     model, fcfg, state, step, batch = _setup(n_clients=3, p=0.5, alpha=0.3,
@@ -90,6 +101,7 @@ def test_choose_client_layout():
     assert FT.choose_client_layout(400e9, multi_pod=False) == (2, "logical")
 
 
+@pytest.mark.slow
 def test_no_cv_mode_trains_and_drops_state():
     """use_cv=False (Theorem 1's alpha=0 regime): no V/V_i state, loss
     still decreases under full participation."""
@@ -109,6 +121,7 @@ def test_no_cv_mode_trains_and_drops_state():
     assert losses[-1] < losses[0]
 
 
+@pytest.mark.slow
 def test_int8_kv_cache_decode_close_to_bf16():
     """Quantized KV cache (perf lever): decode logits within quantization
     noise of the full-precision cache."""

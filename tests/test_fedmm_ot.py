@@ -66,6 +66,7 @@ def test_l2_uvp_zero_for_true_map():
     assert float(ot.l2_uvp(tmap, tmap, x, cov_q)) == pytest.approx(0.0)
 
 
+@pytest.mark.slow
 def test_fedmm_ot_improves_l2_uvp():
     """A few FedMM-OT rounds reduce L2-UVP on a Gaussian->Gaussian task."""
     d, n_clients = 2, 4

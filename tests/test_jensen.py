@@ -60,6 +60,7 @@ class TestGMMEM:
         g = jax.grad(m_obj)(means_hat)
         assert float(jnp.abs(g).max()) < 1e-4
 
+    @pytest.mark.slow
     def test_federated_em_heterogeneous(self):
         """FedEM = FedMM with the Jensen surrogate (Dieuleveut et al. 2021):
         clients hold different mixture components yet the federated EM

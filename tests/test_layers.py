@@ -74,6 +74,7 @@ class TestRoPE:
 
 
 class TestMamba:
+    @pytest.mark.slow
     def test_scan_equals_stepwise(self):
         cfg = C.get("jamba-1.5-large-398b").reduced()
         params = M.mamba_init(KEY, cfg, jnp.float32)

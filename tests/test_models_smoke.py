@@ -16,13 +16,19 @@ from repro.optim.optimizers import sgd_init, sgd_update
 KEY = jax.random.PRNGKey(0)
 S = 32  # multiple of the reduced sliding window (16)
 
+# tier-1 default keeps one attention and one recurrent arch; the full
+# per-arch sweep is the slow tier (`-m slow`)
+FAST_ARCHS = {"phi3-medium-14b", "rwkv6-3b"}
+ARCH_PARAMS = [pytest.param(a, marks=[] if a in FAST_ARCHS
+                            else pytest.mark.slow) for a in C.ARCH_IDS]
+
 
 @pytest.fixture(scope="module")
 def models():
     return {aid: build_model(C.get(aid).reduced()) for aid in C.ARCH_IDS}
 
 
-@pytest.mark.parametrize("aid", C.ARCH_IDS)
+@pytest.mark.parametrize("aid", ARCH_PARAMS)
 def test_forward_and_train_step(models, aid):
     model = models[aid]
     cfg = model.cfg
@@ -41,7 +47,7 @@ def test_forward_and_train_step(models, aid):
     assert float(model.loss_fn(params2, batch)) < float(loss)
 
 
-@pytest.mark.parametrize("aid", C.ARCH_IDS)
+@pytest.mark.parametrize("aid", ARCH_PARAMS)
 def test_prefill_decode_shapes_no_nan(models, aid):
     model = models[aid]
     cfg = model.cfg
@@ -83,12 +89,13 @@ def test_decode_consistency_recurrent(models, aid):
                                rtol=5e-3, atol=5e-3)
 
 
-@pytest.mark.parametrize("aid", ["phi3-medium-14b", "gemma3-12b",
-                                 "qwen3-moe-235b-a22b", "internvl2-26b",
-                                 "whisper-base", "jamba-1.5-large-398b",
-                                 "llama4-maverick-400b-a17b",
-                                 "deepseek-coder-33b", "mistral-large-123b"]
-                         )
+@pytest.mark.parametrize(
+    "aid", [pytest.param(a, marks=[] if a in FAST_ARCHS else pytest.mark.slow)
+            for a in ["phi3-medium-14b", "gemma3-12b",
+                      "qwen3-moe-235b-a22b", "internvl2-26b",
+                      "whisper-base", "jamba-1.5-large-398b",
+                      "llama4-maverick-400b-a17b",
+                      "deepseek-coder-33b", "mistral-large-123b"]])
 def test_decode_consistency_attention(models, aid):
     """decode(prefill(x[:S], cache_len=S+8), x[S], pos=S) must equal the
     last-token logits of prefill(x[:S+1]) exactly: the cache keeps position i

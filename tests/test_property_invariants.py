@@ -6,12 +6,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import compression as C
+from repro.core.compression import group_size, quantize_leaf
 from repro.core.surrogate import (tree_add, tree_lerp, tree_scale, tree_sub,
                                   tree_weighted_sum)
-from repro.fed.trainer import _group_size, _quantize_leaf, T_map, FedLMConfig
+from repro.fed.trainer import T_map, FedLMConfig
 
 
 @settings(max_examples=25, deadline=None)
@@ -45,9 +47,9 @@ def test_sa_update_stays_in_convex_hull(gamma, seed):
 @settings(max_examples=30, deadline=None)
 @given(st.integers(1, 4096), st.sampled_from([64, 128, 256]))
 def test_quantizer_group_is_shard_safe(D, block):
-    """_group_size returns a power-of-2 group that divides the per-shard
+    """group_size returns a power-of-2 group that divides the per-shard
     width for both 16- and 32-way sharding whenever those divide D."""
-    g = _group_size(D, block)
+    g = group_size(D, block)
     assert g >= 1 and (g & (g - 1)) == 0 and g <= block
     if D % 32 == 0:
         assert (D // 32) % g == 0
@@ -60,9 +62,10 @@ def test_quantizer_group_is_shard_safe(D, block):
 def test_quantize_leaf_bounded_error(rows, cols, seed):
     cols = cols * 2  # even
     x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols)) * 5.0
-    out = _quantize_leaf(x, jax.random.PRNGKey(seed + 1), bits=8, block=256)
+    out = quantize_leaf(jax.random.PRNGKey(seed + 1), x, bits=8, block=256,
+                        dither="hash", shard_safe=True)
     assert out.shape == x.shape and out.dtype == x.dtype
-    g = _group_size(cols, 256)
+    g = group_size(cols, 256)
     xg = x.reshape(rows, cols // g, g)
     scale = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
     bound = (scale / 127.0).repeat(g, -1).reshape(x.shape)

@@ -3,6 +3,7 @@ stochastic settings (Section 2.2-2.3)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import sassmm
 from repro.core.variational import DictLearnSpec, make_dictlearn
@@ -51,6 +52,7 @@ def test_gamma_1_over_t_is_empirical_average():
     assert jnp.allclose(state.s_hat, vals.mean(), atol=1e-6)
 
 
+@pytest.mark.slow
 def test_online_dictionary_learning_decreases_loss():
     """Online SA-SSMM on dictionary learning (Mairal 2010 correspondence)."""
     spec = DictLearnSpec(p=16, K=4, lam=0.1, eta=0.2)
