@@ -13,20 +13,26 @@ The paper's observations to reproduce:
 """
 from __future__ import annotations
 
-import time
+import dataclasses
+import os
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+# allow direct-script invocation (python benchmarks/fig1_dictlearn.py)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro import api
 from repro.configs.dictlearn import (MOVIELENS, SYNTH_HETEROGENEOUS,
                                      SYNTH_HOMOGENEOUS)
 from repro.core import compression as Cmp
-from repro.core import fedmm, naive
 from repro.core.variational import DictLearnSpec, make_dictlearn
 from repro.data.movielens import movielens_like
 from repro.data.synthetic import (balanced_kmeans_split, client_minibatch_fn,
                                   dictlearn_data, homogeneous_split)
+from benchmarks.run import harness
 
 
 def make_setting(exp, key, reduced=True):
@@ -52,9 +58,9 @@ def run_setting(exp, rounds=120, reduced=True, seed=0):
     key = jax.random.PRNGKey(seed)
     spec, clients, z = make_setting(exp, key, reduced)
     sur = make_dictlearn(spec)
-    cfg = fedmm.FedMMConfig(
-        n_clients=exp.n_clients, p=exp.participation, alpha=exp.alpha,
-        compressor=Cmp.block_quant(exp.quant_bits, 128))
+    fed = api.FederationSpec(
+        n_clients=exp.n_clients, participation=exp.participation,
+        alpha=exp.alpha, compressor=Cmp.block_quant(exp.quant_bits, 128))
     batch_fn = client_minibatch_fn(clients, exp.batch_size)
     gamma = lambda t: exp.beta_stepsize / jnp.sqrt(exp.beta_stepsize + t)
 
@@ -62,14 +68,16 @@ def run_setting(exp, rounds=120, reduced=True, seed=0):
     s0 = sur.s_bar(z[:128], theta0)
     eval_z = z[:512]
 
-    t0 = time.time()
-    st_f, hist_f = fedmm.run(sur, s0, batch_fn, gamma, key, cfg, rounds,
-                             eval_batch=eval_z)
-    st_n, hist_n = naive.run(sur, theta0, batch_fn, gamma, key, cfg, rounds,
-                             eval_batch=eval_z,
-                             surrogate_diag_batches=clients[:, :128])
-    dt = time.time() - t0
-    return {"fedmm": hist_f, "naive": hist_n, "seconds": dt}
+    # FedMM (S-space) vs the naive baseline: same spec, one flag flipped
+    _, hist_f, dt_f = harness(sur, s0, batch_fn, gamma, spec=fed, key=key,
+                              rounds=rounds, eval_batch=eval_z,
+                              track_mirror=True)
+    _, hist_n, dt_n = harness(
+        sur, theta0, batch_fn, gamma,
+        spec=dataclasses.replace(fed, aggregation="parameter"), key=key,
+        rounds=rounds, eval_batch=eval_z,
+        diag=("e_s_p", api.mean_oracle_diag(sur, clients[:, :128])))
+    return {"fedmm": hist_f, "naive": hist_n, "seconds": dt_f + dt_n}
 
 
 def main(reduced=True, rounds=120):

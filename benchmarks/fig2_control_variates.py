@@ -10,31 +10,39 @@ isolating the PP-heterogeneity noise). The paper's observations:
 """
 from __future__ import annotations
 
+import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+# allow direct-script invocation (python benchmarks/fig2_control_variates.py)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro import api
 from repro.configs.dictlearn import (MOVIELENS, SYNTH_HETEROGENEOUS,
                                      SYNTH_HOMOGENEOUS)
-from repro.core import fedmm
 from repro.core.variational import make_dictlearn
 from benchmarks.fig1_dictlearn import make_setting
+from benchmarks.run import harness
 
 
 def run_setting(exp, alpha, rounds=120, reduced=True, seed=0):
     key = jax.random.PRNGKey(seed)
     spec, clients, z = make_setting(exp, key, reduced)
     sur = make_dictlearn(spec)
-    cfg = fedmm.FedMMConfig(n_clients=exp.n_clients, p=0.5, alpha=alpha)
-    # exact local expectation oracle: the full client shard every round
-    batch_fn = lambda t, k: clients
+    fed = api.FederationSpec(n_clients=exp.n_clients, participation=0.5,
+                             alpha=alpha)
+    # exact local expectation oracle: the full client shard every round —
+    # a static (n, ...) pytree, which the driver broadcasts into the scan
     gamma = lambda t: exp.beta_stepsize / jnp.sqrt(exp.beta_stepsize + t)
     theta0 = jax.random.normal(key, (spec.p, spec.K)) * 0.1
     s0 = sur.s_bar(z[:128], theta0)
-    st, hist = fedmm.run(sur, s0, batch_fn, gamma, key, cfg, rounds,
-                         eval_batch=z[:512])
+    _, hist, _ = harness(sur, s0, clients, gamma, spec=fed, key=key,
+                         rounds=rounds, eval_batch=z[:512],
+                         track_mirror=True)
     return hist
 
 

@@ -8,13 +8,20 @@ observation: FedMM-OT converges faster than FedAdam across dimensions.
 """
 from __future__ import annotations
 
+import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+# allow direct-script invocation (python benchmarks/fig3_ot.py)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro import api
 from repro.core import fedmm_ot as ot
+from benchmarks.run import harness
 
 
 def make_problem(d, key, n_clients=10, n_per_client=128, n_q=512):
@@ -41,20 +48,20 @@ def run_dim(d, rounds=60, seed=0):
     spec = ot.ICNNSpec(dim=d, hidden=(64, 64, 64), strong_convexity=0.3)
     n = prob["client_x"].shape[0]
 
-    # --- FedMM-OT (Algorithm 3); line-6 best response = 5 local steps ---
+    # --- FedMM-OT (Algorithm 3) on the unified driver; line-6 best
+    # response = 5 local steps; L2-UVP recorded per round via the loss hook
     cfg = ot.FedOTConfig(n_clients=n, p=1.0, alpha=0.01, lam=4.0,
                          client_lr=2e-2, client_steps=5,
                          server_steps=10, server_lr=5e-3)
-    st = ot.init(key, spec, cfg)
-    step = jax.jit(lambda s, k: ot.step(s, spec, cfg, prob["client_x"],
-                                        prob["y_q"], 1.0, k))
-    uvp_mm = []
-    for t in range(rounds):
-        st, _ = step(st, jax.random.PRNGKey(t))
-        if t % 10 == 9 or t == rounds - 1:
-            fit = lambda xx: ot.icnn_grad(st.omega, spec, xx)
-            uvp_mm.append(float(ot.l2_uvp(fit, prob["true_map"],
-                                          prob["x_eval"], prob["cov_q"])))
+    st0 = ot.init(key, spec, cfg)
+    problem = ot.make_ot_problem(spec, cfg, prob["y_q"],
+                                 uvp_eval=(prob["true_map"], prob["cov_q"]))
+    _, hist_mm, _ = harness(problem, st0.omega, prob["client_x"], 1.0,
+                            spec=ot.ot_federation_spec(cfg), key=key,
+                            rounds=rounds, eval_batch=prob["x_eval"],
+                            eval_every=10, state0=ot.to_driver(st0))
+    uvp_mm = [h["loss"] for t, h in enumerate(hist_mm)
+              if t % 10 == 9 or t == rounds - 1]
 
     # --- FedAdam baseline ---
     fa = ot.fedadam_init(key, spec)

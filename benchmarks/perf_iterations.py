@@ -9,6 +9,12 @@ three roofline terms vs the paper-faithful baseline. Run ONE pair at a time
   PYTHONPATH=src python -m benchmarks.perf_iterations --pair train
   PYTHONPATH=src python -m benchmarks.perf_iterations --pair moe
 
+``--driver`` times the unified ``repro.api.run`` trajectory driver
+(rounds/sec, scan-jitted vs per-round python loop) on the federated
+dictionary-learning workload and records a ``pair="driver"`` row:
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations --driver
+
 Results append to results/perf_log.json; the narrative lives in
 EXPERIMENTS.md §Perf.
 """
@@ -77,15 +83,87 @@ PAIRS = {
 }
 
 
+def bench_driver(rounds: int = 200, log_path: str = "results/perf_log.json",
+                 seed: int = 0):
+    """The scan-jitted ``repro.api.run`` vs the per-round python loop
+    (identical math — the legacy ``fedmm.run`` dispatch pattern) on the
+    federated dictionary-learning workload. Records a ``pair="driver"``
+    rounds/sec row in the perf log; returns the entry."""
+    import time
+
+    import jax
+
+    from repro import api
+    from repro.core import compression as Cmp
+    from repro.core.variational import DictLearnSpec, make_dictlearn
+    from repro.data.synthetic import (balanced_kmeans_split,
+                                      client_minibatch_fn, dictlearn_data)
+
+    key = jax.random.PRNGKey(seed)
+    spec = DictLearnSpec(p=30, K=8, lam=0.1, eta=0.2, ista_iters=30)
+    z, _ = dictlearn_data(key, 2000, spec.p, spec.K)
+    clients = balanced_kmeans_split(key, z, n_clients=10, n_iters=5)
+    problem = api.as_problem(make_dictlearn(spec))
+    fed = api.FederationSpec(n_clients=10, participation=0.5, alpha=0.01,
+                            compressor=Cmp.block_quant(8, 128))
+    batch_fn = client_minibatch_fn(clients, batch_size=50)
+    gamma = api.decaying_stepsize(0.05)
+    s0 = problem.s_bar(z[:64], jax.random.normal(key, (spec.p, spec.K)) * 0.1)
+
+    def timed(scan):
+        # warm-up run compiles; second run measures steady-state dispatch
+        common = dict(spec=fed, key=key, n_rounds=rounds,
+                      eval_batch=z[:512], track_mirror=True, scan=scan)
+        t0 = time.time()
+        state, hist = api.run(problem, s0, batch_fn, gamma, **common)
+        jax.block_until_ready(state.x)
+        compile_s = time.time() - t0
+        t0 = time.time()
+        state, hist = api.run(problem, s0, batch_fn, gamma, **common)
+        jax.block_until_ready(state.x)
+        return rounds / (time.time() - t0), compile_s
+
+    rps_python, _ = timed(scan=False)
+    rps_scan, compile_s = timed(scan=True)
+    entry = {"pair": "driver", "variant": "scan_vs_python_loop",
+             "hypothesis": "one lax.scan over the trajectory removes "
+             "per-round dispatch + host metric sync -> rounds/sec up",
+             "multi_pod": False,
+             "result": {"status": "ok", "rounds": rounds,
+                        "rounds_per_sec_python_loop": rps_python,
+                        "rounds_per_sec_scan": rps_scan,
+                        "speedup": rps_scan / rps_python,
+                        "scan_compile_s": compile_s}}
+    print(f"[driver] rounds/sec: python-loop={rps_python:.1f}  "
+          f"scan={rps_scan:.1f}  speedup={rps_scan / rps_python:.2f}x  "
+          f"(compile {compile_s:.1f}s, {rounds} rounds)")
+    log = json.load(open(log_path)) if os.path.exists(log_path) else []
+    log = [e for e in log if e.get("pair") != "driver"] + [entry]
+    os.makedirs(os.path.dirname(log_path) or ".", exist_ok=True)
+    json.dump(log, open(log_path, "w"), indent=1)
+    return entry
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--pair", choices=list(PAIRS), required=True)
+    ap.add_argument("--pair", choices=list(PAIRS))
+    ap.add_argument("--driver", action="store_true",
+                    help="benchmark the unified api.run scan driver vs the "
+                    "per-round python loop (rounds/sec)")
+    ap.add_argument("--rounds", type=int, default=200,
+                    help="--driver: trajectory length to time")
     ap.add_argument("--variant", default=None,
                     help="run only this named variant (plus baseline if "
                     "missing from the log)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--log", default="results/perf_log.json")
     args = ap.parse_args()
+
+    if args.driver:
+        bench_driver(rounds=args.rounds, log_path=args.log)
+        return
+    if args.pair is None:
+        ap.error("--pair is required unless --driver is given")
 
     from repro.launch.dryrun import compile_one
 

@@ -1,13 +1,36 @@
-"""Benchmark entrypoint: one function per paper table/figure + kernel
-microbenches + the roofline table (if dry-run results exist).
+"""Benchmark entrypoint + the shared figure harness.
 
-Prints ``name,us_per_call,derived`` CSV rows followed by per-figure
-summaries. Reduced problem sizes keep the whole suite CPU-friendly
-(~10-15 min); pass --full for paper-scale settings.
+``harness`` is the ONE run-loop + metrics-collection helper the three
+figure reproductions (fig1/fig2/fig3) build on: it drives ``repro.api.run``
+(the scan-jitted unified driver), times the trajectory, and returns the
+legacy list-of-float-dicts history the figures aggregate. Each figure file
+now only declares its problem, its FederationSpec(s) and its summary rows.
+
+As an entrypoint: one function per paper table/figure + kernel microbenches
++ the roofline table (if dry-run results exist). Prints
+``name,us_per_call,derived`` CSV rows followed by per-figure summaries.
+Reduced problem sizes keep the whole suite CPU-friendly (~10-15 min); pass
+--full for paper-scale settings.
 """
 from __future__ import annotations
 
 import argparse
+import time
+
+from repro import api
+
+
+def harness(problem, x0, data, schedule, *, spec=None, key=None,
+            rounds=None, eval_batch=None, track_mirror=False, diag=None,
+            state0=None, **kw):
+    """Run one trajectory on the unified driver and return
+    ``(final_state, history list-of-float-dicts, seconds)``."""
+    t0 = time.time()
+    state, hist = api.run(api.as_problem(problem), x0, data, schedule,
+                          spec=spec, key=key, n_rounds=rounds,
+                          eval_batch=eval_batch, track_mirror=track_mirror,
+                          diag=diag, state0=state0, **kw)
+    return state, api.history_list(hist), time.time() - t0
 
 
 def main() -> None:

@@ -12,7 +12,7 @@ penalized M-step T(s) on the server.
 import jax
 import jax.numpy as jnp
 
-from repro.core import fedmm
+from repro import api
 from repro.core.jensen import GMMSpec, gmm_neg_loglik, make_gmm_em
 from repro.data.synthetic import gmm_data
 
@@ -37,11 +37,12 @@ z_all = clients.reshape(-1, p)
 means0 = means_true + 2.0 * jax.random.normal(key, (L, p))
 s0 = sur.s_bar(z_all[:200], means0)
 
-cfg = fedmm.FedMMConfig(n_clients=n_clients, p=0.75, alpha=0.1)
-state, hist = fedmm.run(sur, s0, lambda t, k: clients,
-                        lambda t: 1.0 / jnp.sqrt(t), key, cfg, 80)
+fed = api.FederationSpec(n_clients=n_clients, participation=0.75, alpha=0.1)
+state, hist = api.run(api.as_problem(sur), s0, lambda t, k: clients,
+                      lambda t: 1.0 / jnp.sqrt(t), spec=fed, key=key,
+                      n_rounds=80)
 
-means_hat = sur.T(state.s_hat)
+means_hat = sur.T(state.x)
 nll0 = gmm_neg_loglik(z_all, means0, spec)
 nll1 = gmm_neg_loglik(z_all, means_hat, spec)
 print(f"penalized NLL: {float(nll0):.4f} -> {float(nll1):.4f}")

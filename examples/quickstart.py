@@ -1,20 +1,36 @@
-"""Quickstart: the paper in ~60 lines.
+"""Quickstart: the paper in ~60 lines, on the unified ``repro.api``.
 
-1. Build a linearly parameterized surrogate (dictionary learning, Example 3).
-2. Run centralized SA-SSMM (Algorithm 1).
-3. Run FedMM (Algorithm 2) with heterogeneous clients, partial participation,
-   8-bit compression and control variates — and watch it match the
-   centralized solution while the naive Theta-aggregation baseline stalls.
+The paper's point — and this repo's architecture — is that centralized
+SA-SSMM (Algorithm 1), FedMM (Algorithm 2) and the naive parameter-space
+baseline are ONE surrogate-MM recursion with federation concerns layered
+on top. Correspondingly there is ONE driver:
 
-    PYTHONPATH=src python examples/quickstart.py
+1. Build an ``MMProblem`` (here: dictionary learning, Example 3 — any
+   ``core.surrogate.Surrogate`` adapts via ``api.as_problem``).
+2. ``api.run(problem, s0, batches, gammas)`` with no ``FederationSpec``
+   is centralized SA-SSMM.
+3. Add a ``FederationSpec`` composing heterogeneous clients, Bernoulli-0.5
+   participation, 8-bit compression and control variates — same driver,
+   now FedMM, as one scan-jitted XLA computation.
+4. Flip ONE flag (``aggregation="parameter"``) for the paper's cautionary
+   naive baseline, and watch it stall while FedMM matches centralized.
+
+    PYTHONPATH=src python examples/quickstart.py [--rounds 100]
 """
-import jax
-import jax.numpy as jnp
+import argparse
+import dataclasses
 
-from repro.core import compression, fedmm, naive, sassmm
+import jax
+
+from repro import api
+from repro.core import compression
 from repro.core.variational import DictLearnSpec, make_dictlearn
 from repro.data.synthetic import (balanced_kmeans_split, client_minibatch_fn,
                                   dictlearn_data)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=100)
+args = ap.parse_args()
 
 key = jax.random.PRNGKey(0)
 
@@ -22,28 +38,35 @@ key = jax.random.PRNGKey(0)
 spec = DictLearnSpec(p=30, K=8, lam=0.1, eta=0.2)
 z, theta_star = dictlearn_data(key, 2000, spec.p, spec.K)
 clients = balanced_kmeans_split(key, z, n_clients=10, n_iters=5)
-sur = make_dictlearn(spec)
+problem = api.as_problem(make_dictlearn(spec))
 
 theta0 = jax.random.normal(key, (spec.p, spec.K)) * 0.1
-s0 = sur.s_bar(z[:64], theta0)
-gamma = sassmm.decaying_stepsize(0.05)
+s0 = problem.s_bar(z[:64], theta0)
+gamma = api.decaying_stepsize(0.05)           # the Section 6 schedule
 
-# --- centralized SA-SSMM ----------------------------------------------------
-state, hist = sassmm.run(sur, s0, [z[i % 20 * 100:(i % 20 + 1) * 100]
-                                   for i in range(100)], gamma)
+# --- centralized SA-SSMM: api.run with no FederationSpec --------------------
+batches = [z[i % 20 * 100:(i % 20 + 1) * 100] for i in range(args.rounds)]
+state, hist = api.run(problem, s0, batches, gamma)
+hist = api.history_list(hist)
 print(f"SA-SSMM      loss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
 
-# --- FedMM: PP + 8-bit quantization + control variates ----------------------
-cfg = fedmm.FedMMConfig(n_clients=10, p=0.5, alpha=0.01,
-                        compressor=compression.block_quant(8, 128))
+# --- FedMM: the same driver + a FederationSpec ------------------------------
+fed = api.FederationSpec(n_clients=10, participation=0.5, alpha=0.01,
+                         compressor=compression.block_quant(8, 128))
 batch_fn = client_minibatch_fn(clients, batch_size=50)
-fed_state, fed_hist = fedmm.run(sur, s0, batch_fn, gamma, key, cfg,
-                                n_rounds=100, eval_batch=z[:512])
+fed_state, fed_hist = api.run(problem, s0, batch_fn, gamma, spec=fed,
+                              key=key, n_rounds=args.rounds,
+                              eval_batch=z[:512])
+fed_hist = api.history_list(fed_hist)
 print(f"FedMM        loss: {fed_hist[0]['loss']:.4f} -> {fed_hist[-1]['loss']:.4f}"
-      f"   E^s: {fed_hist[0]['e_s']:.2e} -> {fed_hist[-1]['e_s']:.2e}")
+      f"   E^s: {fed_hist[0]['e_s']:.2e} -> {fed_hist[-1]['e_s']:.2e}"
+      f"   uplink: {sum(h['comm_bytes'] for h in fed_hist) / 1e6:.1f} MB")
 
-# --- naive Theta-space aggregation (the paper's cautionary baseline) --------
-naive_state, naive_hist = naive.run(sur, theta0, batch_fn, gamma, key, cfg,
-                                    n_rounds=100, eval_batch=z[:512])
+# --- naive Theta-space aggregation: ONE FLAG, not a fork --------------------
+naive_spec = dataclasses.replace(fed, aggregation="parameter")
+naive_state, naive_hist = api.run(problem, theta0, batch_fn, gamma,
+                                  spec=naive_spec, key=key,
+                                  n_rounds=args.rounds, eval_batch=z[:512])
+naive_hist = api.history_list(naive_hist)
 print(f"naive(Theta) loss: {naive_hist[0]['loss']:.4f} -> {naive_hist[-1]['loss']:.4f}")
 print("\nKey message (Section 3.1): aggregate the SURROGATE, not the parameter.")

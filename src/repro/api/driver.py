@@ -1,0 +1,458 @@
+"""The ONE MM driver: init/step/run for every algorithm in the repo.
+
+``step`` is Algorithm 2 with every federation concern read off a
+``FederationSpec``; ``centralized_step`` is Algorithm 1 (SA-SSMM, the
+n=1-silo degenerate case with no federation plumbing at all); ``run`` drives
+either as a single ``lax.scan``-jitted loop with stacked-pytree metrics
+(one XLA computation for the whole trajectory — no per-round Python
+dispatch, no per-round host sync).
+
+The legacy entry points (``core.sassmm.run``, ``core.fedmm.run/step``,
+``core.naive.run/step``, ``core.fedmm_ot.step``/``fedadam_step``) are thin
+shims over this module and are trajectory-identical to their historical
+implementations: the host-side key chain (``key -> k_round, k_batch`` per
+round), the A5/A4 key folds, and the arithmetic order of the update all
+match the old loops operation for operation —
+``tests/test_api_golden.py`` pins this against frozen copies.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.surrogate import (tree_add, tree_axpy, tree_lerp, tree_scale,
+                              tree_sub, tree_sq_norm)
+from .problem import MMProblem, as_problem
+from .schedule import resolve_schedule, schedule_length
+from .spec import FederationSpec, participation_draw
+
+Pytree = Any
+
+# stacked batches above this many bytes force the python-loop fallback
+# (scan would materialize the whole trajectory's data on device)
+SCAN_BATCH_BYTES_MAX = 1 << 30
+
+
+class DriverState(NamedTuple):
+    """Unified iterate: ``x`` is Shat_t (surrogate aggregation) or theta_t
+    (parameter aggregation); ``v``/``v_i`` the control variates (empty
+    pytrees when ``variates='off'``); ``aux`` problem-owned server state
+    (e.g. the FedMM-OT conjugate potential); ``opt`` server-optimizer state
+    (e.g. FedAdam's moments)."""
+    x: Pytree
+    v: Pytree
+    v_i: Pytree
+    aux: Pytree
+    opt: Pytree
+    step: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def variates_at_init(problem: MMProblem, x0, client_batches,
+                     param_space: bool = False):
+    """V_{0,i} = h_i(Shat_0) (Theorem 1's heterogeneity-robust warm start):
+    one full local expectation per client. With ``param_space=True`` the
+    warm start lives in Theta-space like the naive iterate:
+    V_{0,i} = T(Sbar_i(theta_0)) - theta_0 (the eq.-21 local MM drift)."""
+    theta0 = x0 if param_space else problem.T(x0)
+
+    def one(batch):
+        s_i = problem.s_bar(batch, theta0)
+        out = problem.T(s_i) if param_space else s_i
+        return tree_sub(out, x0)
+
+    return jax.vmap(one)(client_batches)
+
+
+def init(problem, x0, spec: FederationSpec, v0_i=None,
+         init_batches=None) -> DriverState:
+    problem = as_problem(problem)
+    if spec.use_variates:
+        if v0_i is None and spec.variates == "at-init":
+            if init_batches is None:
+                raise ValueError("variates='at-init' needs init_batches "
+                                 "(an (n, ...) pytree of client data)")
+            v0_i = variates_at_init(problem, x0, init_batches,
+                                    spec.aggregation == "parameter")
+        if v0_i is None:
+            v0_i = jax.tree.map(
+                lambda x: jnp.zeros((spec.n_clients,) + x.shape, x.dtype), x0)
+        mu = spec.client_weights()
+        v = jax.tree.map(lambda x: jnp.tensordot(mu, x, axes=1), v0_i)
+    else:
+        v, v0_i = (), ()
+    aux = problem.init_aux() if problem.init_aux is not None else ()
+    opt = problem.init_opt(x0) if problem.init_opt is not None else ()
+    return DriverState(x=x0, v=v, v_i=v0_i, aux=aux, opt=opt,
+                       step=jnp.asarray(0))
+
+
+def centralized_init(problem, s0) -> DriverState:
+    del problem
+    return DriverState(x=s0, v=(), v_i=(), aux=(), opt=(),
+                       step=jnp.asarray(0))
+
+
+# ---------------------------------------------------------------------------
+# step
+# ---------------------------------------------------------------------------
+
+def centralized_step(problem: MMProblem, state: DriverState, batch, gamma):
+    """Algorithm 1 (SA-SSMM): oracle, SA blend, projection."""
+    theta = problem.T(state.x)
+    s_oracle = problem.s_bar(batch, theta)                 # line 2
+    s_new = tree_lerp(state.x, s_oracle, gamma)            # line 3
+    s_new = problem.project(s_new)
+    drift = tree_sub(s_new, state.x)
+    metrics = {"e_s": tree_sq_norm(drift) / (gamma ** 2)}  # E^s diagnostic
+    return state._replace(x=s_new, step=state.step + 1), metrics
+
+
+def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
+         client_batches, gamma, key, active=None):
+    """One federated MM round (Algorithm 2, every axis of the spec applied).
+    ``client_batches`` is a pytree with a leading client axis of size n.
+    ``active`` optionally overrides the A5 draw with a precomputed (n,)
+    bool/0-1 mask (callers that own their participation RNG stream)."""
+    n, p, alpha = spec.n_clients, spec.participation, spec.alpha
+    mu = spec.client_weights()
+    param_space = spec.aggregation == "parameter"
+    use_v = spec.use_variates
+
+    # line 4: broadcast — the mirror image T(Shat) (surrogate mode), the
+    # iterate itself (parameter mode), or the problem's custom view
+    if param_space:
+        view = state.x
+    elif problem.view is not None:
+        view = problem.view(state.x, state.aux)
+    else:
+        view = problem.T(state.x)
+
+    drawn, quant_keys = participation_draw(key, spec)      # A5
+    if active is None:
+        active = drawn
+    mask = active.astype(jnp.float32)
+
+    def client_update(batch, v_i, qkey):
+        s_i = problem.s_bar(batch, view)                   # line 6 (oracle)
+        out = problem.T(s_i) if param_space else s_i       # eq. 21 local MM
+        if spec.delta == "oracle":
+            d = out                                        # raw payload
+        else:
+            d = tree_sub(out, state.x)                     # line 7 (drift)
+            if use_v:
+                d = tree_sub(d, v_i)
+        return spec.compressor.apply(qkey, d)              # line 9 (A4)
+
+    if use_v:
+        q = jax.vmap(client_update, in_axes=(0, 0, 0))(
+            client_batches, state.v_i, quant_keys)
+    else:
+        q = jax.vmap(lambda b, k: client_update(b, None, k),
+                     in_axes=(0, 0))(client_batches, quant_keys)
+    # non-participating clients send nothing / keep V_i
+    q = jax.tree.map(
+        lambda x: x * mask.reshape((n,) + (1,) * (x.ndim - 1)), q)
+
+    # client control variates (lines 8/11)
+    v_i_new = (jax.tree.map(lambda v, dq: v + (alpha / p) * dq,
+                            state.v_i, q) if use_v else ())
+
+    # server aggregation (line 13)
+    agg = jax.tree.map(lambda x: jnp.tensordot(mu, x, axes=1), q)
+    if spec.normalization == "realized":
+        scale = n / jnp.maximum(jnp.sum(mask), 1.0)
+        h = tree_scale(agg, scale)
+    else:
+        h = tree_scale(agg, 1.0 / p)
+    if use_v:
+        h = tree_add(state.v, h)
+
+    # server update (lines 15-16): SA step + projection, unless the problem
+    # supplies its own server optimizer (e.g. FedAdam)
+    if problem.server_opt is not None:
+        x_new, opt_new = problem.server_opt(state.x, h, gamma, state.opt)
+    else:
+        x_new = tree_axpy(gamma, h, state.x)
+        if not param_space:
+            x_new = problem.project(x_new)
+        opt_new = state.opt
+
+    # server control variate (line 17)
+    v_new = (tree_add(state.v, tree_scale(agg, alpha / p)) if use_v
+             else ())
+
+    # problem-owned server state (FedMM-OT line 16: conjugate update)
+    if problem.server_step is not None:
+        aux_new, aux_metrics = problem.server_step(state.aux, x_new)
+    else:
+        aux_new, aux_metrics = state.aux, {}
+
+    drift = tree_sub(x_new, state.x)
+    comm = spec.compressor.round_metrics(state.x, p=p)
+    metrics = {
+        # E^s (surrogate) / E^p (parameter) — the Section 6 diagnostics
+        ("e_p" if param_space else "e_s"):
+            tree_sq_norm(drift) / (gamma ** 2),
+        "n_active": jnp.sum(mask),
+        "comm_bytes": comm["payload_bytes_per_client"] * jnp.sum(mask),
+        "omega_eff": jnp.asarray(comm["omega_eff"], jnp.float32),
+    }
+    if not param_space:
+        metrics["h_norm_sq"] = tree_sq_norm(h)
+    metrics.update(aux_metrics)
+    new_state = DriverState(x=x_new, v=v_new, v_i=v_i_new, aux=aux_new,
+                            opt=opt_new, step=state.step + 1)
+    return new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# run — the scan-jitted trajectory driver
+# ---------------------------------------------------------------------------
+
+def _tree_bytes(tree) -> int:
+    return sum(x.size * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def _stack_batches(batch_list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *batch_list)
+
+
+def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
+        key=None, n_rounds: Optional[int] = None, eval_batch=None,
+        eval_every: int = 1, track_mirror: bool = False, diag=None,
+        scan: bool = True, v0_i=None, init_batches=None,
+        state0: Optional[DriverState] = None):
+    """Drive ``n_rounds`` of the MM recursion; returns
+    ``(final DriverState, metrics)`` where metrics is a stacked-pytree dict
+    (each key an array with leading round axis). Use ``history_list`` for
+    the legacy list-of-float-dicts view.
+
+    data:
+      * centralized (``spec is None``): a list of batches or a stacked
+        pytree with a leading round axis;
+      * federated: a callable ``(t, key) -> (n, ...) client batch pytree``
+        (the legacy ``client_batch_fn``; evaluated on the host with the
+        legacy per-round ``k_batch`` chain, then stacked for the scan), or
+        a static ``(n, ...)`` pytree reused every round (exact local
+        expectations, e.g. Figure 2).
+
+    track_mirror: record ``e_p_s`` — mirror-sequence movement
+    ||T(x_{t+1}) - T(x_t)||^2 / gamma^2 (surrogate aggregation only).
+    diag: optional ``(name, fn)``; records ||fn(x_{t+1}) - fn(x_t)||^2 /
+    gamma^2 (e.g. the naive baseline's cross-space E^{s,p} diagnostic).
+    eval_every: evaluate the ``loss`` hook only every k-th round (and the
+    last); skipped rounds record NaN — use when the hook is expensive
+    (e.g. the fig-3 L2-UVP evaluation) so the scan does not pay for
+    values the caller discards.
+    scan: jit the whole trajectory as one ``lax.scan`` (default); False
+    falls back to a per-round python loop (same math, useful when stacked
+    batches would not fit or for debugging).
+    """
+    problem = as_problem(problem)
+
+    if spec is None:
+        return _run_centralized(problem, x0, data, schedule,
+                                n_rounds=n_rounds, scan=scan,
+                                state0=state0)
+
+    if key is None:
+        raise ValueError("federated run needs a PRNG key")
+    if n_rounds is None:
+        n_rounds = schedule_length(schedule)
+        if n_rounds is None:
+            raise ValueError("n_rounds required with a callable schedule")
+    gammas = resolve_schedule(schedule, n_rounds)
+    param_space = spec.aggregation == "parameter"
+    track_mirror = track_mirror and not param_space
+
+    # host-side key chain — replicates the legacy run loops exactly:
+    # each round consumes (k_round, k_batch) off the same chain
+    round_keys, batch_keys = [], []
+    static = not callable(data)
+    for t in range(n_rounds):
+        key, k_round, k_batch = jax.random.split(key, 3)
+        round_keys.append(k_round)
+        batch_keys.append(k_batch)
+    round_keys = jnp.stack(round_keys)
+    lazy = False
+    if static:
+        batches = data
+    else:
+        first = data(0, batch_keys[0])
+        if n_rounds * _tree_bytes(first) > SCAN_BATCH_BYTES_MAX:
+            # do NOT materialize the trajectory: generate each round's
+            # batch inside the loop, constant-memory like the legacy loops
+            if scan:
+                warnings.warn("stacked batches would exceed the scan "
+                              "budget; falling back to the per-round "
+                              "python loop")
+                scan = False
+            lazy, batches, first = True, None, None
+        else:
+            batch_list = [first] + [data(t, batch_keys[t])
+                                    for t in range(1, n_rounds)]
+            batches = _stack_batches(batch_list)
+            del batch_list, first   # the stack is the only resident copy
+
+    if state0 is None:
+        state0 = init(problem, x0, spec, v0_i=v0_i,
+                      init_batches=init_batches)
+
+    diag_name, diag_fn = diag if diag is not None else (None, None)
+
+    def round_metrics(state, m, gamma, theta_prev, diag_prev, t_idx):
+        """Post-step diagnostics; returns (m, theta_new, diag_new)."""
+        theta_new = diag_new = None
+        if track_mirror:
+            theta_new = problem.T(state.x)
+            m["e_p_s"] = (tree_sq_norm(tree_sub(theta_new, theta_prev))
+                          / gamma ** 2)
+        if diag_fn is not None:
+            diag_new = diag_fn(state.x)
+            m[diag_name] = (tree_sq_norm(tree_sub(diag_new, diag_prev))
+                            / gamma ** 2)
+        if problem.loss is not None and eval_batch is not None:
+            def eval_loss(_):
+                theta_eval = state.x if param_space else problem.T(state.x)
+                return jnp.asarray(problem.loss(eval_batch, theta_eval),
+                                   jnp.float32)
+            if eval_every > 1:
+                do = (((t_idx + 1) % eval_every == 0)
+                      | (t_idx == n_rounds - 1))
+                m["loss"] = jax.lax.cond(
+                    do, eval_loss, lambda _: jnp.float32(jnp.nan), None)
+            else:
+                theta_eval = state.x if param_space else problem.T(state.x)
+                m["loss"] = problem.loss(eval_batch, theta_eval)
+        return m, theta_new, diag_new
+
+    theta_prev0 = problem.T(state0.x) if track_mirror else ()
+    diag_prev0 = diag_fn(state0.x) if diag_fn is not None else ()
+
+    if scan:
+        def body(carry, xs):
+            state, theta_prev, diag_prev = carry
+            if static:
+                gamma, k, t_idx = xs
+                batch = batches
+            else:
+                gamma, k, t_idx, batch = xs
+            state, m = step(problem, spec, state, batch, gamma, k)
+            m, theta_new, diag_new = round_metrics(state, m, gamma,
+                                                   theta_prev, diag_prev,
+                                                   t_idx)
+            carry = (state,
+                     theta_new if track_mirror else (),
+                     diag_new if diag_fn is not None else ())
+            return carry, m
+
+        t_idxs = jnp.arange(n_rounds)
+        xs = ((gammas, round_keys, t_idxs) if static
+              else (gammas, round_keys, t_idxs, batches))
+        (state, _, _), hist = jax.lax.scan(
+            body, (state0, theta_prev0, diag_prev0), xs)
+        return state, hist
+
+    # python fallback: identical math, one jitted step per round
+    step_j = jax.jit(lambda st, b, g, k: step(problem, spec, st, b, g, k))
+    state, theta_prev, diag_prev = state0, theta_prev0, diag_prev0
+    hist = []
+    for t in range(n_rounds):
+        if static:
+            batch = batches
+        elif lazy:
+            batch = data(t, batch_keys[t])
+        else:
+            batch = jax.tree.map(lambda x: x[t], batches)
+        state, m = step_j(state, batch, gammas[t], round_keys[t])
+        m, theta_new, diag_new = round_metrics(state, m, gammas[t],
+                                               theta_prev, diag_prev,
+                                               jnp.asarray(t))
+        if track_mirror:
+            theta_prev = theta_new
+        if diag_fn is not None:
+            diag_prev = diag_new
+        hist.append(m)
+    return state, _stack_metrics(hist)
+
+
+def _run_centralized(problem: MMProblem, s0, data, schedule, *,
+                     n_rounds=None, scan=True, state0=None):
+    if isinstance(data, (list, tuple)):
+        if n_rounds is None:
+            n_rounds = len(data)
+        try:
+            batches = _stack_batches(list(data[:n_rounds]))
+        except (ValueError, TypeError):
+            batches, scan = list(data[:n_rounds]), False  # ragged batches
+    else:
+        batches = data
+        if n_rounds is None:
+            n_rounds = jax.tree.leaves(data)[0].shape[0]
+    gammas = resolve_schedule(schedule, n_rounds)
+    if state0 is None:
+        state0 = centralized_init(problem, s0)
+
+    def with_loss(state, m, batch):
+        if problem.loss is not None:
+            m = dict(m, loss=problem.loss(batch, problem.T(state.x)))
+        return m
+
+    if scan:
+        def body(state, xs):
+            gamma, batch = xs
+            state, m = centralized_step(problem, state, batch, gamma)
+            return state, with_loss(state, m, batch)
+
+        state, hist = jax.lax.scan(body, state0, (gammas, batches))
+        return state, hist
+
+    state, hist = state0, []
+    for t in range(n_rounds):
+        batch = (batches[t] if isinstance(batches, list)
+                 else jax.tree.map(lambda x: x[t], batches))
+        state, m = centralized_step(problem, state, batch, gammas[t])
+        hist.append(with_loss(state, m, batch))
+    return state, _stack_metrics(hist)
+
+
+def mean_oracle_diag(problem, diag_batches):
+    """Tbar(theta) = (1/n) sum_i Sbar_i(theta) on fixed per-client batches —
+    the Section 6 cross-space E^{s,p} diagnostic for parameter-space
+    aggregation. Pass as ``diag=("e_s_p", mean_oracle_diag(problem, b))``."""
+    problem = as_problem(problem)
+
+    def tbar(theta):
+        return jax.tree.map(
+            lambda x: jnp.mean(x, axis=0),
+            jax.vmap(lambda b: problem.s_bar(b, theta))(diag_batches))
+
+    return tbar
+
+
+# ---------------------------------------------------------------------------
+# metric views
+# ---------------------------------------------------------------------------
+
+def _stack_metrics(hist):
+    if not hist:
+        return {}
+    return {k: jnp.stack([jnp.asarray(m[k]) for m in hist])
+            for k in hist[0]}
+
+
+def history_list(hist) -> list:
+    """Stacked-pytree metrics -> the legacy list-of-float-dicts view."""
+    if not hist:
+        return []
+    arrs = {k: jax.device_get(v) for k, v in hist.items()}
+    n = len(next(iter(arrs.values())))
+    return [{k: float(v[t]) for k, v in arrs.items()} for t in range(n)]

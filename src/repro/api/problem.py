@@ -1,0 +1,72 @@
+"""MMProblem — the one protocol every workload implements.
+
+The paper's claim is that SA-SSMM, FedMM, the naive Theta-space baseline,
+FedMM-OT and the quadratic-surrogate LM trainer are ONE surrogate-MM
+recursion; ``MMProblem`` is that recursion's contract. It is a strict
+superset of ``core.surrogate.Surrogate`` (MM-1 + MM-2): the three mandatory
+pieces are the mirror oracle ``s_bar``, the minimizer map ``T`` and the
+S-space projection ``project``; everything else is an optional hook that a
+particular workload (ICNN-OT conjugate updates, FedAdam server optimizers)
+plugs in without forking the driver.
+
+Hooks
+-----
+view:        (s, aux) -> broadcast payload handed to every client oracle.
+             Defaults to ``T(s)`` (Algorithm 2 line 4: broadcast the mirror
+             image). FedMM-OT overrides it to ``(omega, theta)`` because the
+             client best-response needs the conjugate potential too.
+init_aux:    () -> auxiliary server state threaded through the rounds
+             (FedMM-OT: the conjugate potential theta + its Adam state).
+server_step: (aux, x_new) -> (aux_new, metrics) run after the SA update
+             (FedMM-OT line 16: a few Adam steps on the conjugate).
+server_opt:  (x, h, gamma, opt) -> (x_new, opt_new) replaces the SA server
+             update x + gamma * h entirely (FedAdam: Adam on the averaged
+             client gradients). ``opt`` comes from ``init_opt``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+from ..core.surrogate import Surrogate
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MMProblem:
+    """A surrogate-MM problem instance (MM-1 + MM-2 + driver hooks).
+
+    ``s_bar``/``T``/``project``/``loss``/``psi``/``phi``/``g`` have exactly
+    the ``core.surrogate.Surrogate`` semantics, so any existing Surrogate
+    converts losslessly via ``as_problem``.
+    """
+
+    s_bar: Callable[[Pytree, Pytree], Pytree]
+    T: Callable[[Pytree], Pytree]
+    project: Callable[[Pytree], Pytree] = lambda s: s
+    loss: Optional[Callable[[Pytree, Pytree], jnp.ndarray]] = None
+    psi: Optional[Callable[[Pytree], jnp.ndarray]] = None
+    phi: Optional[Callable[[Pytree], Pytree]] = None
+    g: Optional[Callable[[Pytree], jnp.ndarray]] = None
+    # --- driver hooks (all optional) --------------------------------------
+    view: Optional[Callable[[Pytree, Pytree], Pytree]] = None
+    init_aux: Optional[Callable[[], Pytree]] = None
+    server_step: Optional[Callable[[Pytree, Pytree], tuple]] = None
+    server_opt: Optional[Callable[[Pytree, Pytree, Any, Pytree], tuple]] = None
+    init_opt: Optional[Callable[[Pytree], Pytree]] = None
+
+
+def as_problem(obj, **hooks) -> MMProblem:
+    """Adapt a ``Surrogate`` (or pass through an ``MMProblem``) and attach
+    optional driver hooks."""
+    if isinstance(obj, MMProblem):
+        return dataclasses.replace(obj, **hooks) if hooks else obj
+    if isinstance(obj, Surrogate):
+        return MMProblem(s_bar=obj.s_bar, T=obj.T, project=obj.project,
+                         loss=obj.loss, psi=obj.psi, phi=obj.phi, g=obj.g,
+                         **hooks)
+    raise TypeError(f"cannot adapt {type(obj).__name__} to MMProblem "
+                    "(want Surrogate or MMProblem)")

@@ -1,0 +1,57 @@
+"""Step-size schedules: one resolver for every driver entry point.
+
+Historically ``sassmm.run`` took a callable ``t -> gamma_t`` (1-indexed)
+while ``fedmm.run`` took either a callable or a sequence indexed from 0 —
+so the same experiment written against the two entry points could silently
+run different schedules. ``resolve_schedule`` is the single normalization
+point: every run loop (and every shim kept for the legacy modules) accepts
+a callable, a sequence/array, or a scalar, and materializes the same
+float32 array ``gammas[t] = gamma_{t+1}`` for rounds t = 0..n_rounds-1.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Union
+
+import jax.numpy as jnp
+
+Schedule = Union[callable, Sequence, float]
+
+
+def resolve_schedule(gammas: Schedule, n_rounds: int) -> jnp.ndarray:
+    """Materialize a step-size schedule as a float32 array of length
+    ``n_rounds``.
+
+    * callable: evaluated at t = 1..n_rounds (the paper's 1-indexed
+      gamma_t convention, matching the legacy ``gammas(t + 1)`` call sites);
+    * sequence/array: the first ``n_rounds`` entries (must be long enough);
+    * python scalar: a constant schedule.
+    """
+    if callable(gammas):
+        vals = [gammas(t + 1) for t in range(n_rounds)]
+        return jnp.asarray(jnp.stack([jnp.asarray(v, jnp.float32) for v in vals]))
+    arr = jnp.asarray(gammas, jnp.float32)
+    if arr.ndim == 0:
+        return jnp.full((n_rounds,), arr)
+    if arr.shape[0] < n_rounds:
+        raise ValueError(
+            f"schedule has {arr.shape[0]} entries < n_rounds={n_rounds}")
+    return arr[:n_rounds]
+
+
+def decaying_stepsize(beta: float):
+    """gamma_t = beta / sqrt(beta + t) — the schedule used in Section 6.
+    (Canonical home; ``core.sassmm.decaying_stepsize`` is an alias.)"""
+    def gamma(t):
+        return beta / jnp.sqrt(beta + t)
+    return gamma
+
+
+def schedule_length(gammas: Schedule) -> int | None:
+    """Length of an array schedule, or None for callables/scalars (used to
+    infer ``n_rounds`` when the caller omits it)."""
+    if callable(gammas):
+        return None
+    try:
+        return len(gammas)
+    except TypeError:
+        return None

@@ -1,0 +1,100 @@
+"""FederationSpec — the federation concerns, composed, in one place.
+
+The paper layers four orthogonal options on the surrogate-MM recursion:
+partial participation (A5), control variates (Algorithm 2 lines 8/11/17),
+unbiased compression (A4), and the aggregation space (surrogate vs the
+naive parameter-space baseline of Section 3.1). Historically each of the
+five run stacks re-plumbed these by hand; a ``FederationSpec`` is the
+single composition point the unified driver consumes.
+
+Axes
+----
+participation:  Bernoulli-p client sampling; 1.0 = full participation.
+variates:       "zero"    — control-variate state initialized at 0
+                            (alpha = 0 keeps the state but freezes it,
+                            matching the legacy FedMM semantics);
+                "at-init" — V_{0,i} = h_i(Shat_0), the heterogeneity-robust
+                            warm start of Theorem 1 (needs init batches);
+                "off"     — no V/V_i state at all (the trainer's
+                            use_cv=False / Theorem-1 alpha=0 regime:
+                            saves 2x params of server state).
+compressor:     any ``core.compression.Compressor`` (A4 operator).
+aggregation:    "surrogate" — iterate and aggregate Shat in S-space
+                              (FedMM, the paper's design);
+                "parameter" — iterate theta and aggregate local MM steps
+                              T(Sbar_i) in Theta-space (the Section 3.1
+                              naive baseline: one flag, not a fork).
+normalization:  "expected" — scale the masked aggregate by 1/p (unbiased
+                             for h, Algorithm 2 line 13);
+                "realized" — scale by n/|A_t| (FedAvg/FedAdam-style
+                             average over the clients that showed up).
+delta:          "drift"  — clients send oracle - iterate - V_i
+                           (Algorithm 2 line 7);
+                "oracle" — clients send the oracle output itself
+                           (FedAdam: raw local gradients).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.compression import Compressor, identity
+
+PARTICIPATION_FULL = 1.0
+VARIATES = ("zero", "at-init", "off")
+AGGREGATIONS = ("surrogate", "parameter")
+NORMALIZATIONS = ("expected", "realized")
+DELTAS = ("drift", "oracle")
+
+
+@dataclasses.dataclass(frozen=True)
+class FederationSpec:
+    n_clients: int
+    participation: float = PARTICIPATION_FULL   # Bernoulli-p (A5)
+    alpha: float = 0.0                          # control-variate stepsize
+    variates: str = "zero"                      # zero | at-init | off
+    compressor: Compressor = dataclasses.field(default_factory=identity)
+    mu: Optional[jnp.ndarray] = None            # client weights; uniform default
+    aggregation: str = "surrogate"              # surrogate | parameter
+    normalization: str = "expected"             # expected | realized
+    delta: str = "drift"                        # drift | oracle
+
+    def __post_init__(self):
+        if not (0.0 < self.participation <= 1.0):
+            raise ValueError(f"participation must be in (0, 1], got "
+                             f"{self.participation}")
+        for field, allowed in (("variates", VARIATES),
+                               ("aggregation", AGGREGATIONS),
+                               ("normalization", NORMALIZATIONS),
+                               ("delta", DELTAS)):
+            val = getattr(self, field)
+            if val not in allowed:
+                raise ValueError(f"{field}={val!r} not in {allowed}")
+        if self.variates == "off" and self.alpha != 0.0:
+            raise ValueError("variates='off' drops V/V_i entirely; "
+                             "alpha must be 0")
+
+    # -- derived ------------------------------------------------------------
+    def client_weights(self) -> jnp.ndarray:
+        """mu_i; uniform 1/n unless given explicitly."""
+        if self.mu is not None:
+            return jnp.asarray(self.mu)
+        return jnp.full((self.n_clients,), 1.0 / self.n_clients)
+
+    @property
+    def use_variates(self) -> bool:
+        return self.variates != "off"
+
+
+def participation_draw(key, spec: FederationSpec):
+    """One round of A5 sampling + per-client compression keys, the exact
+    key-fold every driver in the repo shares: ``key -> (k_part, k_quant)``,
+    ``active ~ Bernoulli(p)^n``, ``quant_keys = split(k_quant, n)``."""
+    k_part, k_quant = jax.random.split(key)
+    active = jax.random.bernoulli(k_part, spec.participation,
+                                  (spec.n_clients,))
+    quant_keys = jax.random.split(k_quant, spec.n_clients)
+    return active, quant_keys

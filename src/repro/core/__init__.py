@@ -3,6 +3,10 @@
 MM-1/MM-2 surrogate framework, SA-SSMM (Algorithm 1), FedMM (Algorithm 2)
 with control variates / partial participation / compression / projection,
 the naive Theta-aggregation baseline, and FedMM-OT (Algorithm 3).
+
+The algorithm run loops are unified behind ``repro.api`` (one MMProblem
+protocol + FederationSpec + scan-jitted driver); the ``sassmm``/``fedmm``/
+``naive``/``fedmm_ot`` modules here are compatibility shims over it.
 """
 from . import (compression, fedmm, fedmm_ot, jensen, naive, prox, quadratic,  # noqa: F401
                sassmm, surrogate, variational)

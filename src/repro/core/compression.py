@@ -47,6 +47,14 @@ The stochastic-rounding dither comes from one of two sources behind the
 Both paths compare the dither against the round-up fraction in float32
 (24-bit resolution), so the quantizer is unbiased to ~2^-24 per element —
 see ``tests/test_compression_unified.py`` for the 1/sqrt(trials) check.
+
+Compute dtype is a third axis behind ``compute=``: ``"f32"`` (default) is
+the oracle semantics — the whole chain in float32, bit-identical to the
+Pallas kernel; ``"native"`` keeps everything except the dither comparison
+in the input dtype (the ROADMAP bf16 path: half the transient HBM on
+parameter-sized bf16 chains, codes within ±1 level of the oracle on the
+~2^-8-measure bf16 ratio-rounding boundary — see
+``kernels/ref.py:quantize_groups_native``).
 """
 from __future__ import annotations
 
@@ -187,15 +195,29 @@ def _make_dither(dither: str, key, shape):
 
 def quantize_leaf(key, x, bits: int = 8, block: int = 256,
                   dither: str = "uniform", shard_safe: bool = False,
-                  kernel_threshold: int = KERNEL_DISPATCH_MIN):
+                  kernel_threshold: int = KERNEL_DISPATCH_MIN,
+                  compute: str = "f32"):
     """Quantize-dequantize ONE array leaf. Single source of truth for the
     repo's stochastic-rounding block quantizer: grouping via ``shard_safe``
     (see module docstring), dither via ``dither=``, math via the kernel
     oracle pair (Pallas for large leaves, the jnp oracle otherwise —
-    bit-identical given the same draws)."""
+    bit-identical given the same draws).
+
+    ``compute``:
+      * ``"f32"``    (default) — oracle semantics: the whole chain runs in
+        float32 regardless of input dtype (bit-identical to the kernel);
+      * ``"native"`` — the ROADMAP bf16 compute path: scale/ratio/dequant
+        stay in the input dtype, ONLY the dither-vs-fraction comparison is
+        f32 (``kernels/ref.py:quantize_groups_native``, which documents the
+        ±1-level equivalence tolerance for bf16 ratio rounding). Halves the
+        transient HBM on parameter-sized bf16 chains; no-op for f32 inputs.
+    """
+    if compute not in ("f32", "native"):
+        raise ValueError(f"compute={compute!r} (want 'f32'|'native')")
     if bits == 0 or x.ndim == 0 or x.size == 0:
         return x
     orig_dtype = x.dtype
+    native = compute == "native" and orig_dtype != jnp.float32
 
     if shard_safe:
         # groups along the last axis only: elementwise-fusable, preserves
@@ -205,6 +227,11 @@ def quantize_leaf(key, x, bits: int = 8, block: int = 256,
         if g < 2:
             return x  # one-element groups reproduce x exactly; skip the work
         u = _make_dither(dither, key, x.shape)
+        if native:
+            xg = x.reshape(x.shape[:-1] + (D // g, g))
+            deq = kernel_ref.quantize_groups_native(xg, u.reshape(xg.shape),
+                                                    bits=bits)
+            return deq.reshape(x.shape)
         # Kernel dispatch only when the group is a legal lane width: the
         # Pallas BlockSpec keeps lanes == g, which must stay 128-aligned for
         # the VPU (a (rows, 2) block would fail Mosaic lowering on real
@@ -224,6 +251,13 @@ def quantize_leaf(key, x, bits: int = 8, block: int = 256,
     n = x.size
     pad = (-n) % block
     u = _make_dither(dither, key, (n + pad,))
+    if native:
+        flat = x.reshape(-1)
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        out = kernel_ref.quantize_groups_native(
+            flat.reshape(-1, block), u.reshape(-1, block), bits=bits)
+        return out.reshape(-1)[:n].reshape(x.shape)
     flat = x.astype(jnp.float32).reshape(-1)
     if pad:
         flat = jnp.pad(flat, (0, pad))
@@ -237,7 +271,8 @@ def quantize_leaf(key, x, bits: int = 8, block: int = 256,
 
 def block_quant(bits: int = 8, block: int = 256, dither: str = "uniform",
                 shard_safe: bool = False,
-                kernel_threshold: int = KERNEL_DISPATCH_MIN) -> Compressor:
+                kernel_threshold: int = KERNEL_DISPATCH_MIN,
+                compute: str = "f32") -> Compressor:
     levels = 2.0 ** (bits - 1) - 1.0
     omega = block / (4.0 * levels * levels)
 
@@ -245,7 +280,8 @@ def block_quant(bits: int = 8, block: int = 256, dither: str = "uniform",
         return _tree_keyed_map(
             lambda k, x: quantize_leaf(k, x, bits=bits, block=block,
                                        dither=dither, shard_safe=shard_safe,
-                                       kernel_threshold=kernel_threshold),
+                                       kernel_threshold=kernel_threshold,
+                                       compute=compute),
             key, s)
 
     def payload(shape, itemsize):
@@ -263,6 +299,8 @@ def block_quant(bits: int = 8, block: int = 256, dither: str = "uniform",
         return n * bits / 8.0 + (n / g) * 4.0
 
     tag = f"{dither},shard" if shard_safe else dither
+    if compute == "native":
+        tag += ",native"
     return Compressor(apply=apply, omega=float(omega), bits=float(bits),
                       name=f"block_quant{bits}b{block}[{tag}]",
                       payload_fn=payload)

@@ -1,6 +1,6 @@
 """Algorithm 2 — FedMM: Federated Majorize-Minimization.
 
-Reference (cross-silo, n explicit clients) implementation. Each round:
+Reference (cross-silo, n explicit clients) entry points. Each round:
 
   1. sample active set A_{t+1} (A5: independent Bernoulli(p) per client),
   2. broadcast Shat_t and its mirror T(Shat_t),
@@ -14,34 +14,41 @@ Reference (cross-silo, n explicit clients) implementation. Each round:
         Shat_{t+1} = Proj_S( Shat_t + gamma_{t+1} H_{t+1} ; B_t )
         V_{t+1}    = V_t + (alpha/p) sum_{i in A} mu_i q_i
 
-The distributed (mesh-sharded, transformer-scale) version of the same update
-lives in ``repro.fed.trainer``; this module is the algorithmically complete
-oracle used by the paper's experiments and by the tests. Both consume the
-SAME ``core.compression.Compressor`` objects for Quant (A4), so the two
-paths produce identical dequantized payloads for identical keys, and both
-surface the compressor's per-round communication accounting (payload bytes,
-Lemma-1 effective omega) in their ``step`` metrics.
+This module is a thin compatibility shim over the unified driver in
+``repro.api``: ``FedMMConfig`` maps onto an ``api.FederationSpec`` with
+``aggregation="surrogate"`` and ``step``/``run`` delegate to
+``api.step``/``api.run`` (the scan-jitted trajectory driver). The
+participation/variate/compression plumbing lives in exactly one place;
+``tests/test_api_golden.py`` pins trajectory equality with the historical
+implementation. The distributed (mesh-sharded, transformer-scale) consumer
+of the same ``FederationSpec`` is ``repro.fed.trainer``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .surrogate import (Surrogate, tree_add, tree_axpy, tree_scale, tree_sub,
-                        tree_sq_norm, tree_zeros_like, tree_weighted_sum)
+from .surrogate import Surrogate, tree_sub
 from .compression import Compressor, identity
+from .. import api
 
 
 @dataclasses.dataclass(frozen=True)
 class FedMMConfig:
+    """Legacy FedMM knobs; ``as_spec()`` is the bridge to the unified API."""
     n_clients: int
     p: float = 1.0                  # participation probability (A5)
     alpha: float = 0.0              # control-variate stepsize
     compressor: Compressor = dataclasses.field(default_factory=identity)
     mu: Optional[jnp.ndarray] = None  # client weights; default uniform
+
+    def as_spec(self, aggregation: str = "surrogate") -> "api.FederationSpec":
+        return api.FederationSpec(
+            n_clients=self.n_clients, participation=self.p, alpha=self.alpha,
+            compressor=self.compressor, mu=self.mu, aggregation=aggregation)
 
 
 class FedMMState(NamedTuple):
@@ -51,101 +58,51 @@ class FedMMState(NamedTuple):
     step: jnp.ndarray
 
 
-def init(sur: Surrogate, s0, cfg: FedMMConfig, v0_i=None) -> FedMMState:
-    if v0_i is None:
-        v0_i = jax.tree.map(
-            lambda x: jnp.zeros((cfg.n_clients,) + x.shape, x.dtype), s0)
-    mu = _mu(cfg)
-    v0 = jax.tree.map(lambda x: jnp.tensordot(mu, x, axes=1), v0_i)
-    return FedMMState(s_hat=s0, v=v0, v_i=v0_i, step=jnp.asarray(0))
-
-
 def _mu(cfg: FedMMConfig):
-    if cfg.mu is not None:
-        return jnp.asarray(cfg.mu)
-    return jnp.full((cfg.n_clients,), 1.0 / cfg.n_clients)
+    return cfg.as_spec().client_weights()
 
 
-def init_control_variates_at_h(sur: Surrogate, s0, client_batches, cfg: FedMMConfig):
+def _to_driver(state: FedMMState) -> "api.DriverState":
+    return api.DriverState(x=state.s_hat, v=state.v, v_i=state.v_i,
+                           aux=(), opt=(), step=state.step)
+
+
+def _from_driver(state: "api.DriverState") -> FedMMState:
+    return FedMMState(s_hat=state.x, v=state.v, v_i=state.v_i,
+                      step=state.step)
+
+
+def init(sur: Surrogate, s0, cfg: FedMMConfig, v0_i=None) -> FedMMState:
+    return _from_driver(api.init(api.as_problem(sur), s0, cfg.as_spec(),
+                                 v0_i=v0_i))
+
+
+def init_control_variates_at_h(sur: Surrogate, s0, client_batches,
+                               cfg: FedMMConfig):
     """The heterogeneity-robust initialization V_{0,i} = h_i(Shat_0)
-    (Theorem 1 discussion): one full local expectation per client."""
-    theta0 = sur.T(s0)
-    def one(batch):
-        return tree_sub(sur.s_bar(batch, theta0), s0)
-    return jax.vmap(one)(client_batches)
+    (Theorem 1 discussion): one full local expectation per client. The
+    unified API spells this ``FederationSpec(variates="at-init")``."""
+    del cfg
+    return api.variates_at_init(api.as_problem(sur), s0, client_batches)
 
 
 def step(sur: Surrogate, state: FedMMState, client_batches, gamma, key,
          cfg: FedMMConfig) -> tuple[FedMMState, dict]:
     """One FedMM round. ``client_batches`` is a pytree with a leading client
     axis of size n (client i's minibatch for this round)."""
-    n, p, alpha = cfg.n_clients, cfg.p, cfg.alpha
-    mu = _mu(cfg)
-    theta = sur.T(state.s_hat)                                     # line 4
-
-    k_part, k_quant = jax.random.split(key)
-    active = jax.random.bernoulli(k_part, p, (n,))                 # A5
-    quant_keys = jax.random.split(k_quant, n)
-
-    def client_update(batch, v_i, qkey):
-        s_i = sur.s_bar(batch, theta)                              # line 6
-        delta = tree_sub(tree_sub(s_i, state.s_hat), v_i)          # line 7
-        return cfg.compressor.apply(qkey, delta)                   # line 9 payload
-
-    q = jax.vmap(client_update, in_axes=(0, 0, 0))(client_batches, state.v_i, quant_keys)
-    # zero out non-participating clients (they send nothing / keep V_i)
-    mask = active.astype(jnp.float32)
-    q = jax.tree.map(lambda x: x * mask.reshape((n,) + (1,) * (x.ndim - 1)), q)
-
-    # client control variates (line 8 / line 11)
-    v_i_new = jax.tree.map(lambda v, dq: v + (alpha / p) * dq, state.v_i, q)
-
-    # server aggregation (line 13): H = V_t + (1/p) sum_i mu_i q_i
-    agg = jax.tree.map(
-        lambda x: jnp.tensordot(mu, x, axes=1), q)                 # sum_i mu_i q_i
-    h_oracle = tree_add(state.v, tree_scale(agg, 1.0 / p))
-
-    # SA update + projection (lines 15-16)
-    s_half = tree_axpy(gamma, h_oracle, state.s_hat)
-    s_new = sur.project(s_half)
-
-    # server control variate (line 17)
-    v_new = tree_add(state.v, tree_scale(agg, alpha / p))
-
-    drift = tree_sub(s_new, state.s_hat)
-    # per-round communication accounting (static shapes -> Python floats;
-    # only the active-client count is traced)
-    comm = cfg.compressor.round_metrics(state.s_hat, p=p)
-    metrics = {
-        "e_s": tree_sq_norm(drift) / (gamma ** 2),                 # E^s_{t+1}
-        "n_active": jnp.sum(mask),
-        "h_norm_sq": tree_sq_norm(h_oracle),
-        "comm_bytes": comm["payload_bytes_per_client"] * jnp.sum(mask),
-        "omega_eff": jnp.asarray(comm["omega_eff"], jnp.float32),
-    }
-    new_state = FedMMState(s_hat=s_new, v=v_new, v_i=v_i_new, step=state.step + 1)
-    return new_state, metrics
+    dstate, metrics = api.step(api.as_problem(sur), cfg.as_spec(),
+                               _to_driver(state), client_batches, gamma, key)
+    return _from_driver(dstate), metrics
 
 
 def run(sur: Surrogate, s0, client_batch_fn, gammas, key, cfg: FedMMConfig,
         n_rounds: int, v0_i=None, eval_batch=None, track_mirror: bool = True):
-    """Reference driver. ``client_batch_fn(t, key) -> (n, b, ...) pytree``.
-    Returns (final_state, history of metric dicts)."""
-    state = init(sur, s0, cfg, v0_i)
-    theta_prev = sur.T(state.s_hat)
-    hist = []
-    step_j = jax.jit(lambda st, cb, g, k: step(sur, st, cb, g, k, cfg))
-    for t in range(n_rounds):
-        key, k_round, k_batch = jax.random.split(key, 3)
-        gamma = float(gammas(t + 1)) if callable(gammas) else float(gammas[t])
-        batches = client_batch_fn(t, k_batch)
-        state, m = step_j(state, batches, gamma, k_round)
-        m = {k: float(v) for k, v in m.items()}
-        if track_mirror:
-            theta_new = sur.T(state.s_hat)
-            m["e_p_s"] = float(tree_sq_norm(tree_sub(theta_new, theta_prev))) / gamma ** 2
-            theta_prev = theta_new
-        if sur.loss is not None and eval_batch is not None:
-            m["loss"] = float(sur.loss(eval_batch, sur.T(state.s_hat)))
-        hist.append(m)
-    return state, hist
+    """Reference driver (now the scan-jitted ``api.run`` under the hood).
+    ``client_batch_fn(t, key) -> (n, b, ...) pytree``. ``gammas`` may be a
+    callable or a sequence (``api.resolve_schedule``). Returns
+    (final_state, history of metric dicts)."""
+    state, hist = api.run(api.as_problem(sur), s0, client_batch_fn, gammas,
+                          spec=cfg.as_spec(), key=key, n_rounds=n_rounds,
+                          eval_batch=eval_batch, track_mirror=track_mirror,
+                          v0_i=v0_i)
+    return _from_driver(state), api.history_list(hist)

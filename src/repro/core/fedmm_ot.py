@@ -17,6 +17,13 @@ theta_{t+1} = argmin_theta W(omega_{t+1}, theta) (a few Adam steps).
 
 Evaluation: L2-UVP against the closed-form Gaussian->Gaussian OT map
 (offline replacement for the Korotin et al. 2021b benchmark — see DESIGN.md).
+
+The round plumbing (participation, variates, aggregation, server update)
+lives in the unified ``repro.api`` driver: ``make_ot_problem`` expresses
+Algorithm 3 as an ``MMProblem`` (best-response oracle + conjugate
+``server_step`` hook) and ``step``/``fedadam_step`` are thin shims kept for
+compatibility. Only the ICNN machinery and the OT objectives are owned
+here.
 """
 from __future__ import annotations
 
@@ -28,6 +35,7 @@ import jax.numpy as jnp
 
 from .surrogate import tree_add, tree_axpy, tree_scale, tree_sub, tree_sq_norm
 from ..optim.optimizers import adam_init, adam_update
+from .. import api
 
 
 # ---------------------------------------------------------------------------
@@ -133,53 +141,89 @@ def init(key, spec: ICNNSpec, cfg: FedOTConfig) -> FedOTState:
                       theta_opt=adam_init(theta), step=jnp.asarray(0))
 
 
-def step(state: FedOTState, spec: ICNNSpec, cfg: FedOTConfig,
-         client_x, y_q, gamma, key):
-    """One FedMM-OT round. client_x: (n, b, dim); y_q: (bq, dim) public."""
-    n, p, alpha = cfg.n_clients, cfg.p, cfg.alpha
-    mu = jnp.full((n,), 1.0 / n)
-    k_part, _ = jax.random.split(key)
-    active = jax.random.bernoulli(k_part, p, (n,)).astype(jnp.float32)
+def make_ot_problem(spec: ICNNSpec, cfg: FedOTConfig, y_q,
+                    uvp_eval=None) -> "api.MMProblem":
+    """The federated OT task as an ``api.MMProblem``.
 
-    grad_local = jax.grad(
-        lambda w, xp: local_objective(w, state.theta, spec, xp, y_q, cfg.lam))
+    The pseudo-surrogate parameter is omega (the forward potential); the
+    conjugate potential theta + its Adam state ride along as driver ``aux``:
 
-    def best_response(x_i):                                    # line 6 (relaxed)
-        w = state.omega
+      * ``view``   — broadcast (omega_t, theta_t) (Algorithm 3 line 4);
+      * ``s_bar``  — the relaxed best response omega_i(theta_t): a few local
+        SGD steps on W_i(., theta_t) (line 6);
+      * ``server_step`` — the global conjugate update, a few Adam steps on
+        theta (line 16), run after the surrogate-space aggregation.
+
+    ``uvp_eval = (true_map_fn, cov_q)`` optionally installs an L2-UVP
+    ``loss`` so ``api.run(..., eval_batch=x_eval)`` records the Figure-3
+    metric per round.
+    """
+    def view(omega, aux):
+        return omega, aux[0]
+
+    def s_bar(x_i, view_t):                                   # line 6 (relaxed)
+        omega, theta = view_t
+        grad_local = jax.grad(
+            lambda w, xp: local_objective(w, theta, spec, xp, y_q, cfg.lam))
+        w = omega
         for _ in range(cfg.client_steps):
             g = grad_local(w, x_i)
             w = jax.tree.map(lambda a, b: a - cfg.client_lr * b, w, g)
         return w
 
-    omega_i = jax.vmap(best_response)(client_x)
-    # Delta_i = omega_i(theta_t) - omega_t - V_{t,i}          (line 7)
-    delta = jax.tree.map(
-        lambda wi, w, v: (wi - w[None]) - v, omega_i, state.omega, state.v_i)
-    delta = jax.tree.map(
-        lambda x: x * active.reshape((n,) + (1,) * (x.ndim - 1)), delta)
+    def server_step(aux, omega_new):                          # line 16
+        theta, theta_opt = aux
+        grad_conj = jax.grad(
+            lambda th: conjugate_objective(omega_new, th, spec, y_q, cfg.lam))
 
-    v_i_new = jax.tree.map(lambda v, d: v + (alpha / p) * d, state.v_i, delta)
-    agg = jax.tree.map(lambda x: jnp.tensordot(mu, x, axes=1), delta)
-    h = tree_add(state.v, tree_scale(agg, 1.0 / p))            # line 13
-    omega_new = tree_axpy(gamma, h, state.omega)               # line 14
-    v_new = tree_add(state.v, tree_scale(agg, alpha / p))      # line 17
+        def adam_body(carry, _):
+            th, opt = carry
+            g = grad_conj(th)
+            th, opt = adam_update(th, g, opt, cfg.server_lr)
+            return (th, opt), None
 
-    # server conjugate update (line 16): a few Adam steps on theta
-    grad_conj = jax.grad(
-        lambda th: conjugate_objective(omega_new, th, spec, y_q, cfg.lam))
+        (theta_new, opt_new), _ = jax.lax.scan(
+            adam_body, (theta, theta_opt), None, length=cfg.server_steps)
+        return (theta_new, opt_new), {}
 
-    def adam_body(carry, _):
-        th, opt = carry
-        g = grad_conj(th)
-        th, opt = adam_update(th, g, opt, cfg.server_lr)
-        return (th, opt), None
+    loss = None
+    if uvp_eval is not None:
+        true_map_fn, cov_q = uvp_eval
 
-    (theta_new, opt_new), _ = jax.lax.scan(
-        adam_body, (state.theta, state.theta_opt), None, length=cfg.server_steps)
+        def loss(x_eval, omega):
+            return l2_uvp(lambda xx: icnn_grad(omega, spec, xx),
+                          true_map_fn, x_eval, cov_q)
 
-    metrics = {"omega_update": tree_sq_norm(tree_sub(omega_new, state.omega)) / gamma ** 2}
-    return FedOTState(omega=omega_new, theta=theta_new, v=v_new, v_i=v_i_new,
-                      theta_opt=opt_new, step=state.step + 1), metrics
+    return api.MMProblem(s_bar=s_bar, T=lambda omega: omega, view=view,
+                         server_step=server_step, loss=loss)
+
+
+def ot_federation_spec(cfg: FedOTConfig) -> "api.FederationSpec":
+    return api.FederationSpec(n_clients=cfg.n_clients, participation=cfg.p,
+                              alpha=cfg.alpha)
+
+
+def to_driver(state: FedOTState) -> "api.DriverState":
+    """FedOTState -> unified DriverState: omega is the iterate, the
+    conjugate potential + its Adam state ride as ``aux``. The single
+    conversion point for the shim below, fig3 and the OT example."""
+    return api.DriverState(x=state.omega, v=state.v, v_i=state.v_i,
+                           aux=(state.theta, state.theta_opt), opt=(),
+                           step=state.step)
+
+
+def step(state: FedOTState, spec: ICNNSpec, cfg: FedOTConfig,
+         client_x, y_q, gamma, key):
+    """One FedMM-OT round (a shim over the unified ``api.step``).
+    client_x: (n, b, dim); y_q: (bq, dim) public."""
+    problem = make_ot_problem(spec, cfg, y_q)
+    dstate, m = api.step(problem, ot_federation_spec(cfg), to_driver(state),
+                         client_x, gamma, key)
+    theta_new, opt_new = dstate.aux
+    metrics = {"omega_update": m["e_s"]}
+    return FedOTState(omega=dstate.x, theta=theta_new, v=dstate.v,
+                      v_i=dstate.v_i, theta_opt=opt_new,
+                      step=dstate.step), metrics
 
 
 # ---------------------------------------------------------------------------
@@ -202,25 +246,50 @@ def fedadam_init(key, spec: ICNNSpec) -> FedAdamState:
                         opt=adam_init(params), step=jnp.asarray(0))
 
 
+def make_fedadam_problem(spec: ICNNSpec, y_q, lam: float,
+                         lr: float) -> "api.MMProblem":
+    """FedAdam as an ``MMProblem``: the client oracle returns raw local
+    gradients of the differentiable objective (spec ``delta="oracle"``),
+    the aggregate is averaged over the realized active set (spec
+    ``normalization="realized"``), and ``server_opt`` replaces the SA
+    update with one Adam step — no surrogate aggregation anywhere."""
+    def s_bar(x_i, params):
+        def obj(pp):
+            return local_objective(pp["omega"], pp["theta"], spec,
+                                   x_i, y_q, lam)
+        return jax.grad(obj)(params)
+
+    def server_opt(params, h, gamma, opt):
+        del gamma
+        return adam_update(params, h, opt, lr)
+
+    return api.MMProblem(s_bar=s_bar, T=lambda params: params,
+                         view=lambda params, aux: params,
+                         server_opt=server_opt)
+
+
+def fedadam_spec(n_clients: int, p: float) -> "api.FederationSpec":
+    return api.FederationSpec(n_clients=n_clients, participation=p,
+                              variates="off", delta="oracle",
+                              normalization="realized")
+
+
 def fedadam_step(state: FedAdamState, spec: ICNNSpec, client_x, y_q,
                  lam: float, lr: float, key, p: float = 1.0):
+    """One FedAdam round (shim over ``api.step``). The active set is drawn
+    from the raw ``key`` exactly like the historical implementation (the
+    driver's internal A5 fold is overridden), so trajectories match the
+    legacy loop for every p."""
     n = client_x.shape[0]
-    active = jax.random.bernoulli(key, p, (n,)).astype(jnp.float32)
-    denom = jnp.maximum(jnp.sum(active), 1.0)
-
-    def client_grad(x_i):
-        def obj(params):
-            return local_objective(params["omega"], params["theta"], spec,
-                                   x_i, y_q, lam)
-        return jax.grad(obj)({"omega": state.omega, "theta": state.theta})
-
-    grads = jax.vmap(client_grad)(client_x)
-    grads = jax.tree.map(
-        lambda g: jnp.tensordot(active, g, axes=1) / denom, grads)
-    params = {"omega": state.omega, "theta": state.theta}
-    new_params, new_opt = adam_update(params, grads, state.opt, lr)
-    return FedAdamState(omega=new_params["omega"], theta=new_params["theta"],
-                        opt=new_opt, step=state.step + 1)
+    active = jax.random.bernoulli(key, p, (n,))
+    problem = make_fedadam_problem(spec, y_q, lam, lr)
+    dstate = api.DriverState(x={"omega": state.omega, "theta": state.theta},
+                             v=(), v_i=(), aux=(), opt=state.opt,
+                             step=state.step)
+    dstate, _ = api.step(problem, fedadam_spec(n, p), dstate, client_x,
+                         1.0, key, active=active)
+    return FedAdamState(omega=dstate.x["omega"], theta=dstate.x["theta"],
+                        opt=dstate.opt, step=dstate.step)
 
 
 # ---------------------------------------------------------------------------

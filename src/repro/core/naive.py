@@ -10,8 +10,11 @@ local surrogate and minimizes it locally:
     q_i           = Quant(Delta_i)
     server:  theta_{t+1} = theta_t + gamma * (V_t + (1/p) sum mu_i q_i)
 
-Remark 1 shows this scheme's fixed point is generally *not* a stationary
-point of the federated objective under heterogeneity — reproduced in
+In the unified API this is not a fork but ONE FLAG:
+``FederationSpec(aggregation="parameter")`` — this module is the thin shim
+that keeps the historical entry points alive. Remark 1 shows the scheme's
+fixed point is generally *not* a stationary point of the federated
+objective under heterogeneity — reproduced in
 tests/test_fedmm.py::test_remark1 and benchmarks/fig1_dictlearn.py.
 """
 from __future__ import annotations
@@ -21,9 +24,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .surrogate import (Surrogate, tree_add, tree_axpy, tree_scale, tree_sub,
-                        tree_sq_norm)
-from .fedmm import FedMMConfig, _mu
+from .surrogate import Surrogate
+from .fedmm import FedMMConfig
+from .. import api
 
 
 class NaiveState(NamedTuple):
@@ -33,72 +36,44 @@ class NaiveState(NamedTuple):
     step: jnp.ndarray
 
 
+def _to_driver(state: NaiveState) -> "api.DriverState":
+    return api.DriverState(x=state.theta, v=state.v, v_i=state.v_i,
+                           aux=(), opt=(), step=state.step)
+
+
+def _from_driver(state: "api.DriverState") -> NaiveState:
+    return NaiveState(theta=state.x, v=state.v, v_i=state.v_i,
+                      step=state.step)
+
+
 def init(sur: Surrogate, theta0, cfg: FedMMConfig) -> NaiveState:
-    v_i = jax.tree.map(lambda x: jnp.zeros((cfg.n_clients,) + x.shape, x.dtype), theta0)
-    v = jax.tree.map(lambda x: jnp.zeros_like(x), theta0)
-    return NaiveState(theta=theta0, v=v, v_i=v_i, step=jnp.asarray(0))
+    return _from_driver(api.init(api.as_problem(sur), theta0,
+                                 cfg.as_spec("parameter")))
 
 
 def step(sur: Surrogate, state: NaiveState, client_batches, gamma, key,
          cfg: FedMMConfig) -> tuple[NaiveState, dict]:
-    n, p, alpha = cfg.n_clients, cfg.p, cfg.alpha
-    mu = _mu(cfg)
+    dstate, metrics = api.step(api.as_problem(sur), cfg.as_spec("parameter"),
+                               _to_driver(state), client_batches, gamma, key)
+    return _from_driver(dstate), metrics
 
-    k_part, k_quant = jax.random.split(key)
-    active = jax.random.bernoulli(k_part, p, (n,))
-    quant_keys = jax.random.split(k_quant, n)
 
-    def client_update(batch, v_i, qkey):
-        s_i = sur.s_bar(batch, state.theta)
-        theta_i = sur.T(s_i)                           # local minimization
-        delta = tree_sub(tree_sub(theta_i, state.theta), v_i)
-        return cfg.compressor.apply(qkey, delta)
-
-    q = jax.vmap(client_update, in_axes=(0, 0, 0))(client_batches, state.v_i, quant_keys)
-    mask = active.astype(jnp.float32)
-    q = jax.tree.map(lambda x: x * mask.reshape((n,) + (1,) * (x.ndim - 1)), q)
-
-    v_i_new = jax.tree.map(lambda v, dq: v + (alpha / p) * dq, state.v_i, q)
-    agg = jax.tree.map(lambda x: jnp.tensordot(mu, x, axes=1), q)
-    h_oracle = tree_add(state.v, tree_scale(agg, 1.0 / p))
-    theta_new = tree_axpy(gamma, h_oracle, state.theta)
-    v_new = tree_add(state.v, tree_scale(agg, alpha / p))
-
-    metrics = {
-        "e_p": tree_sq_norm(tree_sub(theta_new, state.theta)) / gamma ** 2,
-        "n_active": jnp.sum(mask),
-    }
-    return NaiveState(theta=theta_new, v=v_new, v_i=v_i_new,
-                      step=state.step + 1), metrics
+def _tbar_diag(sur: Surrogate, surrogate_diag_batches):
+    """Tbar(theta) for the Section 6 cross-space diagnostic E^{s,p}
+    (kept as a private alias; use ``api.mean_oracle_diag`` in new code)."""
+    return api.mean_oracle_diag(api.as_problem(sur), surrogate_diag_batches)
 
 
 def run(sur: Surrogate, theta0, client_batch_fn, gammas, key, cfg: FedMMConfig,
         n_rounds: int, eval_batch=None, surrogate_diag_batches=None):
-    """Driver mirroring fedmm.run. ``surrogate_diag_batches`` (optional,
-    (n, b, ...) pytree) enables the Section 6 cross-space diagnostic
-    E^{s,p}: || Tbar(theta_{t+1}) - Tbar(theta_t) ||^2 / gamma^2 where
-    Tbar(theta) = (1/n) sum_i Sbar_i(theta)."""
-    state = init(sur, theta0, cfg)
-    hist = []
-    step_j = jax.jit(lambda st, cb, g, k: step(sur, st, cb, g, k, cfg))
-
-    def tbar(theta):
-        return jax.tree.map(
-            lambda x: jnp.mean(x, axis=0),
-            jax.vmap(lambda b: sur.s_bar(b, theta))(surrogate_diag_batches))
-
-    s_prev = tbar(state.theta) if surrogate_diag_batches is not None else None
-    for t in range(n_rounds):
-        key, k_round, k_batch = jax.random.split(key, 3)
-        gamma = float(gammas(t + 1)) if callable(gammas) else float(gammas[t])
-        batches = client_batch_fn(t, k_batch)
-        state, m = step_j(state, batches, gamma, k_round)
-        m = {k: float(v) for k, v in m.items()}
-        if s_prev is not None:
-            s_new = tbar(state.theta)
-            m["e_s_p"] = float(tree_sq_norm(tree_sub(s_new, s_prev))) / gamma ** 2
-            s_prev = s_new
-        if sur.loss is not None and eval_batch is not None:
-            m["loss"] = float(sur.loss(eval_batch, state.theta))
-        hist.append(m)
-    return state, hist
+    """Driver mirroring fedmm.run (one flag on the unified driver).
+    ``surrogate_diag_batches`` (optional, (n, b, ...) pytree) enables the
+    Section 6 cross-space diagnostic E^{s,p}:
+    || Tbar(theta_{t+1}) - Tbar(theta_t) ||^2 / gamma^2."""
+    diag = (("e_s_p", _tbar_diag(sur, surrogate_diag_batches))
+            if surrogate_diag_batches is not None else None)
+    state, hist = api.run(api.as_problem(sur), theta0, client_batch_fn,
+                          gammas, spec=cfg.as_spec("parameter"), key=key,
+                          n_rounds=n_rounds, eval_batch=eval_batch,
+                          diag=diag)
+    return _from_driver(state), api.history_list(hist)

@@ -7,16 +7,20 @@
 The iterate lives in the (convex) surrogate space S; since gamma in (0, 1]
 and S_{t+1} in S, the convex combination stays in S, and the mirror sequence
 T(Shat_t) is the algorithm's parameter-space output.
+
+This module is a thin compatibility shim: the recursion itself lives in
+``repro.api`` (``centralized_step`` / the scan-jitted ``run`` driver), which
+also drives FedMM, the naive baseline and FedMM-OT. Prefer ``repro.api``
+directly in new code.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
 
-from .surrogate import Surrogate, tree_lerp, tree_sub, tree_sq_norm
+from .surrogate import Surrogate
+from .. import api
 
 
 class SASSMMState(NamedTuple):
@@ -32,38 +36,26 @@ def init(sur: Surrogate, s0) -> SASSMMState:
 def step(sur: Surrogate, state: SASSMMState, batch, gamma) -> tuple[SASSMMState, dict]:
     """One SA-SSMM iteration. ``batch`` is the data for the stochastic oracle
     (online sample or minibatch). Returns (new_state, metrics)."""
-    theta = sur.T(state.s_hat)
-    s_oracle = sur.s_bar(batch, theta)                 # line 2
-    s_new = tree_lerp(state.s_hat, s_oracle, gamma)    # line 3
-    s_new = sur.project(s_new)
-    drift = tree_sub(s_new, state.s_hat)
-    metrics = {
-        # normalized surrogate update ||Shat_{t+1}-Shat_t||^2 / gamma^2
-        # (the Section 6 diagnostic E^s_{t+1})
-        "e_s": tree_sq_norm(drift) / (gamma ** 2),
-    }
-    return SASSMMState(s_hat=s_new, step=state.step + 1), metrics
+    dstate = api.DriverState(x=state.s_hat, v=(), v_i=(), aux=(), opt=(),
+                             step=state.step)
+    dstate, metrics = api.centralized_step(api.as_problem(sur), dstate,
+                                           batch, gamma)
+    return SASSMMState(s_hat=dstate.x, step=dstate.step), metrics
 
 
 def run(sur: Surrogate, s0, batches, gammas, project_every: bool = True):
-    """Drive SA-SSMM over an in-memory list/iterator of batches; returns the
-    final state and per-step metric history (python loop: reference runner
-    used by tests & small experiments; the LM-scale path lives in
-    repro/fed/trainer.py with jit/pjit)."""
-    state = init(sur, s0)
-    hist = []
-    jstep = jax.jit(lambda st, b, g: step(sur, st, b, g)) if project_every else None
-    for t, batch in enumerate(batches):
-        gamma = gammas(t + 1) if callable(gammas) else gammas[t]
-        state, m = step(sur, state, batch, gamma)
-        if sur.loss is not None:
-            m = dict(m, loss=sur.loss(batch, sur.T(state.s_hat)))
-        hist.append({k: float(v) for k, v in m.items()})
-    return state, hist
+    """Drive SA-SSMM over an in-memory list of batches; returns the final
+    state and per-step metric history as a list of float dicts. ``gammas``
+    may be a callable ``t -> gamma_t`` (1-indexed) or a sequence — both are
+    normalized by ``api.resolve_schedule``. The trajectory is one
+    ``lax.scan``-jitted XLA computation (``repro.api.run``)."""
+    del project_every  # kept for signature compatibility
+    state, hist = api.run(api.as_problem(sur), s0, list(batches), gammas)
+    return (SASSMMState(s_hat=state.x, step=state.step),
+            api.history_list(hist))
 
 
 def decaying_stepsize(beta: float):
-    """gamma_t = beta / sqrt(beta + t) — the schedule used in Section 6."""
-    def gamma(t):
-        return beta / jnp.sqrt(beta + t)
-    return gamma
+    """gamma_t = beta / sqrt(beta + t) — the Section 6 schedule (alias;
+    canonical home is ``repro.api.decaying_stepsize``)."""
+    return api.decaying_stepsize(beta)

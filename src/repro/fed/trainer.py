@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .. import api
 from ..core import compression
 from ..core.compression import Compressor
 from ..models import sharding as shd
@@ -56,24 +57,43 @@ class FedLMConfig:
     quant_bits: int = 8            # 0 -> no compression
     quant_block: int = 256
     quant_dither: str = "hash"     # fused-hash dither (zero-memory at scale)
+    quant_compute: str = "f32"     # "native" keeps bf16 chains in bf16
     compressor: Optional[Compressor] = None  # overrides the quant_* fields
     client_mode: str = "physical"  # physical | logical
     use_cv: bool = True            # False (alpha=0 regime): drop V/V_i
                                    # entirely — saves 2x params of state
                                    # (Theorem 1's omega_p=0 / alpha=0 case)
+    # explicit FederationSpec: overrides n_clients/p/alpha/use_cv/quant_*
+    # (the same object the repro.api driver and core shims consume)
+    federation: Optional[api.FederationSpec] = None
+
+    def federation_spec(self) -> "api.FederationSpec":
+        """The federation axes of this trainer as the ONE shared
+        ``repro.api.FederationSpec``: this trainer, ``core/fedmm.py`` and
+        the unified driver all read participation/variates/compression off
+        the same object."""
+        if self.federation is not None:
+            return self.federation
+        if self.compressor is not None:
+            comp = self.compressor
+        elif not self.quant_bits:
+            comp = compression.identity()
+        else:
+            comp = compression.block_quant(
+                self.quant_bits, self.quant_block, dither=self.quant_dither,
+                shard_safe=True, compute=self.quant_compute)
+        return api.FederationSpec(
+            n_clients=self.n_clients, participation=self.p,
+            alpha=self.alpha if self.use_cv else 0.0,
+            variates="zero" if self.use_cv else "off", compressor=comp)
 
 
 def resolve_compressor(cfg: FedLMConfig) -> Compressor:
-    """The ONE uplink compressor this trainer uses: an explicit
-    ``cfg.compressor`` if given, else the unified block quantizer from
-    ``core.compression`` parameterized by the quant_* fields (identity
+    """The ONE uplink compressor this trainer uses — read off the shared
+    ``FederationSpec`` (explicit ``cfg.compressor`` if given, else the
+    unified block quantizer parameterized by the quant_* fields, identity
     when quant_bits == 0)."""
-    if cfg.compressor is not None:
-        return cfg.compressor
-    if not cfg.quant_bits:
-        return compression.identity()
-    return compression.block_quant(cfg.quant_bits, cfg.quant_block,
-                                   dither=cfg.quant_dither, shard_safe=True)
+    return cfg.federation_spec().compressor
 
 
 class FedLMState(NamedTuple):
@@ -106,21 +126,25 @@ def T_map(s_hat, cfg: FedLMConfig):
 
 
 def init_state(model: Model, key, cfg: FedLMConfig) -> FedLMState:
+    spec = cfg.federation_spec()
     params = model.init(key)
-    if not cfg.use_cv:
+    if not spec.use_variates:
         return FedLMState(s_hat=params, v={}, v_i={}, step=jnp.asarray(0))
     v = jax.tree.map(jnp.zeros_like, params)
     v_i = jax.tree.map(
-        lambda x: jnp.zeros((cfg.n_clients,) + x.shape, x.dtype), params)
+        lambda x: jnp.zeros((spec.n_clients,) + x.shape, x.dtype), params)
     return FedLMState(s_hat=params, v=v, v_i=v_i, step=jnp.asarray(0))
 
 
 def make_train_step(model: Model, cfg: FedLMConfig):
     """Returns train_step(state, batch, key, gamma) -> (state, metrics).
-    batch: {"tokens": (n_clients, B_local, S), "labels": ...} (+frontend)."""
+    batch: {"tokens": (n_clients, B_local, S), "labels": ...} (+frontend).
+    All federation axes come off ``cfg.federation_spec()`` — the same
+    ``repro.api.FederationSpec`` the reference driver consumes."""
 
-    use_cv = cfg.use_cv
-    comp = resolve_compressor(cfg)
+    spec = cfg.federation_spec()
+    use_cv = spec.use_variates
+    comp = spec.compressor
 
     def client_round(theta, s_hat, v_i_c, cb, qkey, active):
         """One client's work (Algorithm 2 lines 5-9): oracle, drift-corrected
@@ -140,17 +164,18 @@ def make_train_step(model: Model, cfg: FedLMConfig):
         q = jax.tree.map(lambda x: x * active.astype(x.dtype), q)
         if not use_cv:
             return loss, q, {}
-        v_new = jax.tree.map(lambda v, dq: v + (cfg.alpha / cfg.p) * dq,
-                             v_i_c, q)
+        v_new = jax.tree.map(
+            lambda v, dq: v + (spec.alpha / spec.participation) * dq,
+            v_i_c, q)
         return loss, q, v_new
 
     def train_step(state: FedLMState, batch, key, gamma):
-        n, p, alpha = cfg.n_clients, cfg.p, cfg.alpha
+        n, p, alpha = spec.n_clients, spec.participation, spec.alpha
         theta = T_map(state.s_hat, cfg)
 
-        k_part, k_quant = jax.random.split(key)
-        active = jax.random.bernoulli(k_part, p, (n,)).astype(jnp.float32)
-        quant_keys = jax.random.split(k_quant, n)
+        # A5 sampling + per-client key fold shared with the api driver
+        active, quant_keys = api.participation_draw(key, spec)
+        active = active.astype(jnp.float32)
 
         if cfg.client_mode == "physical":
             # silos run concurrently: client dim is sharded over ('pod','data')
@@ -224,6 +249,7 @@ def state_specs(params_shapes, cfg: FedLMConfig, fsdp, tp="model",
     logical: client dim unsharded, inner dims over (fsdp, tp)."""
     attn_mode = getattr(cfg, "attn_mode", "sharded")
     mlp_mode = getattr(cfg, "mlp_mode", "generic")
+    use_cv = cfg.federation_spec().use_variates
     if cfg.client_mode == "physical":
         pspec = shd.param_specs(params_shapes, fsdp=(), fsdp_size=10**9,
                                 tp=tp, tp_size=tp_size, attn_mode=attn_mode,
@@ -236,7 +262,7 @@ def state_specs(params_shapes, cfg: FedLMConfig, fsdp, tp="model",
                                 mlp_mode=mlp_mode)
         vi_spec = jax.tree.map(lambda s: P(None, *s), pspec,
                                is_leaf=lambda x: isinstance(x, P))
-    if not cfg.use_cv:
+    if not use_cv:
         return pspec, {}, {}
     return pspec, pspec, vi_spec
 

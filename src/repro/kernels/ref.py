@@ -32,6 +32,36 @@ def quantize_groups_ref(x, u, bits: int = 8):
     return jnp.where(scale > 0, deq, 0.0)
 
 
+def quantize_groups_native(x, u, bits: int = 8):
+    """Dtype-preserving variant of ``quantize_groups_ref``: every
+    intermediate (scale, ratio, floor, dequant) stays in ``x.dtype`` — only
+    the dither-vs-fraction comparison runs in float32, so the stochastic
+    rounding keeps its 24-bit-resolution unbiasedness *conditional on the
+    low-precision ratio*. On bf16 parameter-sized chains this halves the
+    transient HBM of the quantize graph (the ROADMAP bf16 compute path).
+
+    Equivalence tolerance vs the f32 oracle (same draws): the bf16 ratio
+    y = x/scale * levels carries an 8-bit mantissa, so it lands within
+    ~|y| * 2^-8 of the f32 ratio (up to ~half a level near |y| = levels at
+    8 bits). Codes therefore differ from the oracle's by AT MOST ONE
+    level, on the boundary set where the f32 ratio falls within that error
+    of a code edge — a few percent of Gaussian-distributed elements at 8
+    bits. Per element: |deq_native - deq_f32| <= scale/levels (one step)
+    plus bf16 representation error; E[Q(x)] - x picks up a conditional
+    bias bounded by the same ratio error. Pinned in
+    tests/test_compression_unified.py::test_native_compute_*.
+    """
+    levels = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    safe = jnp.where(scale > 0, scale, jnp.ones_like(scale))
+    y = x / safe * jnp.asarray(levels, x.dtype)
+    lo = jnp.floor(y)
+    up = u < (y - lo).astype(jnp.float32)   # the ONE f32 comparison
+    q = lo + up.astype(x.dtype)
+    deq = q * safe / jnp.asarray(levels, x.dtype)
+    return jnp.where(scale > 0, deq, jnp.zeros_like(deq))
+
+
 def quantize_block_ref(x, u, bits: int = 8, block: int = 256):
     """Stochastic block quantize-dequantize. x: (n,) float32 (n % block == 0);
     u: (n,) uniform draws in [0,1) controlling the stochastic rounding.

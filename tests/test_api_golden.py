@@ -1,0 +1,428 @@
+"""Golden-trajectory equivalence: the unified ``repro.api`` driver (and the
+legacy entry points, now shims over it) reproduce the historical
+``sassmm.run`` / ``fedmm.run`` / ``naive.run`` / ``fedmm_ot.step`` loops
+bit-for-bit for the same seed and schedule.
+
+The reference implementations below are FROZEN copies of the pre-refactor
+modules (PR 1 state) — they are the golden oracles, do not "simplify" them
+to call the new API.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import compression as C
+from repro.core import fedmm, fedmm_ot, naive, sassmm
+from repro.core.quadratic import quadratic_for_objective
+from repro.core.surrogate import (Surrogate, tree_add, tree_axpy, tree_lerp,
+                                  tree_scale, tree_sub, tree_sq_norm)
+from repro.core.variational import DictLearnSpec, make_dictlearn
+from repro.data.synthetic import dictlearn_data
+from repro.optim.optimizers import adam_init, adam_update
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ===========================================================================
+# frozen legacy implementations (verbatim semantics of the seed modules)
+# ===========================================================================
+
+def legacy_sassmm_run(sur, s0, batches, gammas):
+    s_hat = s0
+    hist = []
+    for t, batch in enumerate(batches):
+        gamma = gammas(t + 1) if callable(gammas) else gammas[t]
+        theta = sur.T(s_hat)
+        s_new = tree_lerp(s_hat, sur.s_bar(batch, theta), gamma)
+        s_new = sur.project(s_new)
+        m = {"e_s": tree_sq_norm(tree_sub(s_new, s_hat)) / (gamma ** 2)}
+        s_hat = s_new
+        if sur.loss is not None:
+            m = dict(m, loss=sur.loss(batch, sur.T(s_hat)))
+        hist.append({k: float(v) for k, v in m.items()})
+    return s_hat, hist
+
+
+def _legacy_fedmm_step(sur, s_hat, v, v_i, client_batches, gamma, key, *,
+                       n, p, alpha, mu, compressor, param_space=False):
+    theta = sur.T(s_hat)
+    k_part, k_quant = jax.random.split(key)
+    active = jax.random.bernoulli(k_part, p, (n,))
+    quant_keys = jax.random.split(k_quant, n)
+
+    def client_update(batch, v_i_c, qkey):
+        s_i = sur.s_bar(batch, s_hat if param_space else theta)
+        out = sur.T(s_i) if param_space else s_i
+        delta = tree_sub(tree_sub(out, s_hat), v_i_c)
+        return compressor.apply(qkey, delta)
+
+    q = jax.vmap(client_update, in_axes=(0, 0, 0))(
+        client_batches, v_i, quant_keys)
+    mask = active.astype(jnp.float32)
+    q = jax.tree.map(lambda x: x * mask.reshape((n,) + (1,) * (x.ndim - 1)), q)
+    v_i_new = jax.tree.map(lambda vv, dq: vv + (alpha / p) * dq, v_i, q)
+    agg = jax.tree.map(lambda x: jnp.tensordot(mu, x, axes=1), q)
+    h = tree_add(v, tree_scale(agg, 1.0 / p))
+    s_half = tree_axpy(gamma, h, s_hat)
+    s_new = s_half if param_space else sur.project(s_half)
+    v_new = tree_add(v, tree_scale(agg, alpha / p))
+    metrics = {"e_s": tree_sq_norm(tree_sub(s_new, s_hat)) / (gamma ** 2),
+               "n_active": jnp.sum(mask)}
+    return s_new, v_new, v_i_new, metrics
+
+
+def legacy_fedmm_run(sur, s0, client_batch_fn, gammas, key, *, n, p, alpha,
+                     compressor, n_rounds, v0_i=None, eval_batch=None,
+                     param_space=False, diag_fn=None, track_mirror=True):
+    mu = jnp.full((n,), 1.0 / n)
+    if v0_i is None:
+        v0_i = jax.tree.map(lambda x: jnp.zeros((n,) + x.shape, x.dtype), s0)
+    v = jax.tree.map(lambda x: jnp.tensordot(mu, x, axes=1), v0_i)
+    s_hat, v_i = s0, v0_i
+    step_j = jax.jit(lambda sh, vv, vi, cb, g, k: _legacy_fedmm_step(
+        sur, sh, vv, vi, cb, g, k, n=n, p=p, alpha=alpha, mu=mu,
+        compressor=compressor, param_space=param_space))
+    theta_prev = sur.T(s_hat) if (track_mirror and not param_space) else None
+    diag_prev = diag_fn(s_hat) if diag_fn is not None else None
+    hist = []
+    for t in range(n_rounds):
+        key, k_round, k_batch = jax.random.split(key, 3)
+        gamma = float(gammas(t + 1)) if callable(gammas) else float(gammas[t])
+        batches = client_batch_fn(t, k_batch)
+        s_hat, v, v_i, m = step_j(s_hat, v, v_i, batches, gamma, k_round)
+        m = {k: float(x) for k, x in m.items()}
+        if theta_prev is not None:
+            theta_new = sur.T(s_hat)
+            m["e_p_s"] = float(tree_sq_norm(tree_sub(theta_new, theta_prev))) \
+                / gamma ** 2
+            theta_prev = theta_new
+        if diag_prev is not None:
+            diag_new = diag_fn(s_hat)
+            m["e_s_p"] = float(tree_sq_norm(tree_sub(diag_new, diag_prev))) \
+                / gamma ** 2
+            diag_prev = diag_new
+        if sur.loss is not None and eval_batch is not None:
+            th = s_hat if param_space else sur.T(s_hat)
+            m["loss"] = float(sur.loss(eval_batch, th))
+        hist.append(m)
+    return s_hat, v, v_i, hist
+
+
+def legacy_fedot_step(state, spec, cfg, client_x, y_q, gamma, key):
+    """Frozen copy of the seed ``fedmm_ot.step``."""
+    ot = fedmm_ot
+    n, p, alpha = cfg.n_clients, cfg.p, cfg.alpha
+    mu = jnp.full((n,), 1.0 / n)
+    k_part, _ = jax.random.split(key)
+    active = jax.random.bernoulli(k_part, p, (n,)).astype(jnp.float32)
+
+    grad_local = jax.grad(
+        lambda w, xp: ot.local_objective(w, state.theta, spec, xp, y_q,
+                                         cfg.lam))
+
+    def best_response(x_i):
+        w = state.omega
+        for _ in range(cfg.client_steps):
+            g = grad_local(w, x_i)
+            w = jax.tree.map(lambda a, b: a - cfg.client_lr * b, w, g)
+        return w
+
+    omega_i = jax.vmap(best_response)(client_x)
+    delta = jax.tree.map(
+        lambda wi, w, v: (wi - w[None]) - v, omega_i, state.omega, state.v_i)
+    delta = jax.tree.map(
+        lambda x: x * active.reshape((n,) + (1,) * (x.ndim - 1)), delta)
+    v_i_new = jax.tree.map(lambda v, d: v + (alpha / p) * d, state.v_i, delta)
+    agg = jax.tree.map(lambda x: jnp.tensordot(mu, x, axes=1), delta)
+    h = tree_add(state.v, tree_scale(agg, 1.0 / p))
+    omega_new = tree_axpy(gamma, h, state.omega)
+    v_new = tree_add(state.v, tree_scale(agg, alpha / p))
+
+    grad_conj = jax.grad(
+        lambda th: ot.conjugate_objective(omega_new, th, spec, y_q, cfg.lam))
+
+    def adam_body(carry, _):
+        th, opt = carry
+        g = grad_conj(th)
+        th, opt = adam_update(th, g, opt, cfg.server_lr)
+        return (th, opt), None
+
+    (theta_new, opt_new), _ = jax.lax.scan(
+        adam_body, (state.theta, state.theta_opt), None,
+        length=cfg.server_steps)
+    metrics = {"omega_update":
+               tree_sq_norm(tree_sub(omega_new, state.omega)) / gamma ** 2}
+    return fedmm_ot.FedOTState(omega=omega_new, theta=theta_new, v=v_new,
+                               v_i=v_i_new, theta_opt=opt_new,
+                               step=state.step + 1), metrics
+
+
+def legacy_fedadam_step(state, spec, client_x, y_q, lam, lr, key, p=1.0):
+    """Frozen copy of the seed ``fedmm_ot.fedadam_step``."""
+    ot = fedmm_ot
+    n = client_x.shape[0]
+    active = jax.random.bernoulli(key, p, (n,)).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(active), 1.0)
+
+    def client_grad(x_i):
+        def obj(params):
+            return ot.local_objective(params["omega"], params["theta"], spec,
+                                      x_i, y_q, lam)
+        return jax.grad(obj)({"omega": state.omega, "theta": state.theta})
+
+    grads = jax.vmap(client_grad)(client_x)
+    grads = jax.tree.map(
+        lambda g: jnp.tensordot(active, g, axes=1) / denom, grads)
+    params = {"omega": state.omega, "theta": state.theta}
+    new_params, new_opt = adam_update(params, grads, state.opt, lr)
+    return fedmm_ot.FedAdamState(omega=new_params["omega"],
+                                 theta=new_params["theta"],
+                                 opt=new_opt, step=state.step + 1)
+
+
+# ===========================================================================
+# shared fixtures
+# ===========================================================================
+
+def _quad_problem(n_clients=4, het=3.0, dim=6):
+    ks = jax.random.split(KEY, n_clients)
+    Xs = jnp.stack([jax.random.normal(k, (32, dim)) for k in ks])
+    w_i = jnp.stack([jnp.linspace(-1, 1, dim) + het * i
+                     for i in range(n_clients)])
+    ys = jnp.einsum("nbp,np->nb", Xs, w_i)
+
+    def loss(batch, theta):
+        xb, yb = batch
+        return 0.5 * jnp.mean((xb @ theta - yb) ** 2)
+
+    return (Xs, ys), quadratic_for_objective(loss, rho=0.05)
+
+
+def _assert_tree_equal(a, b, err=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=err)
+
+
+def _assert_hist_close(legacy_hist, new_hist, keys, rtol=1e-5, atol=1e-6):
+    for k in keys:
+        a = np.asarray([m[k] for m in legacy_hist])
+        b = np.asarray(new_hist[k], np.float64)
+        np.testing.assert_allclose(a, b, rtol=rtol, atol=atol, err_msg=k)
+
+
+# ===========================================================================
+# golden tests
+# ===========================================================================
+
+def test_golden_sassmm_centralized():
+    spec = DictLearnSpec(p=8, K=3, lam=0.1, eta=0.2, ista_iters=20)
+    sur = make_dictlearn(spec)
+    z, _ = dictlearn_data(KEY, 320, 8, 3)
+    s0 = sur.s_bar(z[:32], jax.random.normal(KEY, (8, 3)) * 0.1)
+    batches = [z[i * 16:(i + 1) * 16] for i in range(16)]
+    gammas = sassmm.decaying_stepsize(0.5)
+
+    s_legacy, hist_legacy = legacy_sassmm_run(sur, s0, batches, gammas)
+
+    # the eager (scan=False) driver path reproduces the legacy eager loop
+    # bit-for-bit
+    pstate, phist = api.run(api.as_problem(sur), s0, batches, gammas,
+                            scan=False)
+    _assert_tree_equal(pstate.x, s_legacy, "driver x (python path)")
+    _assert_hist_close(hist_legacy, phist, ["e_s", "loss"])
+
+    # the scan-jitted path (what sassmm.run now uses) matches up to XLA
+    # fusion reassociation of the ISTA matmuls (~1e-5 relative on CPU)
+    state, hist = sassmm.run(sur, s0, batches, gammas)
+    for a, b in zip(jax.tree.leaves(state.s_hat), jax.tree.leaves(s_legacy)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-5, atol=5e-5)
+    _assert_hist_close(hist_legacy,
+                       {k: [m[k] for m in hist] for k in hist[0]},
+                       ["loss"], rtol=1e-4, atol=1e-4)
+
+
+def test_golden_sassmm_schedule_forms_agree():
+    """Callable and array schedules give the same trajectory through every
+    entry point (the step-size inconsistency satellite)."""
+    spec = DictLearnSpec(p=6, K=2, ista_iters=10)
+    sur = make_dictlearn(spec)
+    z, _ = dictlearn_data(KEY, 128, 6, 2)
+    s0 = sur.s_bar(z[:16], jax.random.normal(KEY, (6, 2)) * 0.1)
+    batches = [z[i * 16:(i + 1) * 16] for i in range(8)]
+    fn = sassmm.decaying_stepsize(0.5)
+    arr = api.resolve_schedule(fn, 8)
+    st_fn, _ = sassmm.run(sur, s0, batches, fn)
+    st_arr, _ = sassmm.run(sur, s0, batches, arr)
+    _assert_tree_equal(st_fn.s_hat, st_arr.s_hat)
+
+
+def test_golden_fedmm():
+    (Xs, ys), sur = _quad_problem()
+    comp = C.block_quant(8, 64)
+    cfg = fedmm.FedMMConfig(n_clients=4, p=0.5, alpha=0.1, compressor=comp)
+    gammas = lambda t: 0.5 / jnp.sqrt(t)
+    batch_fn = lambda t, k: (Xs, ys)
+    rounds = 25
+
+    s_l, v_l, vi_l, hist_l = legacy_fedmm_run(
+        sur, jnp.zeros(6), batch_fn, gammas, KEY, n=4, p=0.5, alpha=0.1,
+        compressor=comp, n_rounds=rounds, eval_batch=(Xs.reshape(-1, 6),
+                                                      ys.reshape(-1)))
+    state, hist = fedmm.run(sur, jnp.zeros(6), batch_fn, gammas, KEY, cfg,
+                            rounds, eval_batch=(Xs.reshape(-1, 6),
+                                                ys.reshape(-1)))
+    _assert_tree_equal(state.s_hat, s_l, "fedmm s_hat")
+    _assert_tree_equal(state.v, v_l, "fedmm v")
+    _assert_tree_equal(state.v_i, vi_l, "fedmm v_i")
+    hist_stacked = {k: [m[k] for m in hist] for k in hist[0]}
+    _assert_hist_close(hist_l, hist_stacked,
+                       ["e_s", "n_active", "e_p_s", "loss"])
+
+
+def test_golden_fedmm_array_schedule_and_v0():
+    (Xs, ys), sur = _quad_problem(het=5.0)
+    cfg = fedmm.FedMMConfig(n_clients=4, p=0.5, alpha=0.2)
+    gammas = np.full((15,), 0.3, np.float32)
+    v0 = fedmm.init_control_variates_at_h(sur, jnp.zeros(6), (Xs, ys), cfg)
+    s_l, v_l, vi_l, _ = legacy_fedmm_run(
+        sur, jnp.zeros(6), lambda t, k: (Xs, ys), gammas, KEY, n=4, p=0.5,
+        alpha=0.2, compressor=C.identity(), n_rounds=15, v0_i=v0)
+    state, _ = fedmm.run(sur, jnp.zeros(6), lambda t, k: (Xs, ys), gammas,
+                         KEY, cfg, 15, v0_i=v0)
+    _assert_tree_equal(state.s_hat, s_l)
+    _assert_tree_equal(state.v_i, vi_l)
+
+
+def test_golden_naive():
+    (Xs, ys), sur = _quad_problem(het=3.0)
+    cfg = fedmm.FedMMConfig(n_clients=4, p=0.5, alpha=0.1,
+                            compressor=C.block_quant(8, 64))
+    theta0 = jnp.zeros(6)
+    diag_b = (Xs[:, :16], ys[:, :16])
+    rounds = 20
+
+    def tbar(theta):
+        return jax.tree.map(
+            lambda x: jnp.mean(x, axis=0),
+            jax.vmap(lambda b: sur.s_bar(b, theta))(diag_b))
+
+    th_l, v_l, vi_l, hist_l = legacy_fedmm_run(
+        sur, theta0, lambda t, k: (Xs, ys), lambda t: 0.3, KEY, n=4, p=0.5,
+        alpha=0.1, compressor=cfg.compressor, n_rounds=rounds,
+        eval_batch=(Xs.reshape(-1, 6), ys.reshape(-1)), param_space=True,
+        diag_fn=tbar)
+    state, hist = naive.run(sur, theta0, lambda t, k: (Xs, ys),
+                            lambda t: 0.3, KEY, cfg, rounds,
+                            eval_batch=(Xs.reshape(-1, 6), ys.reshape(-1)),
+                            surrogate_diag_batches=diag_b)
+    _assert_tree_equal(state.theta, th_l, "naive theta")
+    _assert_tree_equal(state.v_i, vi_l, "naive v_i")
+    hist_stacked = {k: [m[k] for m in hist] for k in hist[0]}
+    # legacy naive reports E^p under the key "e_p"
+    legacy_hist = [dict(m, e_p=m["e_s"]) for m in hist_l]
+    _assert_hist_close(legacy_hist, hist_stacked,
+                       ["e_p", "n_active", "e_s_p", "loss"])
+
+
+def test_golden_fedot_step():
+    spec = fedmm_ot.ICNNSpec(dim=2, hidden=(8, 8), strong_convexity=0.3)
+    cfg = fedmm_ot.FedOTConfig(n_clients=3, p=1.0, alpha=0.01, lam=2.0,
+                               client_lr=1e-2, client_steps=2,
+                               server_steps=3, server_lr=1e-3)
+    state_l = fedmm_ot.init(KEY, spec, cfg)
+    state_n = fedmm_ot.init(KEY, spec, cfg)
+    _assert_tree_equal(state_l.omega, state_n.omega)
+    kx, ky = jax.random.split(jax.random.PRNGKey(3))
+    client_x = jax.random.normal(kx, (3, 16, 2))
+    y_q = jax.random.normal(ky, (32, 2))
+    for t in range(3):
+        k = jax.random.PRNGKey(t)
+        state_l, m_l = legacy_fedot_step(state_l, spec, cfg, client_x, y_q,
+                                         0.8, k)
+        state_n, m_n = fedmm_ot.step(state_n, spec, cfg, client_x, y_q,
+                                     0.8, k)
+        _assert_tree_equal(state_n.omega, state_l.omega, f"omega @ {t}")
+        _assert_tree_equal(state_n.theta, state_l.theta, f"theta @ {t}")
+        _assert_tree_equal(state_n.v_i, state_l.v_i, f"v_i @ {t}")
+        np.testing.assert_allclose(float(m_n["omega_update"]),
+                                   float(m_l["omega_update"]),
+                                   rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("p", [1.0, 0.7])
+def test_golden_fedadam_step(p):
+    """p < 1 included: the shim feeds the legacy raw-key participation
+    draw into the driver, so the active sets (and hence trajectories)
+    match the historical implementation for every p."""
+    spec = fedmm_ot.ICNNSpec(dim=2, hidden=(8, 8), strong_convexity=0.3)
+    state_l = fedmm_ot.fedadam_init(KEY, spec)
+    state_n = fedmm_ot.fedadam_init(KEY, spec)
+    kx, ky = jax.random.split(jax.random.PRNGKey(4))
+    client_x = jax.random.normal(kx, (3, 16, 2))
+    y_q = jax.random.normal(ky, (32, 2))
+    for t in range(3):
+        k = jax.random.PRNGKey(t)
+        state_l = legacy_fedadam_step(state_l, spec, client_x, y_q,
+                                      lam=2.0, lr=1e-3, key=k, p=p)
+        state_n = fedmm_ot.fedadam_step(state_n, spec, client_x, y_q,
+                                        lam=2.0, lr=1e-3, key=k, p=p)
+        for a, b in zip(jax.tree.leaves(state_n.omega),
+                        jax.tree.leaves(state_l.omega)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-6, atol=1e-7)
+        for a, b in zip(jax.tree.leaves(state_n.theta),
+                        jax.tree.leaves(state_l.theta)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-6, atol=1e-7)
+
+
+def test_lazy_fallback_over_scan_budget(monkeypatch):
+    """When the trajectory's batches would exceed the scan budget, run()
+    generates them lazily per round (constant memory, legacy-loop style)
+    and still matches the scan trajectory."""
+    import repro.api.driver as drv
+    (Xs, ys), sur = _quad_problem()
+    spec = api.FederationSpec(n_clients=4, participation=0.5, alpha=0.1)
+    problem = api.as_problem(sur)
+    calls = []
+
+    def batch_fn(t, k):
+        calls.append(t)
+        return (Xs, ys)
+
+    kwargs = dict(spec=spec, key=KEY, n_rounds=6)
+    st_scan, _ = api.run(problem, jnp.zeros(6), batch_fn, 0.3, **kwargs)
+    n_eager = calls.count(0)
+    monkeypatch.setattr(drv, "SCAN_BATCH_BYTES_MAX", 1)
+    calls.clear()
+    with pytest.warns(UserWarning, match="scan budget"):
+        st_lazy, _ = api.run(problem, jnp.zeros(6), batch_fn, 0.3, **kwargs)
+    # lazy path: one probe call + one call per round, none stacked
+    assert calls == [0, 0, 1, 2, 3, 4, 5] and n_eager == 1
+    _assert_tree_equal(st_scan.x, st_lazy.x)
+    _assert_tree_equal(st_scan.v_i, st_lazy.v_i)
+
+
+def test_scan_and_python_paths_agree():
+    """The lax.scan trajectory equals the per-round python fallback."""
+    (Xs, ys), sur = _quad_problem()
+    spec = api.FederationSpec(n_clients=4, participation=0.5, alpha=0.1,
+                              compressor=C.block_quant(8, 64))
+    problem = api.as_problem(sur)
+    kwargs = dict(spec=spec, key=KEY, n_rounds=12, track_mirror=True,
+                  eval_batch=(Xs.reshape(-1, 6), ys.reshape(-1)))
+    st_s, h_s = api.run(problem, jnp.zeros(6), lambda t, k: (Xs, ys),
+                        lambda t: 0.3, scan=True, **kwargs)
+    st_p, h_p = api.run(problem, jnp.zeros(6), lambda t, k: (Xs, ys),
+                        lambda t: 0.3, scan=False, **kwargs)
+    _assert_tree_equal(st_s.x, st_p.x)
+    _assert_tree_equal(st_s.v_i, st_p.v_i)
+    for k in h_s:
+        np.testing.assert_allclose(np.asarray(h_s[k]), np.asarray(h_p[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)

@@ -1,0 +1,191 @@
+"""FederationSpec combinatorics: every composition of participation x
+variates x compression x aggregation drives the quadratic toy problem
+through the scan-jitted driver without forking any code path."""
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import compression as C
+from repro.core.quadratic import quadratic_for_objective
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _toy(n_clients=3, dim=4, het=2.0):
+    ks = jax.random.split(KEY, n_clients)
+    Xs = jnp.stack([jax.random.normal(k, (16, dim)) for k in ks])
+    w_i = jnp.stack([jnp.linspace(-1, 1, dim) + het * i
+                     for i in range(n_clients)])
+    ys = jnp.einsum("nbp,np->nb", Xs, w_i)
+
+    def loss(batch, theta):
+        xb, yb = batch
+        return 0.5 * jnp.mean((xb @ theta - yb) ** 2)
+
+    return (Xs, ys), quadratic_for_objective(loss, rho=0.05)
+
+
+def _run_combo(participation, variates, compressor, aggregation, rounds=4):
+    (Xs, ys), sur = _toy()
+    alpha = 0.1 if variates != "off" else 0.0
+    spec = api.FederationSpec(n_clients=3, participation=participation,
+                              alpha=alpha, variates=variates,
+                              compressor=compressor, aggregation=aggregation)
+    x0 = jnp.zeros(4)
+    state, hist = api.run(
+        api.as_problem(sur), x0, lambda t, k: (Xs, ys), lambda t: 0.3,
+        spec=spec, key=KEY, n_rounds=rounds,
+        eval_batch=(Xs.reshape(-1, 4), ys.reshape(-1)),
+        init_batches=(Xs, ys) if variates == "at-init" else None)
+    return spec, state, hist
+
+
+FAST_COMBOS = [
+    (1.0, "zero", C.identity(), "surrogate"),
+    (0.5, "zero", C.block_quant(8, 64), "surrogate"),
+    (0.5, "at-init", C.identity(), "surrogate"),
+    (0.5, "off", C.block_quant(8, 64), "surrogate"),
+    (1.0, "zero", C.rand_k(0.5), "parameter"),
+    (0.5, "zero", C.block_quant(8, 64), "parameter"),
+    (0.5, "off", C.identity(), "parameter"),
+    (1.0, "at-init", C.block_quant(4, 64), "parameter"),
+]
+
+
+@pytest.mark.parametrize("participation,variates,compressor,aggregation",
+                         FAST_COMBOS)
+def test_spec_combinations_fast(participation, variates, compressor,
+                                aggregation):
+    spec, state, hist = _run_combo(participation, variates, compressor,
+                                   aggregation)
+    # the iterate stays finite and the metric stack has one row per round
+    for leaf in jax.tree.leaves(state.x):
+        assert np.isfinite(np.asarray(leaf)).all()
+    e_key = "e_s" if aggregation == "surrogate" else "e_p"
+    assert hist[e_key].shape == (4,)
+    assert np.isfinite(np.asarray(hist["loss"])).all()
+    assert float(hist["omega_eff"][0]) == pytest.approx(
+        C.effective_omega(compressor.omega, participation), rel=1e-5)
+    if variates == "off":
+        assert jax.tree.leaves(state.v) == []
+        assert jax.tree.leaves(state.v_i) == []
+    else:
+        # Proposition 5 invariant: V_t == sum_i mu_i V_{t,i}
+        mu = spec.client_weights()
+        for v, vi in zip(jax.tree.leaves(state.v),
+                         jax.tree.leaves(state.v_i)):
+            np.testing.assert_allclose(
+                np.asarray(v), np.asarray(jnp.tensordot(mu, vi, axes=1)),
+                rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.slow
+def test_spec_combinations_full_grid():
+    """The full product grid (the combinatorics the five legacy stacks used
+    to hand-plumb) runs through the single driver."""
+    for participation, variates, comp, agg in itertools.product(
+            (1.0, 0.5), ("zero", "at-init", "off"),
+            (C.identity(), C.block_quant(8, 64), C.rand_k(0.5)),
+            ("surrogate", "parameter")):
+        _, state, hist = _run_combo(participation, variates, comp, agg,
+                                    rounds=3)
+        for leaf in jax.tree.leaves(state.x):
+            assert np.isfinite(np.asarray(leaf)).all(), (
+                participation, variates, comp.name, agg)
+
+
+def test_at_init_variates_follow_the_aggregation_space():
+    """variates='at-init' must warm-start in the iterate's space. On
+    dictionary learning S-space ((p,p)+(p,K) stats) and Theta-space
+    ((p,K)) have different shapes, so a wrong-space warm start cannot
+    hide (it did on the quadratic toy, where the spaces coincide)."""
+    from repro.core.variational import DictLearnSpec, make_dictlearn
+    from repro.data.synthetic import dictlearn_data
+    sur = make_dictlearn(DictLearnSpec(p=8, K=3, ista_iters=5))
+    z, _ = dictlearn_data(KEY, 96, 8, 3)
+    clients = z.reshape(3, 32, 8)
+    theta0 = jax.random.normal(KEY, (8, 3)) * 0.1
+    spec = api.FederationSpec(n_clients=3, alpha=0.1, variates="at-init",
+                              aggregation="parameter")
+    state, hist = api.run(api.as_problem(sur), theta0, lambda t, k: clients,
+                          0.3, spec=spec, key=KEY, n_rounds=3,
+                          init_batches=clients)
+    # v_i lives in Theta-space: one (8, 3) slot per client
+    assert jax.tree.leaves(state.v_i)[0].shape == (3, 8, 3)
+    for leaf in jax.tree.leaves(state.x):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # surrogate mode still warm-starts in S-space (the Theorem-1 form)
+    s0 = sur.s_bar(z[:32], theta0)
+    st_s, _ = api.run(api.as_problem(sur), s0, lambda t, k: clients, 0.3,
+                      spec=dataclasses.replace(spec,
+                                               aggregation="surrogate"),
+                      key=KEY, n_rounds=2, init_batches=clients)
+    assert (jax.tree.leaves(st_s.v_i)[0].shape
+            == (3,) + jax.tree.leaves(s0)[0].shape)
+
+
+def test_eval_every_subsamples_loss():
+    (Xs, ys), sur = _toy()
+    spec = api.FederationSpec(n_clients=3)
+    _, hist = api.run(api.as_problem(sur), jnp.zeros(4),
+                      lambda t, k: (Xs, ys), 0.3, spec=spec, key=KEY,
+                      n_rounds=7, eval_batch=(Xs.reshape(-1, 4),
+                                              ys.reshape(-1)),
+                      eval_every=3)
+    loss = np.asarray(hist["loss"])
+    # evaluated at rounds 2, 5 (every 3rd) and the last round 6; NaN else
+    assert np.isfinite(loss[[2, 5, 6]]).all()
+    assert np.isnan(loss[[0, 1, 3, 4]]).all()
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        api.FederationSpec(n_clients=2, participation=0.0)
+    with pytest.raises(ValueError):
+        api.FederationSpec(n_clients=2, aggregation="thetaspace")
+    with pytest.raises(ValueError):
+        api.FederationSpec(n_clients=2, variates="off", alpha=0.1)
+    with pytest.raises(ValueError):
+        api.FederationSpec(n_clients=2, variates="warm")
+
+
+def test_resolve_schedule_forms():
+    fn = lambda t: 0.5 / jnp.sqrt(t)
+    arr = api.resolve_schedule(fn, 6)
+    assert arr.shape == (6,) and arr.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(arr),
+                               [0.5 / np.sqrt(t + 1.0) for t in range(6)],
+                               rtol=1e-6)
+    # sequence and scalar forms
+    np.testing.assert_allclose(
+        np.asarray(api.resolve_schedule([0.1, 0.2, 0.3], 2)), [0.1, 0.2])
+    np.testing.assert_allclose(np.asarray(api.resolve_schedule(0.3, 3)),
+                               [0.3, 0.3, 0.3])
+    with pytest.raises(ValueError):
+        api.resolve_schedule([0.1], 5)
+
+
+def test_naive_is_one_flag_not_a_fork():
+    """dataclasses.replace(spec, aggregation='parameter') turns FedMM into
+    the Section 3.1 baseline — same driver, same everything else."""
+    (Xs, ys), sur = _toy(het=0.0)   # homogeneous: both should behave
+    spec = api.FederationSpec(n_clients=3, participation=1.0,
+                              compressor=C.identity())
+    problem = api.as_problem(sur)
+    s0 = jnp.zeros(4)
+    st_s, _ = api.run(problem, s0, lambda t, k: (Xs, ys), lambda t: 0.5,
+                      spec=spec, key=KEY, n_rounds=10)
+    st_p, _ = api.run(problem, s0, lambda t, k: (Xs, ys), lambda t: 0.5,
+                      spec=dataclasses.replace(spec,
+                                               aggregation="parameter"),
+                      key=KEY, n_rounds=10)
+    # quadratic surrogate + identity prox: T is affine, so on a homogeneous
+    # split the two aggregation spaces coincide (Section 3.1's point is
+    # they diverge exactly when T is nonlinear / data heterogeneous)
+    np.testing.assert_allclose(np.asarray(problem.T(st_s.x)),
+                               np.asarray(st_p.x), rtol=1e-4, atol=1e-5)

@@ -174,6 +174,65 @@ def test_unbiased_at_worst_case_fraction_with_sqrt_rate(dither):
         assert (bias <= tol).all(), (n, bias, tol)
 
 
+def test_native_compute_matches_oracle_within_one_level():
+    """The bf16 compute path (compute='native'): codes within +-1 level of
+    the f32 oracle, disagreeing only on the bf16 ratio-rounding boundary
+    set. That set has per-element measure ~|y| * 2^-8 (the bf16 ratio's
+    absolute error), i.e. up to ~half a level near |y| = levels — a few
+    percent of elements on Gaussian data at 8 bits (we allow 10%). The
+    dequant error stays within one quantization step (+ bf16
+    representation error)."""
+    bits, block = 8, 64
+    levels = 2.0 ** (bits - 1) - 1.0
+    key = jax.random.PRNGKey(11)
+    x = (jax.random.normal(key, (64, 128)) * 3.0).astype(jnp.bfloat16)
+
+    out_nat = C.quantize_leaf(key, x, bits=bits, block=block, dither="hash",
+                              shard_safe=True, compute="native")
+    out_f32 = C.quantize_leaf(key, x, bits=bits, block=block, dither="hash",
+                              shard_safe=True)
+    assert out_nat.dtype == jnp.bfloat16
+
+    g = C.group_size(128, block)
+    xg = np.asarray(x, np.float32).reshape(64, 128 // g, g)
+    scale = np.abs(xg).max(axis=-1, keepdims=True)
+    step = np.where(scale > 0, scale, 1.0) / levels      # one level, per group
+    a = np.asarray(out_nat, np.float32).reshape(xg.shape)
+    b = np.asarray(out_f32, np.float32).reshape(xg.shape)
+    # one-step tolerance + bf16 representation error of the dequant value
+    tol = step * (1.0 + 2.0 ** -7) + np.abs(b) * 2.0 ** -7
+    assert (np.abs(a - b) <= tol).all()
+    # the boundary set where the paths disagree is small
+    disagree = np.mean(np.abs(a - b) > np.abs(b) * 2.0 ** -7 + 1e-6)
+    assert disagree < 0.10, disagree
+
+
+def test_native_compute_noop_for_f32_and_unbiased_for_bf16():
+    """compute='native' is the identity choice for f32 inputs, and on bf16
+    it stays unbiased conditional on the bf16 ratio (MC check at the
+    2^-8-relative tolerance documented in quantize_groups_native)."""
+    key = jax.random.PRNGKey(13)
+    x32 = jax.random.normal(key, (8, 64)) * 2.0
+    a = C.quantize_leaf(key, x32, bits=8, block=64, dither="hash",
+                        compute="native")
+    b = C.quantize_leaf(key, x32, bits=8, block=64, dither="hash")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    x = jnp.array([1.0, 0.51], jnp.bfloat16)             # g = 2, scale = 1
+    comp = C.block_quant(8, 2, dither="hash", compute="native")
+    keys = jax.random.split(jax.random.PRNGKey(17), 4096)
+    outs = jax.vmap(lambda k: comp.apply(k, x))(keys)
+    bias = np.abs(np.asarray(jnp.mean(outs.astype(jnp.float32), axis=0))
+                  - np.asarray(x, np.float32))
+    # MC noise (~step/2/sqrt(n)) + the documented 2^-8-relative ratio bias
+    tol = 0.5 / 127.0 / math.sqrt(4096) * 4.0 \
+        + np.abs(np.asarray(x, np.float32)) * 2.0 ** -8
+    assert (bias <= tol).all(), (bias, tol)
+
+    with pytest.raises(ValueError):
+        C.quantize_leaf(key, x32, compute="bf16")
+
+
 def test_dither_sources_are_uniform_enough():
     """P(u < t) matches t at uint8-resolution-breaking thresholds."""
     t = 255.9 / 256.0
