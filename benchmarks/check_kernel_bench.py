@@ -1,0 +1,84 @@
+"""CI gate: fail if quantize throughput regressed vs the committed baseline.
+
+Compares the ``quantize_*`` rows of a fresh ``kernel_bench --smoke --json``
+run against the ``pair == "kernel_bench_smoke"`` entry committed in
+``results/perf_log.json``. A row fails when it is more than ``--tol``
+(default 25%) SLOWER than the committed ``us`` value. Rows present in only
+one of the two sets are reported but do not fail the gate (renames land
+together with a refreshed baseline).
+
+The baseline is wall time on the machine that committed it. To keep a
+uniformly slower runner class from tripping the gate without a code
+change, each row's slowdown is normalized by the MEDIAN slowdown across
+all quantize rows (machine drift factor, only ever >= 1): a row fails
+when it is ``--tol`` slower than the baseline *beyond* what every row
+shares. Blind spot: a code change that slows every quantize row by the
+same factor reads as drift — the absolute ratios are printed so a human
+can still see it. If drift is persistently large, refresh the baseline
+from the target runner class (re-run ``kernel_bench --smoke --json``
+there and replace the ``kernel_bench_smoke`` entry) rather than widening
+``--tol``.
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py --smoke --json out.json
+    python benchmarks/check_kernel_bench.py --json out.json \
+        --baseline results/perf_log.json --tol 0.25
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", required=True, help="fresh kernel_bench rows")
+    ap.add_argument("--baseline", default="results/perf_log.json")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="max fractional slowdown before failing")
+    args = ap.parse_args()
+
+    fresh = {r["name"]: r["us"] for r in json.load(open(args.json))
+             if r["name"].startswith("quantize_") and r["us"] > 0}
+    log = json.load(open(args.baseline))
+    base_entry = next((e for e in log if e.get("pair") == "kernel_bench_smoke"),
+                      None)
+    if base_entry is None:
+        print("no kernel_bench_smoke baseline committed; skipping gate")
+        return 0
+    base = {r["name"]: r["us"] for r in base_entry["result"]["rows"]
+            if r["name"].startswith("quantize_") and r["us"] > 0}
+
+    ratios = sorted(us / base[n] for n, us in fresh.items() if n in base)
+    drift = 1.0
+    if ratios:
+        mid = ratios[len(ratios) // 2] if len(ratios) % 2 else \
+            0.5 * (ratios[len(ratios) // 2 - 1] + ratios[len(ratios) // 2])
+        drift = max(1.0, mid)
+    print(f"machine drift factor (median slowdown): {drift:.2f}x\n")
+
+    failed = []
+    for name, us in sorted(fresh.items()):
+        if name not in base:
+            print(f"NEW   {name}: {us:.1f}us (no baseline)")
+            continue
+        ratio = us / base[name]
+        status = "FAIL" if ratio / drift > 1.0 + args.tol else "ok"
+        print(f"{status:5s} {name}: {us:.1f}us vs baseline "
+              f"{base[name]:.1f}us ({ratio:.2f}x raw, "
+              f"{ratio / drift:.2f}x drift-adjusted)")
+        if status == "FAIL":
+            failed.append(name)
+    for name in sorted(set(base) - set(fresh)):
+        print(f"GONE  {name} (was {base[name]:.1f}us)")
+
+    if failed:
+        print(f"\nquantize throughput regressed >{args.tol:.0%} on: "
+              f"{', '.join(failed)}")
+        return 1
+    print("\nquantize throughput within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,12 +3,24 @@ on CPU — structural check + oracle comparison; on TPU the same harness times
 the compiled Mosaic kernels), of their jnp oracles under jit, and of the
 unified ``core.compression`` quantize path (hash vs threefry dither).
 
-Emits ``name,us_per_call,derived`` CSV rows (benchmarks/run.py contract).
-``--smoke`` shrinks sizes/reps for CI collection-health runs.
+PR-3 rows make the wire real:
+  * ``quantize_encode_*`` — the packed wire-format encode kernel (int8
+    codes + f32 scales; the dequantized array never hits HBM);
+  * streamed- vs in-kernel-dither pairs — the ``hbm_arrays/elem`` derived
+    field records the HBM traffic contract (3 arrays/element when the
+    dither streams from HBM, 2 when generated on-chip);
+  * ``wire_bytes_*`` — actual encoded payload bytes vs the dequantized f32
+    stack for one leaf (the packed-vs-f32 footprint ratio).
+
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks/run.py contract);
+``--json PATH`` additionally dumps ``[{name, us, derived}, ...]`` for the
+CI artifact + regression gate (see ``benchmarks/check_kernel_bench.py``).
+``--smoke`` shrinks sizes/reps for CI runs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -30,9 +42,9 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def main(smoke: bool = False):
+def main(smoke: bool = False, json_path: str | None = None):
     rows = []
-    reps = 1 if smoke else 5
+    reps = 2 if smoke else 5
     qn = 1 << (12 if smoke else 16)
     qtag = "4k" if smoke else "64k"
 
@@ -53,6 +65,43 @@ def main(smoke: bool = False):
         t_c = _time(fn, x, reps=reps)
         rows.append((f"quantize_compressor_{dither}_{qtag}", t_c,
                      f"{x.size * 4 / (t_c / 1e6) / 1e9:.2f}GB/s"))
+
+    # --- PR-3: streamed vs in-kernel dither (2-D grouped dispatch) ---------
+    # paired rows: same kernel math, dither streamed from HBM (x, u in /
+    # out out = 3 arrays per element) vs generated on-chip (2 arrays).
+    R = 1 << (4 if smoke else 7)
+    x2 = jax.random.normal(KEY, (R, 1024))
+    u2 = jax.random.uniform(jax.random.PRNGKey(3), (R, 1024))
+    seed = C.fold_seed(KEY)
+    t_s = _time(lambda a, b: ops.quantize_dequantize_grouped(
+        a, b, bits=8, group=256), x2, u2, reps=reps)
+    rows.append((f"quantize_grouped_streamed_dither_{R}x1024", t_s,
+                 "hbm_arrays/elem=3"))
+    t_i = _time(lambda a: ops.quantize_dequantize_kernel_dither(
+        a, seed, bits=8, group=256), x2, reps=reps)
+    rows.append((f"quantize_grouped_kernel_dither_{R}x1024", t_i,
+                 "hbm_arrays/elem=2"))
+
+    # --- PR-3: wire-format encode (codes + scales, no dequant in HBM) ------
+    t_e = _time(lambda a, b: ops.quantize_encode_grouped(
+        a, b, bits=8, group=256), x2, u2, reps=reps)
+    rows.append((f"quantize_encode_streamed_dither_{R}x1024", t_e,
+                 "out_bytes/elem=1.016"))
+    t_ek = _time(lambda a: ops.quantize_encode_kernel_dither(
+        a, seed, bits=8, group=256), x2, reps=reps)
+    rows.append((f"quantize_encode_kernel_dither_{R}x1024", t_ek,
+                 "hbm_arrays/elem=2 out_bytes/elem=1.016"))
+
+    # --- PR-3: packed payload vs dequantized f32 bytes (one leaf) ----------
+    for bits in (8, 4):
+        comp = C.block_quant(bits, 256)
+        payload = comp.encode(KEY, x2)
+        actual = comp.encoded_bytes(payload)
+        f32_bytes = x2.size * 4
+        rows.append((f"wire_bytes_b{bits}_{R}x1024", 0.0,
+                     f"packed={actual}B f32={f32_bytes}B "
+                     f"ratio={f32_bytes / actual:.2f}x "
+                     f"analytic_match={int(actual == comp.payload_bytes(x2))}"))
 
     # flash attention
     S_attn = 128 if smoke else 512
@@ -82,11 +131,18 @@ def main(smoke: bool = False):
 
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump([{"name": n, "us": us, "derived": d}
+                       for n, us, d in rows], f, indent=1)
     return rows
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny sizes / 1 rep (CI collection-health run)")
-    main(smoke=ap.parse_args().smoke)
+                    help="tiny sizes / fewer reps (CI run)")
+    ap.add_argument("--json", default=None,
+                    help="also dump rows as JSON (CI artifact + gate)")
+    a = ap.parse_args()
+    main(smoke=a.smoke, json_path=a.json)

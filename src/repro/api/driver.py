@@ -23,6 +23,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from ..core.compression import _tree_bytes
 from ..core.surrogate import (tree_add, tree_axpy, tree_lerp, tree_scale,
                               tree_sub, tree_sq_norm)
 from .problem import MMProblem, as_problem
@@ -119,11 +120,25 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
     """One federated MM round (Algorithm 2, every axis of the spec applied).
     ``client_batches`` is a pytree with a leading client axis of size n.
     ``active`` optionally overrides the A5 draw with a precomputed (n,)
-    bool/0-1 mask (callers that own their participation RNG stream)."""
+    bool/0-1 mask (callers that own their participation RNG stream).
+
+    When the spec's compressor carries a wire format (``encode`` is set —
+    the packed-code path of ``core/compression.py``), clients upload
+    ENCODED payloads and the server aggregates in code space: the stacked
+    n-client intermediate holding every client's update is the packed
+    codes + per-group scales (``bits/8 + scale_bytes/g`` bytes per
+    coordinate, ~1/4 of the f32 stack at b=8 and ~1/8 at b=4) and the
+    dequantization fuses into the weighted reduction — the dequantized
+    n-client f32 stack never exists as a vmap-boundary buffer. The
+    ``comm_bytes`` metric is computed from the ACTUAL encoded buffer
+    sizes, not an analytic model. ``decode . encode`` is bit-identical to
+    ``apply``, so trajectories are unchanged (tests/test_api_golden.py)."""
     n, p, alpha = spec.n_clients, spec.participation, spec.alpha
     mu = spec.client_weights()
     param_space = spec.aggregation == "parameter"
     use_v = spec.use_variates
+    comp = spec.compressor
+    use_wire = comp.encode is not None
 
     # line 4: broadcast — the mirror image T(Shat) (surrogate mode), the
     # iterate itself (parameter mode), or the problem's custom view
@@ -148,14 +163,24 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
             d = tree_sub(out, state.x)                     # line 7 (drift)
             if use_v:
                 d = tree_sub(d, v_i)
-        return spec.compressor.apply(qkey, d)              # line 9 (A4)
+        if use_wire:
+            return comp.encode(qkey, d)                    # line 9: wire fmt
+        return comp.apply(qkey, d)                         # line 9 (A4)
 
     if use_v:
-        q = jax.vmap(client_update, in_axes=(0, 0, 0))(
+        payload = jax.vmap(client_update, in_axes=(0, 0, 0))(
             client_batches, state.v_i, quant_keys)
     else:
-        q = jax.vmap(lambda b, k: client_update(b, None, k),
-                     in_axes=(0, 0))(client_batches, quant_keys)
+        payload = jax.vmap(lambda b, k: client_update(b, None, k),
+                           in_axes=(0, 0))(client_batches, quant_keys)
+    if use_wire:
+        # actual uplink bytes of ONE client's payload, read off the stacked
+        # encoded buffers (shapes are static under jit)
+        wire_bytes_client = comp.encoded_bytes(payload) / n
+        q = comp.decode(payload)   # batched; fuses into the aggregation
+    else:
+        wire_bytes_client = None
+        q = payload
     # non-participating clients send nothing / keep V_i
     q = jax.tree.map(
         lambda x: x * mask.reshape((n,) + (1,) * (x.ndim - 1)), q)
@@ -195,13 +220,16 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
         aux_new, aux_metrics = state.aux, {}
 
     drift = tree_sub(x_new, state.x)
-    comm = spec.compressor.round_metrics(state.x, p=p)
+    comm = comp.round_metrics(state.x, p=p)
+    per_client = (wire_bytes_client if use_wire
+                  else comm["payload_bytes_per_client"])
     metrics = {
         # E^s (surrogate) / E^p (parameter) — the Section 6 diagnostics
         ("e_p" if param_space else "e_s"):
             tree_sq_norm(drift) / (gamma ** 2),
         "n_active": jnp.sum(mask),
-        "comm_bytes": comm["payload_bytes_per_client"] * jnp.sum(mask),
+        # actual encoded-buffer bytes on the wire path, analytic otherwise
+        "comm_bytes": per_client * jnp.sum(mask),
         "omega_eff": jnp.asarray(comm["omega_eff"], jnp.float32),
     }
     if not param_space:
@@ -216,11 +244,6 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
 # run — the scan-jitted trajectory driver
 # ---------------------------------------------------------------------------
 
-def _tree_bytes(tree) -> int:
-    return sum(x.size * jnp.dtype(x.dtype).itemsize
-               for x in jax.tree.leaves(tree))
-
-
 def _stack_batches(batch_list):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *batch_list)
 
@@ -229,7 +252,8 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
         key=None, n_rounds: Optional[int] = None, eval_batch=None,
         eval_every: int = 1, track_mirror: bool = False, diag=None,
         scan: bool = True, v0_i=None, init_batches=None,
-        state0: Optional[DriverState] = None):
+        state0: Optional[DriverState] = None,
+        scan_batch_bytes_max: Optional[int] = None):
     """Drive ``n_rounds`` of the MM recursion; returns
     ``(final DriverState, metrics)`` where metrics is a stacked-pytree dict
     (each key an array with leading round axis). Use ``history_list`` for
@@ -255,6 +279,11 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
     scan: jit the whole trajectory as one ``lax.scan`` (default); False
     falls back to a per-round python loop (same math, useful when stacked
     batches would not fit or for debugging).
+    scan_batch_bytes_max: device-byte budget for the stacked trajectory
+    batches; above it the scan falls back to the lazy per-round loop.
+    Defaults to the module-level ``SCAN_BATCH_BYTES_MAX`` (1 GiB) — raise
+    it on big-memory hosts to keep the scan, lower it to force the
+    constant-memory path.
     """
     problem = as_problem(problem)
 
@@ -283,17 +312,24 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
         batch_keys.append(k_batch)
     round_keys = jnp.stack(round_keys)
     lazy = False
+    budget = (SCAN_BATCH_BYTES_MAX if scan_batch_bytes_max is None
+              else scan_batch_bytes_max)
     if static:
         batches = data
     else:
         first = data(0, batch_keys[0])
-        if n_rounds * _tree_bytes(first) > SCAN_BATCH_BYTES_MAX:
+        round_bytes = _tree_bytes(first)
+        if n_rounds * round_bytes > budget:
             # do NOT materialize the trajectory: generate each round's
             # batch inside the loop, constant-memory like the legacy loops
             if scan:
-                warnings.warn("stacked batches would exceed the scan "
-                              "budget; falling back to the per-round "
-                              "python loop")
+                warnings.warn(
+                    f"stacked batches would exceed the scan budget "
+                    f"({round_bytes:,} bytes/round x {n_rounds} rounds = "
+                    f"{n_rounds * round_bytes:,} bytes > "
+                    f"scan_batch_bytes_max={budget:,}); falling back to "
+                    f"the per-round python loop — pass run(..., "
+                    f"scan_batch_bytes_max=...) to raise the budget")
                 scan = False
             lazy, batches, first = True, None, None
         else:

@@ -14,14 +14,17 @@ Algorithm 2 (``core/fedmm.py``), the transformer-scale trainer
 has exactly one rounding semantics, defined by the pure-jnp oracle
 ``kernels/ref.py:quantize_groups_ref``; ``quantize_leaf`` below dispatches
 
-  * large leaves (>= ``KERNEL_DISPATCH_MIN`` elements, 128-aligned group;
-    flat in shard_safe mode) to the Pallas kernel
-    ``kernels/quantize_block.py`` via ``kernels/ops.py`` (interpret mode
-    on CPU, compiled Mosaic on TPU), and
+  * large leaves (>= ``KERNEL_DISPATCH_MIN`` elements with a 128-aligned
+    group — ANY rank: multi-dim leaves collapse their leading dims to rows
+    while the grouped last axis stays intact) to the Pallas kernels in
+    ``kernels/quantize_block.py`` via ``kernels/ops.py`` (interpret mode on
+    CPU, compiled Mosaic on TPU), and
   * everything else to the jnp oracle — in shard_safe mode applied
     group-wise along the LAST axis only, an elementwise-fusable graph that
-    preserves GSPMD sharding (a flat reshape across sharded dims would
-    rematerialize the leaf).
+    preserves GSPMD sharding. (The kernel's leading-dim collapse keeps the
+    last axis — the 'model'-sharded one — intact; on a sharded mesh the
+    pallas_call itself still needs a shard_map wrapper, so multi-host
+    sharded leaves should keep the jnp path.)
 
 Grouping has two modes behind ``shard_safe=``:
 
@@ -33,9 +36,9 @@ Grouping has two modes behind ``shard_safe=``:
     along the LAST axis with size ``group_size(D, block)`` — the largest
     power-of-2 that divides the per-shard width under worst-case 32-way
     sharding. Leaves whose last dim yields g == 1 pass through unquantized
-    (and are billed as uncompressed f32 by ``payload_bytes``).
+    (and are billed at their dtype by ``payload_bytes``).
 
-The stochastic-rounding dither comes from one of two sources behind the
+The stochastic-rounding dither comes from one of three sources behind the
 ``dither=`` flag:
 
   * ``"uniform"`` — ``jax.random.uniform`` (threefry; statistically clean,
@@ -43,10 +46,19 @@ The stochastic-rounding dither comes from one of two sources behind the
   * ``"hash"``    — a fused murmur3-finalizer hash of the element index and
     the folded key, producing 24-bit-resolution uniforms in [0, 1). Zero
     extra memory; the trainer's default at scale.
+  * ``"kernel"``  — OPT-IN: the dither is generated INSIDE the Pallas
+    kernel (2 instead of 3 HBM arrays per element). On real TPU the draws
+    come from the hardware PRNG (``pltpu.prng_seed``/``prng_random_bits``
+    seeded from the folded key + grid position) and therefore DIFFER from
+    the streamed sources — this mode is never golden-pinned. In interpret
+    mode (CPU validation) the kernel evaluates the same murmur hash as
+    ``"hash"`` in-kernel, so CPU draws match ``"hash"`` exactly. Leaves
+    that do not dispatch to the kernel fall back to ``"hash"``.
 
-Both paths compare the dither against the round-up fraction in float32
-(24-bit resolution), so the quantizer is unbiased to ~2^-24 per element —
-see ``tests/test_compression_unified.py`` for the 1/sqrt(trials) check.
+Both streamed paths compare the dither against the round-up fraction in
+float32 (24-bit resolution), so the quantizer is unbiased to ~2^-24 per
+element — see ``tests/test_compression_unified.py`` for the 1/sqrt(trials)
+check.
 
 Compute dtype is a third axis behind ``compute=``: ``"f32"`` (default) is
 the oracle semantics — the whole chain in float32, bit-identical to the
@@ -55,6 +67,25 @@ in the input dtype (the ROADMAP bf16 path: half the transient HBM on
 parameter-sized bf16 chains, codes within ±1 level of the oracle on the
 ~2^-8-measure bf16 ratio-rounding boundary — see
 ``kernels/ref.py:quantize_groups_native``).
+
+Wire format (the PACKED low-bit uplink; see src/repro/api/README.md)
+--------------------------------------------------------------------
+``block_quant`` compressors additionally expose an ``encode``/``decode``
+pair with a REAL wire format: per leaf, a ``PackedLeaf`` of
+
+  * ``codes``  — the integer quantization codes: int8 (1 byte/coord) for
+    4 < bits <= 8, bit-packed two-per-byte uint8 (0.5 bytes/coord) for
+    bits <= 4 (adjacent pairs along the code stream's last axis);
+  * ``scales`` — one scale per quantization group, float32 under the
+    oracle semantics (input dtype under ``compute="native"``).
+
+``decode(encode(key, tree))`` is BIT-IDENTICAL to ``apply(key, tree)``
+(same draws, same dispatch, same arithmetic order — the int8/nibble
+round-trip of the integer codes is exact), so the federated golden
+trajectories are unchanged when drivers aggregate in code space.
+``payload_bytes`` counts EXACTLY the bytes of those buffers (codes +
+scales, including flat-mode pad), and ``encoded_bytes``/``wire_bytes``
+measure the same number off an actual payload / eval_shape.
 """
 from __future__ import annotations
 
@@ -70,14 +101,88 @@ from ..kernels import ref as kernel_ref
 
 Pytree = object
 
-# Flat leaves at least this large go to the Pallas kernel.
+# Leaves at least this large (with a 128-aligned group) go to the Pallas
+# kernel.
 KERNEL_DISPATCH_MIN = 1 << 16
+
+# at or below this code width, two codes travel per byte
+PACK_BITS = 4
+
+DITHERS = ("hash", "uniform", "kernel")
+
+
+# ---------------------------------------------------------------------------
+# the wire format
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PackedLeaf:
+    """One leaf's uplink payload: packed codes + per-group scales.
+
+    codes: int8 ``(..., D)`` (shard mode) / ``(padded,)`` (flat mode), or
+    uint8 with half the last dim when bit-packed (bits <= 4). scales: one
+    per group — ``(..., D // g)`` shard / ``(n_blocks,)`` flat. The
+    remaining fields are static pytree metadata (shape/dtype of the
+    original leaf, code width, group size, grouping mode), so ``vmap``
+    batches the buffers and leaves the layout alone."""
+    codes: Pytree
+    scales: Pytree
+    shape: tuple
+    dtype: str
+    bits: int
+    group: int
+    mode: str  # "shard" | "flat"
+
+
+jax.tree_util.register_dataclass(
+    PackedLeaf, data_fields=("codes", "scales"),
+    meta_fields=("shape", "dtype", "bits", "group", "mode"))
+
+
+def pack_nibbles(codes):
+    """int8 codes in [-8, 7], even last dim -> uint8 with adjacent pairs in
+    one byte (low nibble = even index, high nibble = odd index)."""
+    lo = codes[..., 0::2]
+    hi = codes[..., 1::2]
+    return ((lo & 0x0F) | ((hi & 0x0F) << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed):
+    """Exact inverse of ``pack_nibbles`` (arithmetic-shift sign extension)."""
+    b = packed.astype(jnp.int8)
+    lo = jnp.left_shift(b, 4) >> 4
+    hi = b >> 4
+    return jnp.stack([lo, hi], axis=-1).reshape(packed.shape[:-1] + (-1,))
+
+
+def _maybe_pack(codes, bits: int):
+    if bits <= PACK_BITS and codes.shape[-1] % 2 == 0:
+        return pack_nibbles(codes)
+    return codes
+
+
+def _tree_bytes(tree) -> int:
+    """Actual buffer bytes of a pytree (arrays or ShapeDtypeStructs)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        shape = getattr(leaf, "shape", ())
+        n = int(math.prod(shape)) if shape else 1
+        total += n * jnp.dtype(getattr(leaf, "dtype", jnp.float32)).itemsize
+    return total
 
 
 @dataclasses.dataclass(frozen=True)
 class Compressor:
     """An unbiased compressor satisfying A4(omega), with communication
-    accounting (payload bytes per uplink, effective omega under Lemma 1)."""
+    accounting (payload bytes per uplink, effective omega under Lemma 1).
+
+    ``apply`` is the fused quantize->dequantize operator (what legacy
+    callers see). Compressors with a real wire format also carry
+    ``encode`` (-> pytree with ``PackedLeaf`` leaves; unquantized leaves
+    pass through raw) and ``decode`` (its exact inverse up to quantization:
+    ``decode . encode == apply`` bit-for-bit). ``decode`` accepts stacked
+    payloads (extra leading axes on the buffers) so servers can aggregate
+    straight off an n-client payload stack."""
 
     apply: Callable  # (key, pytree) -> pytree
     omega: float     # relative variance bound
@@ -86,6 +191,8 @@ class Compressor:
     # per-leaf payload model: (shape, itemsize) -> bytes on the wire
     # (None -> bits/8 * n)
     payload_fn: Optional[Callable] = None
+    encode: Optional[Callable] = None  # (key, pytree) -> payload pytree
+    decode: Optional[Callable] = None  # payload pytree -> pytree
 
     def __call__(self, key, s):
         return self.apply(key, s)
@@ -99,7 +206,9 @@ class Compressor:
     def payload_bytes(self, tree) -> float:
         """Uplink bytes for one client's payload of ``tree``'s shape.
         Accepts arrays or ShapeDtypeStructs (shape + dtype are read, so
-        uncompressed bf16 leaves bill 2 bytes/coord, not 4)."""
+        uncompressed bf16 leaves bill 2 bytes/coord, not 4). For wire-format
+        compressors this equals the ACTUAL encoded buffer bytes —
+        ``tests/test_wire_format.py`` pins it against ``encoded_bytes``."""
         total = 0.0
         for leaf in jax.tree.leaves(tree):
             shape = getattr(leaf, "shape", ())
@@ -107,6 +216,22 @@ class Compressor:
             itemsize = float(jnp.dtype(dt).itemsize) if dt is not None else 4.0
             total += self._leaf_payload(shape, itemsize)
         return total
+
+    def encoded_bytes(self, payload) -> int:
+        """Actual wire bytes of one encoded payload (codes + scales buffers,
+        raw passthrough leaves at their dtype)."""
+        return _tree_bytes(payload)
+
+    def wire_bytes(self, tree) -> float:
+        """Exact uplink bytes for one client, measured off the encoded
+        buffers via ``eval_shape`` (no FLOPs); falls back to the analytic
+        ``payload_bytes`` model for compressors without a wire format."""
+        if self.encode is None:
+            return self.payload_bytes(tree)
+        structs = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+        payload = jax.eval_shape(self.encode, jax.random.PRNGKey(0), structs)
+        return float(self.encoded_bytes(payload))
 
     def round_metrics(self, tree, p: float = 1.0) -> dict:
         """Static per-round accounting: payload per client, A4 variance
@@ -161,6 +286,14 @@ def group_size(D: int, block: int) -> int:
     return g
 
 
+def fold_seed(key):
+    """The int32 scalar seed of the folded key — the SAME derivation
+    ``hash_dither`` uses (kd[0] ^ kd[-1]), handed to the in-kernel dither
+    so interpret-mode kernel draws replicate the streamed hash draws."""
+    kd = jax.random.key_data(key).astype(jnp.uint32)
+    return (kd.reshape(-1)[0] ^ kd.reshape(-1)[-1]).astype(jnp.int32)
+
+
 def hash_dither(key, shape):
     """Stochastic-rounding dither: murmur3-style integer hash of the element
     coordinates, seeded by the (folded) JAX key, mapped to float32 uniforms
@@ -190,7 +323,40 @@ def _make_dither(dither: str, key, shape):
         return hash_dither(key, shape)
     if dither == "uniform":
         return jax.random.uniform(key, shape, jnp.float32)
-    raise ValueError(f"unknown dither source {dither!r} (want 'hash'|'uniform')")
+    raise ValueError(f"unknown dither source {dither!r} (want 'hash'|"
+                     f"'uniform'; 'kernel' is resolved by the dispatcher)")
+
+
+def _stream_dither(dither: str) -> str:
+    """The streamed fallback for leaves that do not reach the kernel:
+    'kernel' degrades to 'hash' (zero-memory, same uniform quality)."""
+    return "hash" if dither == "kernel" else dither
+
+
+def _kernel_eligible(x, g: int, kernel_threshold: int) -> bool:
+    """One dispatch predicate shared by apply and encode (they MUST agree,
+    or decode . encode would not be bit-identical to apply): large leaf,
+    128-aligned group (lanes == g on the VPU). Multi-dim leaves dispatch
+    only on single-device processes: shard_safe mode exists to preserve
+    GSPMD sharding of parameter-sized leaves, and pallas_call has no
+    shard_map wrapper yet — on a multi-device mesh the (R, D) collapse
+    would force a gather, so those leaves keep the elementwise jnp-oracle
+    path (the pre-PR-3 behavior)."""
+    if x.size < kernel_threshold or g % 128 != 0 or g < 2:
+        return False
+    if x.ndim > 1 and jax.device_count() > 1:
+        return False
+    return True
+
+
+def _rows_view(x, g: int):
+    """The (R, D) kernel view: multi-dim leaves collapse leading dims and
+    keep the grouped LAST axis; flat leaves tile into g-wide rows. Row-major
+    order means the global element index (the hash-dither stream) is
+    unchanged."""
+    if x.ndim == 1:
+        return x.reshape(-1, g)
+    return x.reshape(-1, x.shape[-1])
 
 
 def quantize_leaf(key, x, bits: int = 8, block: int = 256,
@@ -200,8 +366,8 @@ def quantize_leaf(key, x, bits: int = 8, block: int = 256,
     """Quantize-dequantize ONE array leaf. Single source of truth for the
     repo's stochastic-rounding block quantizer: grouping via ``shard_safe``
     (see module docstring), dither via ``dither=``, math via the kernel
-    oracle pair (Pallas for large leaves, the jnp oracle otherwise —
-    bit-identical given the same draws).
+    oracle pair (Pallas for large leaves — any rank — the jnp oracle
+    otherwise; bit-identical given the same draws).
 
     ``compute``:
       * ``"f32"``    (default) — oracle semantics: the whole chain runs in
@@ -214,6 +380,8 @@ def quantize_leaf(key, x, bits: int = 8, block: int = 256,
     """
     if compute not in ("f32", "native"):
         raise ValueError(f"compute={compute!r} (want 'f32'|'native')")
+    if dither not in DITHERS:
+        raise ValueError(f"dither={dither!r} (want one of {DITHERS})")
     if bits == 0 or x.ndim == 0 or x.size == 0:
         return x
     orig_dtype = x.dtype
@@ -226,20 +394,23 @@ def quantize_leaf(key, x, bits: int = 8, block: int = 256,
         g = group_size(D, block)
         if g < 2:
             return x  # one-element groups reproduce x exactly; skip the work
-        u = _make_dither(dither, key, x.shape)
         if native:
+            u = _make_dither(_stream_dither(dither), key, x.shape)
             xg = x.reshape(x.shape[:-1] + (D // g, g))
             deq = kernel_ref.quantize_groups_native(xg, u.reshape(xg.shape),
                                                     bits=bits)
             return deq.reshape(x.shape)
-        # Kernel dispatch only when the group is a legal lane width: the
-        # Pallas BlockSpec keeps lanes == g, which must stay 128-aligned for
-        # the VPU (a (rows, 2) block would fail Mosaic lowering on real
-        # TPU). Smaller groups take the elementwise jnp-oracle path below.
-        if x.ndim == 1 and x.size >= kernel_threshold and g % 128 == 0:
-            out = kernel_ops.quantize_dequantize_with_dither(
-                x.astype(jnp.float32), u, bits=bits, block=g)
-            return out.astype(orig_dtype)
+        if _kernel_eligible(x, g, kernel_threshold):
+            x2 = _rows_view(x.astype(jnp.float32), g)
+            if dither == "kernel":
+                out = kernel_ops.quantize_dequantize_kernel_dither(
+                    x2, fold_seed(key), bits=bits, group=g)
+            else:
+                u = _make_dither(dither, key, x.shape)
+                out = kernel_ops.quantize_dequantize_grouped(
+                    x2, u.reshape(x2.shape), bits=bits, group=g)
+            return out.reshape(x.shape).astype(orig_dtype)
+        u = _make_dither(_stream_dither(dither), key, x.shape)
         xg = x.astype(jnp.float32).reshape(x.shape[:-1] + (D // g, g))
         deq = kernel_ref.quantize_groups_ref(xg, u.reshape(xg.shape),
                                              bits=bits)
@@ -250,8 +421,8 @@ def quantize_leaf(key, x, bits: int = 8, block: int = 256,
     # block size (pad entries quantize to 0 and are discarded)
     n = x.size
     pad = (-n) % block
-    u = _make_dither(dither, key, (n + pad,))
     if native:
+        u = _make_dither(_stream_dither(dither), key, (n + pad,))
         flat = x.reshape(-1)
         if pad:
             flat = jnp.pad(flat, (0, pad))
@@ -261,12 +432,142 @@ def quantize_leaf(key, x, bits: int = 8, block: int = 256,
     flat = x.astype(jnp.float32).reshape(-1)
     if pad:
         flat = jnp.pad(flat, (0, pad))
-    if n >= kernel_threshold and block % 128 == 0:
-        out = kernel_ops.quantize_dequantize_with_dither(flat, u, bits=bits,
-                                                         block=block)
+    if _kernel_eligible(x, block, kernel_threshold):
+        if dither == "kernel":
+            out = kernel_ops.quantize_dequantize_kernel_dither(
+                flat.reshape(-1, block), fold_seed(key), bits=bits,
+                group=block).reshape(-1)
+        else:
+            u = _make_dither(dither, key, (n + pad,))
+            out = kernel_ops.quantize_dequantize_with_dither(
+                flat, u, bits=bits, block=block)
     else:
+        u = _make_dither(_stream_dither(dither), key, (n + pad,))
         out = kernel_ref.quantize_block_ref(flat, u, bits=bits, block=block)
     return out[:n].reshape(x.shape).astype(orig_dtype)
+
+
+def encode_leaf(key, x, bits: int = 8, block: int = 256,
+                dither: str = "uniform", shard_safe: bool = False,
+                kernel_threshold: int = KERNEL_DISPATCH_MIN,
+                compute: str = "f32"):
+    """Encode ONE leaf to the wire format (``PackedLeaf``), or pass it
+    through raw when ``quantize_leaf`` would (bits == 0 / scalar / empty /
+    shard-safe g == 1). Draw-for-draw and dispatch-for-dispatch identical
+    to ``quantize_leaf`` — ``decode_leaf(encode_leaf(key, x)) ==
+    quantize_leaf(key, x)`` bit-exactly (tests/test_wire_format.py)."""
+    if compute not in ("f32", "native"):
+        raise ValueError(f"compute={compute!r} (want 'f32'|'native')")
+    if dither not in DITHERS:
+        raise ValueError(f"dither={dither!r} (want one of {DITHERS})")
+    if bits > 8:
+        raise ValueError(f"wire format carries <= 8-bit codes, got {bits}")
+    if bits == 0 or x.ndim == 0 or x.size == 0:
+        return x
+    orig_dtype = x.dtype
+    native = compute == "native" and orig_dtype != jnp.float32
+
+    if shard_safe:
+        D = x.shape[-1]
+        g = group_size(D, block)
+        if g < 2:
+            return x
+        if native:
+            u = _make_dither(_stream_dither(dither), key, x.shape)
+            xg = x.reshape(x.shape[:-1] + (D // g, g))
+            codes, scales = kernel_ref.encode_groups_ref(
+                xg, u.reshape(xg.shape), bits=bits)
+        elif _kernel_eligible(x, g, kernel_threshold):
+            x2 = _rows_view(x.astype(jnp.float32), g)
+            if dither == "kernel":
+                c2, s2 = kernel_ops.quantize_encode_kernel_dither(
+                    x2, fold_seed(key), bits=bits, group=g)
+            else:
+                u = _make_dither(dither, key, x.shape)
+                c2, s2 = kernel_ops.quantize_encode_grouped(
+                    x2, u.reshape(x2.shape), bits=bits, group=g)
+            codes = c2.reshape(x.shape[:-1] + (D // g, g))
+            scales = s2.reshape(x.shape[:-1] + (D // g, 1))
+        else:
+            u = _make_dither(_stream_dither(dither), key, x.shape)
+            xg = x.astype(jnp.float32).reshape(x.shape[:-1] + (D // g, g))
+            codes, scales = kernel_ref.encode_groups_ref(
+                xg, u.reshape(xg.shape), bits=bits)
+        return PackedLeaf(
+            codes=_maybe_pack(codes.reshape(x.shape), bits),
+            scales=scales.reshape(x.shape[:-1] + (D // g,)),
+            shape=tuple(x.shape), dtype=str(orig_dtype), bits=bits,
+            group=g, mode="shard")
+
+    n = x.size
+    pad = (-n) % block
+    if native:
+        u = _make_dither(_stream_dither(dither), key, (n + pad,))
+        flat = x.reshape(-1)
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        codes, scales = kernel_ref.encode_groups_ref(
+            flat.reshape(-1, block), u.reshape(-1, block), bits=bits)
+    else:
+        flat = x.astype(jnp.float32).reshape(-1)
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        if _kernel_eligible(x, block, kernel_threshold):
+            if dither == "kernel":
+                codes, scales = kernel_ops.quantize_encode_kernel_dither(
+                    flat.reshape(-1, block), fold_seed(key), bits=bits,
+                    group=block)
+            else:
+                u = _make_dither(dither, key, (n + pad,))
+                codes, scales = kernel_ops.quantize_encode_grouped(
+                    flat.reshape(-1, block), u.reshape(-1, block), bits=bits,
+                    group=block)
+        else:
+            u = _make_dither(_stream_dither(dither), key, (n + pad,))
+            codes, scales = kernel_ref.encode_groups_ref(
+                flat.reshape(-1, block), u.reshape(-1, block), bits=bits)
+    return PackedLeaf(
+        codes=_maybe_pack(codes.reshape(-1), bits),
+        scales=scales.reshape(-1),
+        shape=tuple(x.shape), dtype=str(orig_dtype), bits=bits,
+        group=block, mode="flat")
+
+
+def decode_leaf(p):
+    """Dequantize one wire-format leaf (raw leaves pass through). Accepts
+    stacked payloads: any leading axes on codes/scales beyond the recorded
+    layout are treated as batch dims (this is what lets the server decode
+    an n-client payload stack without a vmap)."""
+    if not isinstance(p, PackedLeaf):
+        return p
+    bits, g, shape = p.bits, p.group, p.shape
+    codes = p.codes
+    if codes.dtype == jnp.uint8:
+        codes = unpack_nibbles(codes)
+    if p.mode == "shard":
+        batch = codes.shape[:codes.ndim - len(shape)]
+        D = shape[-1]
+        cg = codes.reshape(batch + shape[:-1] + (D // g, g))
+        sg = p.scales.reshape(batch + shape[:-1] + (D // g, 1))
+        deq = kernel_ref.decode_groups_ref(cg, sg, bits=bits)
+        out = deq.reshape(batch + shape)
+    else:
+        batch = codes.shape[:-1]
+        n = int(math.prod(shape))
+        cg = codes.reshape(batch + (-1, g))
+        sg = p.scales.reshape(batch + (p.scales.shape[-1], 1))
+        deq = kernel_ref.decode_groups_ref(cg, sg, bits=bits)
+        out = deq.reshape(batch + (-1,))[..., :n].reshape(batch + shape)
+    return out.astype(jnp.dtype(p.dtype))
+
+
+def _is_payload_leaf(x) -> bool:
+    return isinstance(x, PackedLeaf)
+
+
+def decode_tree(payload):
+    """Decode every wire-format leaf of a payload pytree (stacked or not)."""
+    return jax.tree.map(decode_leaf, payload, is_leaf=_is_payload_leaf)
 
 
 def block_quant(bits: int = 8, block: int = 256, dither: str = "uniform",
@@ -284,26 +585,45 @@ def block_quant(bits: int = 8, block: int = 256, dither: str = "uniform",
                                        compute=compute),
             key, s)
 
+    def encode(key, s):
+        return _tree_keyed_map(
+            lambda k, x: encode_leaf(k, x, bits=bits, block=block,
+                                     dither=dither, shard_safe=shard_safe,
+                                     kernel_threshold=kernel_threshold,
+                                     compute=compute),
+            key, s)
+
     def payload(shape, itemsize):
-        # codes at `bits` per coordinate + one f32 scale per group; leaves
-        # apply() passes through unquantized (ndim-0 always; in shard-safe
-        # mode also g == 1 last dims) travel uncompressed at their dtype
+        # EXACT wire bytes (mirrors encode_leaf): packed codes (1 byte per
+        # coordinate, 0.5 when bits <= 4) + one scale per group (f32 under
+        # the oracle semantics, input dtype under compute='native'); leaves
+        # encode() passes through raw (ndim-0 always; in shard-safe mode
+        # also g == 1 last dims) travel uncompressed at their dtype
         n = float(math.prod(shape)) if shape else 1.0
         if not shape:
             return n * itemsize
+        scale_sz = itemsize if compute == "native" and itemsize != 4.0 \
+            else 4.0
         if not shard_safe:
-            return n * bits / 8.0 + math.ceil(n / block) * 4.0
+            n_blocks = math.ceil(n / block)
+            padded = n_blocks * block
+            code_b = padded / 2.0 if (bits <= PACK_BITS and padded % 2 == 0) \
+                else float(padded)
+            return code_b + n_blocks * scale_sz
         g = group_size(shape[-1], block)
         if g < 2:
             return n * itemsize
-        return n * bits / 8.0 + (n / g) * 4.0
+        code_b = n / 2.0 if bits <= PACK_BITS else n
+        return code_b + (n / g) * scale_sz
 
     tag = f"{dither},shard" if shard_safe else dither
     if compute == "native":
         tag += ",native"
     return Compressor(apply=apply, omega=float(omega), bits=float(bits),
                       name=f"block_quant{bits}b{block}[{tag}]",
-                      payload_fn=payload)
+                      payload_fn=payload,
+                      encode=encode if bits <= 8 else None,
+                      decode=decode_tree if bits <= 8 else None)
 
 
 # ---------------------------------------------------------------------------
@@ -322,11 +642,18 @@ def rand_k(fraction: float) -> Compressor:
     def apply(key, s):
         return _tree_keyed_map(leaf, key, s)
 
+    def payload(shape, itemsize):
+        # a sparse payload is (value, coordinate) pairs: each surviving
+        # coordinate carries its value (itemsize bytes) PLUS its index
+        # (ceil(log2 n) bits for a leaf of n coordinates). The old model
+        # billed values only — a free-coordinates fiction that understated
+        # e.g. a 1M-coord f32 leaf at fraction 0.1 by ~38%.
+        n = float(math.prod(shape)) if shape else 1.0
+        idx_bits = math.ceil(math.log2(n)) if n > 1 else 0
+        return n * fraction * (itemsize + idx_bits / 8.0)
+
     return Compressor(apply=apply, omega=float(omega), bits=32.0 * fraction,
-                      name=f"rand_k{fraction:g}",
-                      payload_fn=lambda shape, itemsize:
-                          (float(math.prod(shape)) if shape else 1.0)
-                          * fraction * itemsize)
+                      name=f"rand_k{fraction:g}", payload_fn=payload)
 
 
 # ---------------------------------------------------------------------------

@@ -160,7 +160,19 @@ def make_train_step(model: Model, cfg: FedLMConfig):
             d = jax.tree.map(
                 lambda th, gg, s: th - cfg.rho * gg.astype(th.dtype) - s,
                 theta, g, s_hat)
-        q = comp.apply(qkey, d)
+        if comp.encode is not None:
+            # express the uplink through the wire format: the payload
+            # between encode and decode is what a real quantized collective
+            # would move (packed codes + per-group scales). decode . encode
+            # == apply bit-for-bit and XLA fuses the round-trip, so the
+            # trajectory and cost are unchanged on a single device — this
+            # is the staging point for the ROADMAP's fused
+            # quantize->all-reduce->dequantize path. At bits <= 4 the
+            # nibble pack/unpack pair is real elementwise work (int8 stays
+            # free); the default 8-bit config pays nothing.
+            q = comp.decode(comp.encode(qkey, d))
+        else:
+            q = comp.apply(qkey, d)
         q = jax.tree.map(lambda x: x * active.astype(x.dtype), q)
         if not use_cv:
             return loss, q, {}
@@ -225,11 +237,13 @@ def make_train_step(model: Model, cfg: FedLMConfig):
         e_s = sum(jnp.sum(jnp.square(hh.astype(jnp.float32)))
                   for hh in jax.tree.leaves(h))
         # per-round communication accounting (shapes are static under jit:
-        # payload per client is a Python float, only n_active is traced)
+        # payload per client is a Python float, only n_active is traced).
+        # wire_bytes measures the ACTUAL encoded buffers via eval_shape for
+        # wire-format compressors, the analytic model otherwise.
         comm = comp.round_metrics(state.s_hat, p=p)
         metrics = {"loss": jnp.mean(losses), "e_s": e_s,
                    "n_active": jnp.sum(active),
-                   "comm_bytes": comm["payload_bytes_per_client"]
+                   "comm_bytes": comp.wire_bytes(state.s_hat)
                    * jnp.sum(active),
                    "omega_eff": jnp.asarray(comm["omega_eff"], jnp.float32)}
         return FedLMState(s_hat=s_new, v=v_new, v_i=v_i_new,

@@ -12,7 +12,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .quantize_block import quantize_block_pallas
+from .quantize_block import (quantize_block_pallas,
+                             quantize_encode_grouped_pallas,
+                             quantize_grouped_pallas)
 from .flash_attention import flash_attention_pallas
 from .rwkv_scan import rwkv_scan_pallas
 
@@ -24,9 +26,9 @@ def quantize_dequantize_with_dither(x, u, bits: int = 8, block: int = 256):
     """Block quantize->dequantize of a flat float32 stream with caller-
     provided uniform draws ``u`` (same shape as ``x``). Pads internally to
     the quant block. This is the entry point ``core/compression.py`` uses
-    for its kernel dispatch: the dither source (fused hash / jax.random)
-    stays orthogonal to the kernel, so kernel and jnp-oracle paths are
-    bit-identical given the same draws."""
+    for its flat kernel dispatch: the dither source (fused hash /
+    jax.random) stays orthogonal to the kernel, so kernel and jnp-oracle
+    paths are bit-identical given the same draws."""
     n = x.shape[0]
     padded = -(-n // block) * block
     xp = jnp.pad(x, (0, padded - n))
@@ -34,6 +36,41 @@ def quantize_dequantize_with_dither(x, u, bits: int = 8, block: int = 256):
     out = quantize_block_pallas(xp, up, bits=bits, block=block,
                                 interpret=INTERPRET)
     return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group"))
+def quantize_dequantize_grouped(x2, u2, bits: int = 8, group: int = 256):
+    """Grouped quantize->dequantize: x2, u2 (R, D) float32 with
+    D % group == 0 (the multi-dim shard_safe dispatch — groups stay on the
+    last axis, no flatten)."""
+    return quantize_grouped_pallas(x2, u2, bits=bits, group=group,
+                                   interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group"))
+def quantize_dequantize_kernel_dither(x2, seed, bits: int = 8,
+                                      group: int = 256):
+    """Grouped quantize->dequantize with the dither generated IN-KERNEL
+    (hardware PRNG on TPU, in-kernel hash under interpret): 2 instead of 3
+    HBM arrays per element. ``seed`` is the folded-key int32 scalar."""
+    return quantize_grouped_pallas(x2, bits=bits, group=group, seed=seed,
+                                   interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group"))
+def quantize_encode_grouped(x2, u2, bits: int = 8, group: int = 256):
+    """Wire-format encode: (codes int8 (R, D), scales f32 (R, D // group))
+    with streamed dither draws."""
+    return quantize_encode_grouped_pallas(x2, u2, bits=bits, group=group,
+                                          interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group"))
+def quantize_encode_kernel_dither(x2, seed, bits: int = 8, group: int = 256):
+    """Wire-format encode with the in-kernel dither (see
+    ``quantize_dequantize_kernel_dither``)."""
+    return quantize_encode_grouped_pallas(x2, bits=bits, group=group,
+                                          seed=seed, interpret=INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "block"))

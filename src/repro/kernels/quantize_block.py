@@ -1,21 +1,50 @@
-"""Pallas TPU kernel: block-wise stochastic quantize-dequantize.
+"""Pallas TPU kernels: block-wise stochastic quantize, dequantize-fused and
+encode (wire-format) variants.
 
 This is the communication hot spot of FedMM (Algorithm 2 lines 8-9): every
 round each client quantizes its control-variate-corrected surrogate delta
 before the uplink all-reduce. On TPU the quantize -> all-reduce -> apply path
-runs at HBM bandwidth, so the kernel tiles the flat parameter stream into
-VMEM blocks of (rows, block) and does the scale/round/dequant entirely
-on-chip in one pass (one HBM read + one HBM write per element).
+runs at HBM bandwidth, so the kernels tile the grouped parameter stream into
+VMEM blocks and do the scale/round on-chip in one pass.
 
-Grid: 1-D over row-tiles of the (n_blocks, block) reshaped stream.
-BlockSpec keeps lanes = ``block`` (128-aligned for the VPU) and sublanes =
-``rows_per_tile``.
+Layout: every caller reshapes its leaf to a 2-D ``(R, D)`` view with
+quantization groups of size ``g`` along the LAST axis (``D % g == 0``).
+The grid is 2-D over ``(row_tiles, D // g)``; each BlockSpec block is
+``(rows_per_tile, g)`` — lanes == g stays 128-aligned for the VPU, and each
+sublane row of a block is one independent quantization group. The historical
+flat path is the ``D == g`` special case (one group per row); multi-dim
+shard_safe leaves dispatch with ``D = leaf.shape[-1]`` so the last-axis
+grouping (and hence GSPMD sharding) is preserved — no flatten required.
 
-The kernel body is the SAME computation as ``ref.quantize_groups_ref`` (the
-pure-jnp oracle) — together they are the repo's single quantizer
-implementation. All callers reach it through ``core/compression.py``, which
-generates the dither, picks shard-aligned groups, and dispatches large flat
-leaves here (via ``ops.quantize_dequantize_with_dither``).
+Two kernel families:
+
+  * ``quantize_grouped_pallas`` — quantize->dequantize fused (what the
+    server receives), same math as ``ref.quantize_groups_ref``;
+  * ``quantize_encode_grouped_pallas`` — the WIRE variant: emits int8 codes
+    plus one f32 scale per group (``ref.encode_groups_ref``). The dequantized
+    f32 array never touches HBM; the uplink moves ``n + 4 * n/g`` bytes
+    instead of ``4 n``.
+
+Dither sources (per call, orthogonal to the kernel math):
+
+  * streamed (``u`` argument) — the caller materializes the uniform draws
+    (hash or threefry) in HBM and the kernel reads them alongside ``x``:
+    3 HBM arrays per element (x in, u in, out);
+  * in-kernel (``seed`` argument, ``u=None``) — the dither is generated
+    on-chip: 2 HBM arrays per element. On real TPU (``interpret=False``)
+    the draws come from the hardware PRNG (``pltpu.prng_seed`` /
+    ``pltpu.prng_random_bits``), seeded from the folded key + grid position.
+    In interpret mode (CPU validation) the same murmur3-finalizer hash as
+    ``core.compression.hash_dither`` is evaluated in-kernel from the global
+    element index, so interpret-mode in-kernel draws are BIT-IDENTICAL to
+    the streamed ``dither="hash"`` path — the structural/statistical
+    properties are testable on CPU. Hardware-PRNG draws differ from the
+    hash draws by construction, which is why ``dither="kernel"`` is opt-in
+    and never golden-pinned (see ``core/compression.py``).
+
+The kernel bodies are the SAME computation as the ``ref.py`` oracles —
+together they are the repo's single quantizer implementation. All callers
+reach them through ``core/compression.py`` via ``kernels/ops.py``.
 """
 from __future__ import annotations
 
@@ -24,50 +53,219 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, u_ref, o_ref, *, levels: float):
-    x = x_ref[...].astype(jnp.float32)              # (rows, block)
-    u = u_ref[...].astype(jnp.float32)
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _quant_core(x, u, levels: float):
+    """scale / stochastic-round shared by every variant (== the ref oracle)."""
     scale = jnp.max(jnp.abs(x), axis=1, keepdims=True)
     safe = jnp.where(scale > 0, scale, 1.0)
     y = x / safe * levels
     lo = jnp.floor(y)
     q = lo + (u < (y - lo)).astype(jnp.float32)     # stochastic rounding
-    deq = q * safe / levels
+    return q, scale, safe
+
+
+def _hash_uniform_u32(idx, seed):
+    """murmur3-finalizer hash of a uint32 index -> f32 uniform in [0, 1) with
+    24-bit resolution. MUST stay formula-identical to
+    ``core.compression.hash_dither`` (the interpret-mode in-kernel dither
+    reproduces the streamed hash draws exactly)."""
+    x = idx * jnp.uint32(2654435761) + seed
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return (x >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+
+
+def _tile_dither(seed_ref, shape, row_stride: int, group: int, hw: bool):
+    """Dither for the (rows_per_tile, group) tile at grid position (i, j),
+    generated entirely on-chip (zero HBM traffic).
+
+    hw=True: hardware PRNG, seeded from the folded key + a per-tile offset.
+    hw=False (interpret): murmur hash of the GLOBAL element index — the same
+    draw ``hash_dither`` would have streamed in for this element.
+    """
+    i, j = pl.program_id(0), pl.program_id(1)
+    if hw:
+        pltpu.prng_seed(seed_ref[0, 0] + i * jnp.int32(0x9E3779B9 - 2 ** 32)
+                        + j * jnp.int32(0x85EBCA6B - 2 ** 32))
+        bits = pltpu.prng_random_bits(shape)
+        bits = pltpu.bitcast(bits, jnp.uint32)
+        return (bits >> jnp.uint32(8)).astype(jnp.float32) \
+            * jnp.float32(2.0 ** -24)
+    rt = shape[0]
+    seed = seed_ref[0, 0].astype(jnp.uint32)
+    row = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+    lane = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+    gidx = ((i.astype(jnp.uint32) * jnp.uint32(rt) + row)
+            * jnp.uint32(row_stride)
+            + j.astype(jnp.uint32) * jnp.uint32(group) + lane)
+    return _hash_uniform_u32(gidx, seed)
+
+
+def _dequant_kernel(x_ref, u_ref, o_ref, *, levels: float):
+    x = x_ref[...].astype(jnp.float32)              # (rows, g)
+    u = u_ref[...].astype(jnp.float32)
+    q, scale, safe = _quant_core(x, u, levels)
+    # multiply by the precomputed reciprocal: bit-identical to the jnp
+    # oracle and to the wire-format decode in every compilation regime
+    deq = q * safe * (1.0 / levels)
     o_ref[...] = jnp.where(scale > 0, deq, 0.0).astype(o_ref.dtype)
+
+
+def _dequant_kernel_rng(seed_ref, x_ref, o_ref, *, levels: float,
+                        row_stride: int, group: int, hw: bool):
+    x = x_ref[...].astype(jnp.float32)
+    u = _tile_dither(seed_ref, x_ref.shape, row_stride, group, hw)
+    q, scale, safe = _quant_core(x, u, levels)
+    deq = q * safe * (1.0 / levels)
+    o_ref[...] = jnp.where(scale > 0, deq, 0.0).astype(o_ref.dtype)
+
+
+def _encode_kernel(x_ref, u_ref, codes_ref, scale_ref, *, levels: float):
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    q, scale, _ = _quant_core(x, u, levels)
+    codes_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale.astype(jnp.float32)
+
+
+def _encode_kernel_rng(seed_ref, x_ref, codes_ref, scale_ref, *,
+                       levels: float, row_stride: int, group: int, hw: bool):
+    x = x_ref[...].astype(jnp.float32)
+    u = _tile_dither(seed_ref, x_ref.shape, row_stride, group, hw)
+    q, scale, _ = _quant_core(x, u, levels)
+    codes_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# dispatchers
+# ---------------------------------------------------------------------------
+
+def _grid_pad(x2, u2, rows_per_tile: int):
+    """Pad the row axis to a whole number of tiles. Padded rows quantize to
+    scale 0 -> codes 0 and are sliced off by the caller."""
+    R = x2.shape[0]
+    rt = min(rows_per_tile, R)
+    n_tiles = -(-R // rt)
+    pad = n_tiles * rt - R
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+        if u2 is not None:
+            u2 = jnp.pad(u2, ((0, pad), (0, 0)))
+    return x2, u2, rt, n_tiles
+
+
+def quantize_grouped_pallas(x2, u2=None, *, bits: int = 8, group: int = 256,
+                            seed=None, rows_per_tile: int = 64,
+                            interpret: bool = True):
+    """Fused quantize->dequantize of a grouped 2-D stream.
+
+    x2: (R, D) float32 with D % group == 0 — groups along the last axis.
+    u2: (R, D) uniform draws (streamed dither), or None to generate the
+    dither in-kernel from ``seed`` (int32 scalar; 2 instead of 3 HBM arrays
+    per element). Returns the dequantized (R, D) array.
+
+    interpret=True validates the kernel body on CPU; on TPU pass
+    interpret=False for the compiled Mosaic kernel (and the hardware PRNG
+    when seed-driven).
+    """
+    R, D = x2.shape
+    assert D % group == 0, "last axis must be a whole number of groups"
+    if u2 is None and seed is None:
+        raise ValueError("need streamed draws u2 or an in-kernel dither seed")
+    x2p, u2p, rt, n_tiles = _grid_pad(x2, u2, rows_per_tile)
+    levels = 2.0 ** (bits - 1) - 1.0
+    grid = (n_tiles, D // group)
+    tile = pl.BlockSpec((rt, group), lambda i, j: (i, j))
+
+    if u2 is None:
+        out = pl.pallas_call(
+            functools.partial(_dequant_kernel_rng, levels=levels,
+                              row_stride=D, group=group, hw=not interpret),
+            grid=grid,
+            in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), tile],
+            out_specs=tile,
+            out_shape=jax.ShapeDtypeStruct((n_tiles * rt, D), x2.dtype),
+            interpret=interpret,
+        )(jnp.asarray(seed, jnp.int32).reshape(1, 1), x2p)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_dequant_kernel, levels=levels),
+            grid=grid,
+            in_specs=[tile, tile],
+            out_specs=tile,
+            out_shape=jax.ShapeDtypeStruct((n_tiles * rt, D), x2.dtype),
+            interpret=interpret,
+        )(x2p, u2p)
+    return out[:R]
+
+
+def quantize_encode_grouped_pallas(x2, u2=None, *, bits: int = 8,
+                                   group: int = 256, seed=None,
+                                   rows_per_tile: int = 64,
+                                   interpret: bool = True):
+    """Wire-format encode of a grouped 2-D stream: int8 codes + f32 scales.
+
+    x2: (R, D) float32 with D % group == 0. Returns
+    ``(codes int8 (R, D), scales f32 (R, D // group))`` — the dequantized
+    array is never materialized (1 + 4/group output bytes per element
+    instead of 4). Dither exactly as in ``quantize_grouped_pallas``.
+    """
+    R, D = x2.shape
+    assert D % group == 0, "last axis must be a whole number of groups"
+    if u2 is None and seed is None:
+        raise ValueError("need streamed draws u2 or an in-kernel dither seed")
+    x2p, u2p, rt, n_tiles = _grid_pad(x2, u2, rows_per_tile)
+    levels = 2.0 ** (bits - 1) - 1.0
+    G = D // group
+    grid = (n_tiles, G)
+    tile = pl.BlockSpec((rt, group), lambda i, j: (i, j))
+    # NB: the scales output block is (rt, 1) — a 1-wide lane dim. Interpret
+    # mode (CI) accepts it; Mosaic's lane-width rules on real TPU have NOT
+    # been exercised for this store yet (see ROADMAP). If lowering rejects
+    # it on hardware, fall back to the jnp encode path via
+    # kernel_threshold until the scales store is retiled.
+    out_specs = [tile, pl.BlockSpec((rt, 1), lambda i, j: (i, j))]
+    out_shape = [jax.ShapeDtypeStruct((n_tiles * rt, D), jnp.int8),
+                 jax.ShapeDtypeStruct((n_tiles * rt, G), jnp.float32)]
+
+    if u2 is None:
+        codes, scales = pl.pallas_call(
+            functools.partial(_encode_kernel_rng, levels=levels,
+                              row_stride=D, group=group, hw=not interpret),
+            grid=grid,
+            in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), tile],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(jnp.asarray(seed, jnp.int32).reshape(1, 1), x2p)
+    else:
+        codes, scales = pl.pallas_call(
+            functools.partial(_encode_kernel, levels=levels),
+            grid=grid,
+            in_specs=[tile, tile],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(x2p, u2p)
+    return codes[:R], scales[:R]
 
 
 def quantize_block_pallas(x, u, bits: int = 8, block: int = 256,
                           rows_per_tile: int = 64, interpret: bool = True):
-    """x, u: flat (n,) float32 with n % block == 0. Returns dequantized (n,).
-
-    interpret=True validates the kernel body on CPU; on TPU pass
-    interpret=False for the compiled kernel.
-    """
+    """Historical flat entry point: x, u flat (n,) float32 with
+    n % block == 0. The (n // block, block) reshape is the D == g special
+    case of the grouped dispatcher (one group per row)."""
     n = x.shape[0]
     assert n % block == 0, "pad the stream to a multiple of the quant block"
-    rows = n // block
-    rt = min(rows_per_tile, rows)
-    # pad rows to a multiple of the tile
-    n_tiles = -(-rows // rt)
-    pad = n_tiles * rt - rows
-    x2 = x.reshape(rows, block)
-    u2 = u.reshape(rows, block)
-    if pad:
-        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
-        u2 = jnp.pad(u2, ((0, pad), (0, 0)))
-    levels = 2.0 ** (bits - 1) - 1.0
-
-    out = pl.pallas_call(
-        functools.partial(_kernel, levels=levels),
-        grid=(n_tiles,),
-        in_specs=[
-            pl.BlockSpec((rt, block), lambda i: (i, 0)),
-            pl.BlockSpec((rt, block), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((rt, block), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_tiles * rt, block), x.dtype),
-        interpret=interpret,
-    )(x2, u2)
-    return out[:rows].reshape(-1)
+    out = quantize_grouped_pallas(
+        x.reshape(-1, block), u.reshape(-1, block), bits=bits, group=block,
+        rows_per_tile=rows_per_tile, interpret=interpret)
+    return out.reshape(-1)

@@ -21,14 +21,21 @@ def quantize_groups_ref(x, u, bits: int = 8):
     uniform draws in [0,1) controlling the stochastic rounding. Returns the
     dequantized array (what the server receives). ``quantize_block_ref``
     and the Pallas kernel are this exact computation on a flat stream;
-    ``core/compression.py`` applies it with shard-aligned grouping."""
+    ``core/compression.py`` applies it with shard-aligned grouping.
+
+    The dequant multiplies by the PRECOMPUTED reciprocal of ``levels``
+    (rather than dividing) so that eager, jitted, Pallas-kernel and
+    wire-format ``decode_groups_ref`` evaluations are all bit-identical —
+    XLA's simplifier rewrites divide-by-constant into that multiply under
+    jit, which would otherwise make eager and compiled paths differ by an
+    ulp."""
     levels = 2.0 ** (bits - 1) - 1.0
     scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
     safe = jnp.where(scale > 0, scale, 1.0)
     y = x / safe * levels
     lo = jnp.floor(y)
     q = lo + (u < (y - lo)).astype(y.dtype)
-    deq = q * safe / levels
+    deq = q * safe * (1.0 / levels)
     return jnp.where(scale > 0, deq, 0.0)
 
 
@@ -58,8 +65,48 @@ def quantize_groups_native(x, u, bits: int = 8):
     lo = jnp.floor(y)
     up = u < (y - lo).astype(jnp.float32)   # the ONE f32 comparison
     q = lo + up.astype(x.dtype)
-    deq = q * safe / jnp.asarray(levels, x.dtype)
+    deq = q * safe * jnp.asarray(1.0 / levels, x.dtype)
     return jnp.where(scale > 0, deq, jnp.zeros_like(deq))
+
+
+def encode_groups_ref(x, u, bits: int = 8):
+    """Wire-format encode oracle: the SAME scale/stochastic-round math as
+    ``quantize_groups_ref`` but emitting ``(codes int8, scales)`` instead of
+    the dequantized array. x: (..., g) groups along the last axis (f32 for
+    the oracle semantics, any float dtype for the native compute path —
+    scales are returned in x.dtype). Codes lie in [-(2^(b-1)-1), 2^(b-1)-1]
+    so int8 holds every b <= 8 losslessly.
+
+    ``decode_groups_ref(encode_groups_ref(x, u)) == quantize_groups_ref
+    (x, u)`` BIT-EXACTLY: the int8 round-trip of the integer code is exact,
+    and decode repeats the dequant ops (q * safe / levels, zero-scale
+    masking) in the same order. Pinned in tests/test_wire_format.py."""
+    levels = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    safe = jnp.where(scale > 0, scale, jnp.ones_like(scale))
+    y = x / safe * jnp.asarray(levels, x.dtype)
+    lo = jnp.floor(y)
+    if x.dtype == jnp.float32:
+        q = lo + (u < (y - lo)).astype(y.dtype)
+    else:
+        # native compute: only the dither comparison runs in f32
+        q = lo + (u < (y - lo).astype(jnp.float32)).astype(x.dtype)
+    return q.astype(jnp.int8), scale
+
+
+def decode_groups_ref(codes, scales, bits: int = 8):
+    """Dequantize wire-format codes: the exact tail of
+    ``quantize_groups_ref`` (and of the Pallas kernels) replayed from the
+    payload. codes: int8 (..., g); scales: (..., 1) per group, in the
+    compute dtype (f32 oracle / input dtype native). Groups whose scale is
+    0 carry all-zero codes, and the explicit mask keeps the 0-bit pattern
+    identical to the fused path."""
+    dt = scales.dtype
+    inv_levels = jnp.asarray(1.0 / (2.0 ** (bits - 1) - 1.0), dt)
+    q = codes.astype(dt)
+    safe = jnp.where(scales > 0, scales, jnp.ones_like(scales))
+    deq = q * safe * inv_levels
+    return jnp.where(scales > 0, deq, jnp.zeros_like(deq))
 
 
 def quantize_block_ref(x, u, bits: int = 8, block: int = 256):

@@ -265,7 +265,8 @@ def test_fedmm_step_surfaces_comm_accounting():
 
 def test_payload_accounting_formulas():
     tree = {"w": jax.ShapeDtypeStruct((3, 64), jnp.float32)}
-    # reference block-p mode: full blocks over the flat stream
+    # reference block-p mode: full blocks over the flat stream — the model
+    # bills the ACTUAL wire buffers (int8 codes incl. pad + f32 scales)
     comp = C.block_quant(8, 64)
     expect = 3 * 64 * 1.0 + (3 * 64 / 64) * 4.0
     assert comp.payload_bytes(tree) == pytest.approx(expect)
@@ -278,11 +279,16 @@ def test_payload_accounting_formulas():
     g = C.group_size(64, 64)
     assert comp_s.payload_bytes(tree) == pytest.approx(
         3 * 64 * 1.0 + (3 * 64 / g) * 4.0)
+    # b=4 codes travel bit-packed two-per-byte: half the code bytes
+    comp4 = C.block_quant(4, 64)
+    assert comp4.payload_bytes(tree) == pytest.approx(
+        3 * 64 * 0.5 + (3 * 64 / 64) * 4.0)
     # shard-safe ungroupable leaves (g == 1) travel uncompressed (f32);
-    # the reference mode pads and genuinely compresses the same leaf
+    # the reference mode pads to a FULL block — and bills the pad, because
+    # the packed wire buffer really carries it (21 coords -> 64 int8 codes)
     b7 = {"b": jax.ShapeDtypeStruct((3, 7), jnp.float32)}
     assert comp_s.payload_bytes(b7) == pytest.approx(3 * 7 * 4.0)
-    assert comp.payload_bytes(b7) == pytest.approx(21 * 1.0 + 1 * 4.0)
+    assert comp.payload_bytes(b7) == pytest.approx(64 * 1.0 + 1 * 4.0)
     # scalar (ndim-0) leaves pass through unquantized in BOTH modes -> f32
     scalar = {"s": jax.ShapeDtypeStruct((), jnp.float32)}
     assert comp.payload_bytes(scalar) == pytest.approx(4.0)
@@ -291,7 +297,11 @@ def test_payload_accounting_formulas():
     bf = {"w": jax.ShapeDtypeStruct((3, 7), jnp.bfloat16)}
     assert comp_s.payload_bytes(bf) == pytest.approx(3 * 7 * 2.0)  # g = 1
     assert C.identity().payload_bytes(bf) == pytest.approx(3 * 7 * 2.0)
-    assert C.rand_k(0.25).payload_bytes(bf) == pytest.approx(3 * 7 * 2.0 * 0.25)
-    # identity / rand_k fall back to bits-per-coordinate accounting
+    # identity falls back to bytes-per-coordinate accounting
     assert C.identity().payload_bytes(tree) == pytest.approx(3 * 64 * 4.0)
-    assert C.rand_k(0.25).payload_bytes(tree) == pytest.approx(3 * 64 * 4.0 * 0.25)
+    # rand_k bills value + coordinate-index bits per surviving coordinate
+    # (see test_wire_format.py::test_rand_k_payload_model for the pinned
+    # constructed example)
+    n = 3 * 64
+    assert C.rand_k(0.25).payload_bytes(tree) == pytest.approx(
+        n * 0.25 * (4.0 + math.ceil(math.log2(n)) / 8.0))

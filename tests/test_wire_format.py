@@ -1,0 +1,354 @@
+"""The packed wire format (PR 3): encode/decode round-trip bit-exactness,
+code-space aggregation, in-kernel dither, and the exact-bytes accounting.
+
+Contracts pinned here:
+  * ``decode . encode == apply`` BIT-FOR-BIT across {f32, bf16} x
+    {shard_safe on/off} x bits {4, 8} x {jnp oracle, Pallas interpret} —
+    this is what keeps the golden federated trajectories unchanged when
+    drivers aggregate off encoded payloads;
+  * the packed b=4 path (two codes per byte) stays unbiased at the
+    1/sqrt(trials) Monte-Carlo rate;
+  * ``payload_bytes`` (analytic) == ``encoded_bytes`` (actual buffers) ==
+    ``wire_bytes`` (eval_shape) — and driver/trainer ``comm_bytes``
+    metrics equal the actual encoded buffer bytes;
+  * the driver's code-space aggregation path is trajectory-identical to
+    the dequant-materialized path;
+  * ``dither="kernel"`` (in-kernel PRNG) reproduces the streamed hash
+    draws under interpret mode (the CPU validation contract; hardware
+    draws differ by design, which is why the mode is opt-in);
+  * the rand_k payload model bills value + coordinate-index bits.
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import compression as C
+from repro.core.quadratic import quadratic_for_objective
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _bit_equal(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.dtype == b.dtype and a.shape == b.shape
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# encode -> decode round-trip == apply, bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shard_safe", [False, True])
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("dither", ["hash", "uniform"])
+def test_roundtrip_bit_exact_jnp_oracle(dtype, shard_safe, bits, dither):
+    """jnp-oracle dispatch (small leaves): every grouping/packing layout."""
+    for shape, block in [((4096,), 128), ((8, 384), 256), ((50, 15), 128),
+                         ((3, 4, 64), 64), ((21,), 64)]:
+        key = jax.random.fold_in(KEY, hash((shape, block)) % (2 ** 31))
+        x = (jax.random.normal(key, shape) * 3.0).astype(dtype)
+        kw = dict(bits=bits, block=block, dither=dither,
+                  shard_safe=shard_safe)
+        a = C.quantize_leaf(key, x, **kw)
+        p = C.encode_leaf(key, x, **kw)
+        _bit_equal(C.decode_leaf(p), a)
+        if isinstance(p, C.PackedLeaf):
+            # the wire really is low-bit: int8 codes at b=8, two-per-byte
+            # uint8 at b=4, one scale per group
+            assert p.codes.dtype == (jnp.uint8 if bits == 4 else jnp.int8)
+            assert p.scales.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shard_safe", [False, True])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_roundtrip_bit_exact_pallas_interpret(dtype, shard_safe, bits):
+    """Pallas dispatch (kernel_threshold=1 forces it; interpret on CPU),
+    including the multi-dim grouped BlockSpec path (no flatten)."""
+    shape = (4, 4096) if shard_safe else (4096,)
+    block = 128  # shard_safe: D=4096 -> per-shard 128 -> g=128 (VPU lanes)
+    x = (jax.random.normal(KEY, shape) * 3.0).astype(dtype)
+    kw = dict(bits=bits, block=block, shard_safe=shard_safe, dither="hash",
+              kernel_threshold=1)
+    a = C.quantize_leaf(KEY, x, **kw)
+    p = C.encode_leaf(KEY, x, **kw)
+    assert isinstance(p, C.PackedLeaf)
+    _bit_equal(C.decode_leaf(p), a)
+    # and the kernel dispatch equals the jnp oracle dispatch bit-for-bit
+    kw_jnp = dict(kw, kernel_threshold=1 << 62)
+    _bit_equal(C.quantize_leaf(KEY, x, **kw_jnp), a)
+
+
+def test_roundtrip_bit_exact_native_compute():
+    """compute='native' (bf16 chain): scales travel in the input dtype and
+    the round-trip still replays apply exactly."""
+    x = (jax.random.normal(KEY, (8, 384)) * 3.0).astype(jnp.bfloat16)
+    for bits, shard in [(8, True), (4, False)]:
+        kw = dict(bits=bits, block=128, dither="hash", shard_safe=shard,
+                  compute="native")
+        a = C.quantize_leaf(KEY, x, **kw)
+        p = C.encode_leaf(KEY, x, **kw)
+        assert p.scales.dtype == jnp.bfloat16
+        _bit_equal(C.decode_leaf(p), a)
+
+
+def test_roundtrip_under_jit_and_vmap():
+    """The driver regime: encode under vmap over clients, one batched
+    decode off the stacked payload, all inside jit — equals per-client
+    apply bit-for-bit."""
+    comp = C.block_quant(8, 128, dither="hash", kernel_threshold=1)
+    keys = jax.random.split(KEY, 3)
+    xs = jax.random.normal(KEY, (3, 8, 512))
+
+    @jax.jit
+    def wire(keys, xs):
+        return comp.decode(jax.vmap(comp.encode)(keys, xs))
+
+    @jax.jit
+    def legacy(keys, xs):
+        return jax.vmap(comp.apply)(keys, xs)
+
+    _bit_equal(wire(keys, xs), legacy(keys, xs))
+
+
+def test_passthrough_leaves_stay_raw():
+    """Scalars, empty and shard-ungroupable leaves pass through encode
+    unpacked (and decode returns them untouched)."""
+    comp = C.block_quant(8, 64, shard_safe=True)
+    tree = {"s": jnp.asarray(2.5), "g1": jnp.ones((3, 7), jnp.bfloat16),
+            "w": jnp.ones((4, 64))}
+    payload = comp.encode(KEY, tree)
+    assert not isinstance(payload["s"], C.PackedLeaf)
+    assert not isinstance(payload["g1"], C.PackedLeaf)  # g == 1 passthrough
+    assert isinstance(payload["w"], C.PackedLeaf)
+    out = comp.decode(payload)
+    _bit_equal(out["s"], tree["s"])
+    _bit_equal(out["g1"], tree["g1"])
+
+
+def test_nibble_pack_roundtrip_exhaustive():
+    """Every 4-bit code pair survives the pack/unpack byte exactly."""
+    vals = jnp.arange(-8, 8, dtype=jnp.int8)
+    pairs = jnp.stack(jnp.meshgrid(vals, vals), -1).reshape(-1, 2)
+    _bit_equal(C.unpack_nibbles(C.pack_nibbles(pairs)), pairs)
+
+
+# ---------------------------------------------------------------------------
+# unbiasedness of the packed b=4 path (1/sqrt(trials) MC rate)
+# ---------------------------------------------------------------------------
+
+def test_packed_b4_unbiased_with_sqrt_rate():
+    levels = 7.0
+    frac = 0.73
+    x = jnp.array([1.0, (3.0 + frac) / levels])   # g = 2, scale = 1
+    comp = C.block_quant(bits=4, block=2, dither="hash")
+
+    def mc_bias(n, seed):
+        keys = jax.random.split(jax.random.PRNGKey(seed), n)
+        outs = jax.vmap(
+            lambda k: comp.decode(comp.encode(k, x)))(keys)
+        return np.abs(np.asarray(jnp.mean(outs, axis=0) - x))
+
+    sd = np.array([0.0, math.sqrt(frac * (1 - frac)) / levels])
+    for n in (400, 1600, 6400):
+        bias = mc_bias(n, seed=n)
+        tol = 4.0 * sd / math.sqrt(n) + 1e-6
+        assert (bias <= tol).all(), (n, bias, tol)
+
+
+# ---------------------------------------------------------------------------
+# in-kernel dither (opt-in)
+# ---------------------------------------------------------------------------
+
+def test_kernel_dither_matches_streamed_hash_in_interpret():
+    """CPU validation contract: the interpret-mode in-kernel dither
+    evaluates the same murmur hash as dither='hash', so outputs are
+    bit-identical (on real TPU the hardware PRNG draws differ — the mode
+    is opt-in and never golden-pinned)."""
+    for shape, shard in [((4096,), False), ((4, 4096), True)]:
+        x = jax.random.normal(KEY, shape) * 2.0
+        kw = dict(bits=8, block=128, shard_safe=shard, kernel_threshold=1)
+        _bit_equal(C.quantize_leaf(KEY, x, dither="kernel", **kw),
+                   C.quantize_leaf(KEY, x, dither="hash", **kw))
+        pk = C.encode_leaf(KEY, x, dither="kernel", **kw)
+        ph = C.encode_leaf(KEY, x, dither="hash", **kw)
+        _bit_equal(pk.codes, ph.codes)
+        _bit_equal(pk.scales, ph.scales)
+
+
+def test_kernel_dither_falls_back_to_hash_off_kernel():
+    """Leaves that do not reach the kernel degrade to the streamed hash."""
+    x = jax.random.normal(KEY, (128,))
+    _bit_equal(C.quantize_leaf(KEY, x, bits=8, block=64, dither="kernel"),
+               C.quantize_leaf(KEY, x, bits=8, block=64, dither="hash"))
+
+
+# ---------------------------------------------------------------------------
+# exact bytes accounting
+# ---------------------------------------------------------------------------
+
+def test_payload_model_equals_actual_encoded_buffers():
+    trees = {
+        "flat8": (C.block_quant(8, 64),
+                  {"w": jnp.zeros((3, 64)), "b": jnp.zeros((7,))}),
+        "flat4_pad": (C.block_quant(4, 64),
+                      {"w": jnp.zeros((50, 15)), "b": jnp.zeros((21,))}),
+        "shard8": (C.block_quant(8, 64, shard_safe=True),
+                   {"w": jnp.zeros((3, 64)), "g1": jnp.zeros((3, 7))}),
+        "shard4": (C.block_quant(4, 256, shard_safe=True),
+                   {"w": jnp.zeros((8, 384))}),
+        "native": (C.block_quant(8, 128, shard_safe=True, compute="native"),
+                   {"w": jnp.zeros((8, 384), jnp.bfloat16)}),
+        "scalar": (C.block_quant(8, 64), {"s": jnp.zeros(())}),
+    }
+    for name, (comp, tree) in trees.items():
+        actual = comp.encoded_bytes(comp.encode(KEY, tree))
+        assert comp.payload_bytes(tree) == pytest.approx(actual), name
+        assert comp.wire_bytes(tree) == pytest.approx(actual), name
+
+
+def test_b8_vs_b4_footprint_ratio():
+    """The point of the wire format: an n-client payload stack is ~4x
+    (b=8, g=256) / ~8x (b=4) smaller than the dequantized f32 stack. The
+    exact ratio is 4 / (bits/8 + 4/g): 3.94x at (8, 256) and 7.76x at
+    (4, 256) — the f32 per-group scale is the 4/g overhead, so 4x/8x are
+    the g -> inf asymptotes (codes alone are bits/32 of f32)."""
+    n, D = 8, 4096
+    xs = jax.random.normal(KEY, (n, D))
+    keys = jax.random.split(KEY, n)
+    f32_stack = n * D * 4
+    for bits, expect in [(8, 3.9), (4, 7.7)]:
+        comp = C.block_quant(bits, 256)
+        payload = jax.vmap(comp.encode)(keys, xs)
+        ratio = f32_stack / comp.encoded_bytes(payload)
+        assert ratio >= expect, (bits, ratio)
+        assert ratio == pytest.approx(4.0 / (bits / 8.0 + 4.0 / 256.0))
+
+
+def test_rand_k_payload_model():
+    """Regression (satellite): a sparse payload carries coordinates, not
+    just values — fraction * (itemsize + ceil(log2 n)/8) bytes/coord."""
+    comp = C.rand_k(0.125)
+    # constructed example: 1024 f32 coords -> 10 index bits each
+    leaf = jax.ShapeDtypeStruct((1024,), jnp.float32)
+    expect = 1024 * 0.125 * (4.0 + 10.0 / 8.0)
+    assert comp.payload_bytes(leaf) == pytest.approx(expect)
+    # the old value-only model billed 512 bytes — 24% short
+    assert comp.payload_bytes(leaf) > 1024 * 0.125 * 4.0
+    # bf16 leaf, non-power-of-two length
+    leaf16 = jax.ShapeDtypeStruct((21,), jnp.bfloat16)
+    assert comp.payload_bytes(leaf16) == pytest.approx(
+        21 * 0.125 * (2.0 + math.ceil(math.log2(21)) / 8.0))
+    # single-coordinate leaves need no index
+    one = jax.ShapeDtypeStruct((1,), jnp.float32)
+    assert comp.payload_bytes(one) == pytest.approx(0.125 * 4.0)
+
+
+# ---------------------------------------------------------------------------
+# driver: code-space aggregation + real comm_bytes
+# ---------------------------------------------------------------------------
+
+def _quad_problem(n_clients=4, dim=6):
+    ks = jax.random.split(KEY, n_clients)
+    Xs = jnp.stack([jax.random.normal(k, (32, dim)) for k in ks])
+    w_i = jnp.stack([jnp.linspace(-1, 1, dim) + 2.0 * i
+                     for i in range(n_clients)])
+    ys = jnp.einsum("nbp,np->nb", Xs, w_i)
+
+    def loss(batch, theta):
+        xb, yb = batch
+        return 0.5 * jnp.mean((xb @ theta - yb) ** 2)
+
+    return (Xs, ys), quadratic_for_objective(loss, rho=0.05)
+
+
+def test_driver_code_space_aggregation_is_trajectory_identical():
+    """The encode/decode + code-space aggregation path produces the exact
+    state trajectory of the dequant-materialized path (encode stripped)."""
+    (Xs, ys), sur = _quad_problem()
+    comp = C.block_quant(8, 64)
+    assert comp.encode is not None
+    plain = dataclasses.replace(comp, encode=None, decode=None)
+    problem = api.as_problem(sur)
+    kwargs = dict(key=KEY, n_rounds=12, track_mirror=True)
+    for variates, alpha in [("zero", 0.1), ("off", 0.0)]:
+        sp_w = api.FederationSpec(n_clients=4, participation=0.5,
+                                  alpha=alpha, variates=variates,
+                                  compressor=comp)
+        sp_p = dataclasses.replace(sp_w, compressor=plain)
+        st_w, h_w = api.run(problem, jnp.zeros(6), lambda t, k: (Xs, ys),
+                            0.3, spec=sp_w, **kwargs)
+        st_p, h_p = api.run(problem, jnp.zeros(6), lambda t, k: (Xs, ys),
+                            0.3, spec=sp_p, **kwargs)
+        _bit_equal(st_w.x, st_p.x)
+        if variates == "zero":
+            _bit_equal(st_w.v_i, st_p.v_i)
+        for k in h_w:
+            np.testing.assert_allclose(np.asarray(h_w[k]),
+                                       np.asarray(h_p[k]),
+                                       rtol=0, atol=0, err_msg=k)
+
+
+def test_driver_comm_bytes_equals_actual_encoded_buffers():
+    """Acceptance: the driver's comm_bytes metric IS the encoded buffer
+    byte count of the active clients' payloads."""
+    (Xs, ys), sur = _quad_problem()
+    comp = C.block_quant(8, 64)
+    spec = api.FederationSpec(n_clients=4, participation=0.5, alpha=0.1,
+                              compressor=comp)
+    problem = api.as_problem(sur)
+    state = api.init(problem, jnp.zeros(6), spec)
+    state, m = api.step(problem, spec, state, (Xs, ys), 0.3, KEY)
+    actual_one = comp.encoded_bytes(comp.encode(KEY, jnp.zeros(6)))
+    assert float(m["comm_bytes"]) == pytest.approx(
+        actual_one * float(m["n_active"]))
+
+
+def test_trainer_comm_bytes_equals_actual_encoded_buffers():
+    """Acceptance: same contract for the transformer-scale trainer."""
+    import repro.configs as CFG
+    from repro.fed import trainer as FT
+    from repro.models.model import build_model, make_batch
+
+    cfg = CFG.get("phi3-medium-14b").reduced()
+    model = build_model(cfg)
+    fcfg = FT.FedLMConfig(n_clients=2, rho=0.05, quant_bits=8)
+    state = FT.init_state(model, KEY, fcfg)
+    step = jax.jit(FT.make_train_step(model, fcfg))
+    b = make_batch(KEY, cfg, batch_size=4, seq_len=16)
+    batch = {k: v.reshape((2, 2) + v.shape[1:]) for k, v in b.items()}
+    state, m = step(state, batch, KEY, 0.5)
+    comp = FT.resolve_compressor(fcfg)
+    actual_one = comp.encoded_bytes(comp.encode(KEY, state.s_hat))
+    assert float(m["comm_bytes"]) == pytest.approx(
+        actual_one * float(m["n_active"]))
+
+
+def test_scan_batch_bytes_max_kwarg():
+    """Satellite: the scan budget is overridable per-run, and the fallback
+    warning reports the measured byte sizes."""
+    (Xs, ys), sur = _quad_problem()
+    spec = api.FederationSpec(n_clients=4, participation=1.0, alpha=0.1)
+    problem = api.as_problem(sur)
+    kwargs = dict(spec=spec, key=KEY, n_rounds=4)
+    st_ref, _ = api.run(problem, jnp.zeros(6), lambda t, k: (Xs, ys), 0.3,
+                        **kwargs)
+    with pytest.warns(UserWarning, match=r"bytes/round") as rec:
+        st_small, _ = api.run(problem, jnp.zeros(6), lambda t, k: (Xs, ys),
+                              0.3, scan_batch_bytes_max=1, **kwargs)
+    assert "scan_batch_bytes_max=1" in str(rec[0].message)
+    _bit_equal(st_ref.x, st_small.x)
+    # a generous explicit budget keeps the scan (no warning)
+    import warnings as W
+    with W.catch_warnings():
+        W.simplefilter("error")
+        st_big, _ = api.run(problem, jnp.zeros(6), lambda t, k: (Xs, ys),
+                            0.3, scan_batch_bytes_max=1 << 40, **kwargs)
+    _bit_equal(st_ref.x, st_big.x)
