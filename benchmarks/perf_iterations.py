@@ -23,6 +23,17 @@ row:
 
   PYTHONPATH=src python -m benchmarks.perf_iterations --wire
 
+``--collective`` times the PR-4 shard_mapped driver — the client stage
+shard_mapped over every local device with the uplink as a real
+quantize -> all_gather(packed codes + scales) -> dequantize -> reduce
+collective — against the single-device vmap path on the same workload,
+and records the MEASURED bytes the collective moved (the
+``collective_payload_bytes`` metric) as a ``pair="collective"`` row. Run
+it under fake devices to exercise a real mesh on a CPU box:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.perf_iterations --collective
+
 Results append to results/perf_log.json; the narrative lives in
 EXPERIMENTS.md §Perf.
 """
@@ -242,6 +253,84 @@ def bench_wire(log_path: str = "results/perf_log.json", n_clients: int = 32,
     return entry
 
 
+def bench_collective(rounds: int = 100,
+                     log_path: str = "results/perf_log.json",
+                     seed: int = 0):
+    """The shard_mapped driver (mesh over every local device, code-space
+    all_gather uplink) vs the single-device vmap path on the fig-1
+    federated dictionary-learning workload. Both are trajectory-identical
+    bit for bit (tests/test_sharded_driver.py); what this records is the
+    dispatch cost of the real collective plus the MEASURED wire bytes.
+    Records a ``pair="collective"`` row; returns the entry."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro import api
+    from repro.core import compression as Cmp
+    from repro.core.variational import DictLearnSpec, make_dictlearn
+    from repro.data.synthetic import (balanced_kmeans_split,
+                                      client_minibatch_fn, dictlearn_data)
+
+    n_devices = jax.device_count()
+    n_clients = 8 if 8 % n_devices == 0 else n_devices
+    key = jax.random.PRNGKey(seed)
+    spec = DictLearnSpec(p=30, K=8, lam=0.1, eta=0.2, ista_iters=30)
+    z, _ = dictlearn_data(key, 2000, spec.p, spec.K)
+    clients = balanced_kmeans_split(key, z, n_clients=n_clients, n_iters=5)
+    problem = api.as_problem(make_dictlearn(spec))
+    comp = Cmp.block_quant(8, 128)
+    fed = api.FederationSpec(n_clients=n_clients, participation=0.5,
+                             alpha=0.01, compressor=comp)
+    batch_fn = client_minibatch_fn(clients, batch_size=50)
+    gamma = api.decaying_stepsize(0.05)
+    s0 = problem.s_bar(z[:64],
+                       jax.random.normal(key, (spec.p, spec.K)) * 0.1)
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("clients",))
+
+    def timed(**kw):
+        common = dict(spec=fed, key=key, n_rounds=rounds, **kw)
+        state, hist = api.run(problem, s0, batch_fn, gamma, **common)
+        jax.block_until_ready(state.x)
+        t0 = time.time()
+        state, hist = api.run(problem, s0, batch_fn, gamma, **common)
+        jax.block_until_ready(state.x)
+        return rounds / (time.time() - t0), state, hist
+
+    rps_single, st_s, _ = timed()
+    rps_mesh, st_m, hist = timed(mesh=mesh)
+    identical = all(
+        bool(jax.numpy.array_equal(a, b)) for a, b in
+        zip(jax.tree.leaves(st_s.x), jax.tree.leaves(st_m.x)))
+    wire_bytes = float(np.asarray(hist["collective_payload_bytes"])[0])
+    f32_stack = n_clients * sum(
+        int(np.prod(l.shape)) * 4 for l in jax.tree.leaves(s0))
+    entry = {"pair": "collective", "variant": "shard_mapped_driver",
+             "hypothesis": "the uplink as a real code-space all_gather "
+             "over the client mesh axis: wire bytes = packed codes + "
+             "scales (~1/4 of f32 at b8), trajectory bit-identical; "
+             "rounds/sec pays the per-round collective dispatch",
+             "multi_pod": False,
+             "result": {"status": "ok", "rounds": rounds,
+                        "n_devices": n_devices, "n_clients": n_clients,
+                        "rounds_per_sec_single_device": rps_single,
+                        "rounds_per_sec_shard_mapped": rps_mesh,
+                        "trajectory_bit_identical": identical,
+                        "collective_wire_bytes_per_round": wire_bytes,
+                        "f32_stack_bytes_per_round": f32_stack,
+                        "wire_vs_f32_ratio": f32_stack / wire_bytes}}
+    print(f"[collective] devices={n_devices} clients={n_clients}: "
+          f"rounds/sec single={rps_single:.1f} shard_mapped={rps_mesh:.1f}"
+          f"  wire={wire_bytes:.0f}B/round vs f32 {f32_stack}B "
+          f"({f32_stack / wire_bytes:.2f}x)  bit-identical={identical}")
+    log = json.load(open(log_path)) if os.path.exists(log_path) else []
+    log = [e for e in log if e.get("pair") != "collective"] + [entry]
+    os.makedirs(os.path.dirname(log_path) or ".", exist_ok=True)
+    json.dump(log, open(log_path, "w"), indent=1)
+    return entry
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pair", choices=list(PAIRS))
@@ -252,8 +341,12 @@ def main():
                     help="measure the code-space aggregation payload "
                     "footprint + round time vs the dequant-materialized "
                     "path")
+    ap.add_argument("--collective", action="store_true",
+                    help="time the shard_mapped driver (code-space "
+                    "all_gather uplink over every local device) vs the "
+                    "single-device path + record measured wire bytes")
     ap.add_argument("--rounds", type=int, default=200,
-                    help="--driver: trajectory length to time")
+                    help="--driver/--collective: trajectory length to time")
     ap.add_argument("--variant", default=None,
                     help="run only this named variant (plus baseline if "
                     "missing from the log)")
@@ -267,8 +360,12 @@ def main():
     if args.wire:
         bench_wire(log_path=args.log)
         return
+    if args.collective:
+        bench_collective(rounds=min(args.rounds, 200), log_path=args.log)
+        return
     if args.pair is None:
-        ap.error("--pair is required unless --driver/--wire is given")
+        ap.error("--pair is required unless --driver/--wire/--collective "
+                 "is given")
 
     from repro.launch.dryrun import compile_one
 

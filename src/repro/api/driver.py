@@ -22,10 +22,12 @@ from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 from ..core.compression import _tree_bytes
-from ..core.surrogate import (tree_add, tree_axpy, tree_lerp, tree_scale,
-                              tree_sub, tree_sq_norm)
+from ..core.surrogate import (tree_lerp, tree_scale, tree_sub, tree_sq_norm,
+                              tree_sq_norm_ew)
 from .problem import MMProblem, as_problem
 from .schedule import resolve_schedule, schedule_length
 from .spec import FederationSpec, participation_draw
@@ -35,6 +37,13 @@ Pytree = Any
 # stacked batches above this many bytes force the python-loop fallback
 # (scan would materialize the whole trajectory's data on device)
 SCAN_BATCH_BYTES_MAX = 1 << 30
+
+CLIENT_MODES = ("vmap", "scan")
+
+# (round_bytes, n_rounds, budget) triples already warned about — the scan
+# fallback fires the warning ONCE per distinct situation, not on every
+# ``run()`` call of a long sweep
+_SCAN_FALLBACK_WARNED: set = set()
 
 
 class DriverState(NamedTuple):
@@ -116,7 +125,9 @@ def centralized_step(problem: MMProblem, state: DriverState, batch, gamma):
 
 
 def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
-         client_batches, gamma, key, active=None):
+         client_batches, gamma, key, active=None, *,
+         mesh=None, client_axis: str = "clients",
+         client_mode: str = "vmap", drift_metric: bool = True):
     """One federated MM round (Algorithm 2, every axis of the spec applied).
     ``client_batches`` is a pytree with a leading client axis of size n.
     ``active`` optionally overrides the A5 draw with a precomputed (n,)
@@ -132,13 +143,52 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
     n-client f32 stack never exists as a vmap-boundary buffer. The
     ``comm_bytes`` metric is computed from the ACTUAL encoded buffer
     sizes, not an analytic model. ``decode . encode`` is bit-identical to
-    ``apply``, so trajectories are unchanged (tests/test_api_golden.py)."""
+    ``apply``, so trajectories are unchanged (tests/test_api_golden.py).
+
+    client_mode:
+      * ``"vmap"`` (default) — all clients in one batched stage (the
+        historical semantics; the n-client payload stack is live at the
+        vmap boundary);
+      * ``"scan"`` — clients run sequentially under ``lax.scan`` so only
+        ONE client's oracle/quantize transients are live at a time (the
+        LM trainer's "logical" client topology; constant memory in n).
+        The weighted aggregate accumulates in the iterate's dtype, so
+        scan and vmap trajectories agree to rounding, not bit-for-bit.
+
+    mesh / client_axis — the SHARDED driver path: with a ``jax.sharding
+    .Mesh`` whose ``client_axis`` dimension divides n, the client stage
+    runs under ``shard_map`` — each device slice owns ``n / axis_size``
+    clients, computes their oracles and quantizes, and the uplink is a
+    REAL ``all_gather`` over the mesh axis **in code space**: the bytes
+    that cross the device boundary are the ``PackedLeaf`` codes+scales
+    buffers (raw payloads for non-wire compressors), never the
+    dequantized f32 stack. Per-client keys are split OUTSIDE the
+    shard_map from the same chain, the gather is tiled in client order,
+    and decode/mask/aggregation run on the replicated gathered stack —
+    the trajectory is BIT-IDENTICAL to the single-device path
+    (tests/test_sharded_driver.py pins this on 8 fake CPU devices). The
+    static ``collective_payload_bytes`` metric reports the gathered
+    buffer bytes (== n * ``Compressor.payload_bytes``)."""
     n, p, alpha = spec.n_clients, spec.participation, spec.alpha
     mu = spec.client_weights()
     param_space = spec.aggregation == "parameter"
     use_v = spec.use_variates
     comp = spec.compressor
     use_wire = comp.encode is not None
+    if client_mode not in CLIENT_MODES:
+        raise ValueError(f"client_mode={client_mode!r} (want {CLIENT_MODES})")
+    if mesh is not None:
+        if client_mode != "vmap":
+            raise ValueError("the sharded driver path shard_maps the "
+                             "batched client stage; client_mode='scan' is "
+                             "sequential — drop mesh= or use 'vmap'")
+        if client_axis not in mesh.shape:
+            raise ValueError(f"client_axis={client_axis!r} not an axis of "
+                             f"the mesh (axes: {tuple(mesh.shape)})")
+        if n % mesh.shape[client_axis] != 0:
+            raise ValueError(
+                f"n_clients={n} must divide evenly over the "
+                f"'{client_axis}' mesh axis (size {mesh.shape[client_axis]})")
 
     # line 4: broadcast — the mirror image T(Shat) (surrogate mode), the
     # iterate itself (parameter mode), or the problem's custom view
@@ -155,7 +205,12 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
     mask = active.astype(jnp.float32)
 
     def client_update(batch, v_i, qkey):
-        s_i = problem.s_bar(batch, view)                   # line 6 (oracle)
+        """One client's round: oracle (+ optional metrics), drift, wire
+        encode. Returns (payload, per-client metrics dict)."""
+        if problem.s_bar_metrics is not None:
+            s_i, cm = problem.s_bar_metrics(batch, view)   # line 6 (oracle)
+        else:
+            s_i, cm = problem.s_bar(batch, view), {}
         out = problem.T(s_i) if param_space else s_i       # eq. 21 local MM
         if spec.delta == "oracle":
             d = out                                        # raw payload
@@ -164,54 +219,108 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
             if use_v:
                 d = tree_sub(d, v_i)
         if use_wire:
-            return comp.encode(qkey, d)                    # line 9: wire fmt
-        return comp.apply(qkey, d)                         # line 9 (A4)
+            return comp.encode(qkey, d), cm                # line 9: wire fmt
+        return comp.apply(qkey, d), cm                     # line 9 (A4)
 
-    if use_v:
-        payload = jax.vmap(client_update, in_axes=(0, 0, 0))(
-            client_batches, state.v_i, quant_keys)
+    def upd(batch, v_i, qkey):
+        return client_update(batch, v_i if use_v else None, qkey)
+
+    def _mask_q(x, m):
+        # dtype-preserving: never let an f32 mask upcast a bf16 payload
+        return x * m.astype(x.dtype)
+
+    collective_bytes = None
+    if client_mode == "scan":
+        # sequential clients: one oracle/quantize transient live at a time;
+        # the mu_i-weighted aggregate accumulates in the iterate's dtype
+        def body(agg_sum, xs):
+            cb, v_c, qk, mu_c, m_c = xs
+            payload_c, cm = upd(cb, v_c, qk)
+            q_c = comp.decode(payload_c) if use_wire else payload_c
+            q_c = jax.tree.map(lambda x: _mask_q(x, m_c), q_c)
+            v_c_new = (jax.tree.map(lambda v, dq: v + (alpha / p) * dq,
+                                    v_c, q_c) if use_v else ())
+            agg_sum = jax.tree.map(
+                lambda a, x: a + (mu_c * x).astype(a.dtype), agg_sum, q_c)
+            return agg_sum, (v_c_new, cm)
+        zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), state.x)
+        agg, (v_i_new, cmetrics) = jax.lax.scan(
+            body, zeros, (client_batches, state.v_i, quant_keys, mu, mask))
+        # static per-client wire bytes via eval_shape (no stacked payload
+        # exists on this path)
+        wire_bytes_client = comp.wire_bytes(state.x) if use_wire else None
+        q = None
     else:
-        payload = jax.vmap(lambda b, k: client_update(b, None, k),
-                           in_axes=(0, 0))(client_batches, quant_keys)
-    if use_wire:
-        # actual uplink bytes of ONE client's payload, read off the stacked
-        # encoded buffers (shapes are static under jit)
-        wire_bytes_client = comp.encoded_bytes(payload) / n
-        q = comp.decode(payload)   # batched; fuses into the aggregation
-    else:
-        wire_bytes_client = None
-        q = payload
-    # non-participating clients send nothing / keep V_i
-    q = jax.tree.map(
-        lambda x: x * mask.reshape((n,) + (1,) * (x.ndim - 1)), q)
+        if mesh is not None:
+            cspec = PartitionSpec(client_axis)
 
-    # client control variates (lines 8/11)
-    v_i_new = (jax.tree.map(lambda v, dq: v + (alpha / p) * dq,
-                            state.v_i, q) if use_v else ())
+            def client_stage(cb, vi, qk):
+                # each device slice runs its local clients...
+                local = jax.vmap(upd, in_axes=(0, 0, 0))(cb, vi, qk)
+                # ...and the uplink collective moves the ENCODED buffers:
+                # packed codes + per-group scales cross the mesh boundary
+                return jax.tree.map(
+                    lambda x: jax.lax.all_gather(x, client_axis, axis=0,
+                                                 tiled=True), local)
 
-    # server aggregation (line 13)
-    agg = jax.tree.map(lambda x: jnp.tensordot(mu, x, axes=1), q)
+            # check_rep=False: all_gather's replication over client_axis is
+            # real but not statically inferred on this jax version
+            payload, cmetrics = shard_map(
+                client_stage, mesh=mesh,
+                in_specs=(cspec, cspec, cspec), out_specs=PartitionSpec(),
+                check_rep=False)(client_batches, state.v_i, quant_keys)
+            # the gathered stack's actual buffer bytes (static under jit):
+            # for wire compressors this is n * payload_bytes — asserted in
+            # tests/test_sharded_driver.py, not just logged
+            collective_bytes = float(_tree_bytes(payload))
+        else:
+            payload, cmetrics = jax.vmap(upd, in_axes=(0, 0, 0))(
+                client_batches, state.v_i, quant_keys)
+        if use_wire:
+            # actual uplink bytes of ONE client's payload, read off the
+            # stacked encoded buffers (shapes are static under jit)
+            wire_bytes_client = comp.encoded_bytes(payload) / n
+            q = comp.decode(payload)   # batched; fuses into the aggregation
+        else:
+            wire_bytes_client = None
+            q = payload
+        # non-participating clients send nothing / keep V_i
+        q = jax.tree.map(
+            lambda x: _mask_q(x, mask.reshape((n,) + (1,) * (x.ndim - 1))),
+            q)
+
+        # client control variates (lines 8/11)
+        v_i_new = (jax.tree.map(lambda v, dq: v + (alpha / p) * dq,
+                                state.v_i, q) if use_v else ())
+
+        # server aggregation (line 13); the weighted reduction keeps each
+        # leaf's dtype (tensordot against f32 weights would upcast bf16)
+        agg = jax.tree.map(
+            lambda x: jnp.tensordot(mu, x, axes=1).astype(x.dtype), q)
     if spec.normalization == "realized":
         scale = n / jnp.maximum(jnp.sum(mask), 1.0)
-        h = tree_scale(agg, scale)
+        h = jax.tree.map(lambda a: (scale * a).astype(a.dtype), agg)
     else:
         h = tree_scale(agg, 1.0 / p)
     if use_v:
-        h = tree_add(state.v, h)
+        h = jax.tree.map(lambda v, hh: v + hh.astype(v.dtype), state.v, h)
 
     # server update (lines 15-16): SA step + projection, unless the problem
     # supplies its own server optimizer (e.g. FedAdam)
     if problem.server_opt is not None:
         x_new, opt_new = problem.server_opt(state.x, h, gamma, state.opt)
     else:
-        x_new = tree_axpy(gamma, h, state.x)
+        x_new = jax.tree.map(
+            lambda hh, xx: (gamma * hh.astype(xx.dtype) + xx).astype(xx.dtype),
+            h, state.x)
         if not param_space:
             x_new = problem.project(x_new)
         opt_new = state.opt
 
     # server control variate (line 17)
-    v_new = (tree_add(state.v, tree_scale(agg, alpha / p)) if use_v
-             else ())
+    v_new = (jax.tree.map(
+        lambda v, a: v + ((alpha / p) * a).astype(v.dtype), state.v, agg)
+        if use_v else ())
 
     # problem-owned server state (FedMM-OT line 16: conjugate update)
     if problem.server_step is not None:
@@ -219,21 +328,37 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
     else:
         aux_new, aux_metrics = state.aux, {}
 
-    drift = tree_sub(x_new, state.x)
     comm = comp.round_metrics(state.x, p=p)
     per_client = (wire_bytes_client if use_wire
                   else comm["payload_bytes_per_client"])
     metrics = {
-        # E^s (surrogate) / E^p (parameter) — the Section 6 diagnostics
-        ("e_p" if param_space else "e_s"):
-            tree_sq_norm(drift) / (gamma ** 2),
         "n_active": jnp.sum(mask),
         # actual encoded-buffer bytes on the wire path, analytic otherwise
         "comm_bytes": per_client * jnp.sum(mask),
         "omega_eff": jnp.asarray(comm["omega_eff"], jnp.float32),
     }
+    if drift_metric:
+        # E^s (surrogate) / E^p (parameter) — the Section 6 diagnostics.
+        # ``drift_metric=False`` (the LM trainer) skips the param-sized
+        # drift temp + the raveling vdot, which would force replication
+        # of sharded iterates.
+        drift = tree_sub(x_new, state.x)
+        metrics["e_p" if param_space else "e_s"] = \
+            tree_sq_norm(drift) / (gamma ** 2)
     if not param_space:
-        metrics["h_norm_sq"] = tree_sq_norm(h)
+        # elementwise square+sum (never ravels a sharded leaf)
+        metrics["h_norm_sq"] = tree_sq_norm_ew(h)
+    if collective_bytes is not None:
+        metrics["collective_payload_bytes"] = jnp.asarray(collective_bytes,
+                                                          jnp.float32)
+    # per-client oracle metrics: mean over ALL clients (active or not).
+    # Keys are static — collisions with driver metrics would silently
+    # clobber the accounting, so they are an error, not an overwrite.
+    dup = set(cmetrics) & set(metrics)
+    if dup:
+        raise ValueError(f"s_bar_metrics keys {sorted(dup)} collide with "
+                         f"driver metrics — rename them in the problem")
+    metrics.update({k: jnp.mean(v, axis=0) for k, v in cmetrics.items()})
     metrics.update(aux_metrics)
     new_state = DriverState(x=x_new, v=v_new, v_i=v_i_new, aux=aux_new,
                             opt=opt_new, step=state.step + 1)
@@ -253,7 +378,9 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
         eval_every: int = 1, track_mirror: bool = False, diag=None,
         scan: bool = True, v0_i=None, init_batches=None,
         state0: Optional[DriverState] = None,
-        scan_batch_bytes_max: Optional[int] = None):
+        scan_batch_bytes_max: Optional[int] = None,
+        mesh=None, client_axis: str = "clients",
+        client_mode: str = "vmap"):
     """Drive ``n_rounds`` of the MM recursion; returns
     ``(final DriverState, metrics)`` where metrics is a stacked-pytree dict
     (each key an array with leading round axis). Use ``history_list`` for
@@ -278,12 +405,21 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
     values the caller discards.
     scan: jit the whole trajectory as one ``lax.scan`` (default); False
     falls back to a per-round python loop (same math, useful when stacked
-    batches would not fit or for debugging).
+    batches would not fit or for debugging). With ``scan=False`` the
+    trajectory batches are never stacked OR measured — each round's batch
+    is generated lazily.
     scan_batch_bytes_max: device-byte budget for the stacked trajectory
-    batches; above it the scan falls back to the lazy per-round loop.
+    batches; above it the scan falls back to the lazy per-round loop
+    (warning fired once per distinct situation, with the measured bytes).
     Defaults to the module-level ``SCAN_BATCH_BYTES_MAX`` (1 GiB) — raise
-    it on big-memory hosts to keep the scan, lower it to force the
-    constant-memory path.
+    it on big-memory hosts to keep the scan; any value <= 0 DISABLES the
+    check entirely (no measurement, the scan always stacks); lower
+    positive values force the constant-memory path.
+    mesh / client_axis / client_mode: the sharded-driver knobs, passed
+    through to every ``step`` — see ``step``'s docstring. With a mesh the
+    per-client stage is shard_mapped over the ``client_axis`` devices and
+    the uplink is a code-space ``all_gather``; the trajectory stays
+    bit-identical to the single-device run.
     """
     problem = as_problem(problem)
 
@@ -314,15 +450,27 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
     lazy = False
     budget = (SCAN_BATCH_BYTES_MAX if scan_batch_bytes_max is None
               else scan_batch_bytes_max)
+    check_disabled = (scan_batch_bytes_max is not None
+                      and scan_batch_bytes_max <= 0)
     if static:
         batches = data
+    elif not scan:
+        # explicit python loop: never stack (and never measure) the
+        # trajectory — each round's batch is generated lazily below
+        lazy, batches = True, None
     else:
         first = data(0, batch_keys[0])
-        round_bytes = _tree_bytes(first)
-        if n_rounds * round_bytes > budget:
+        if not check_disabled:
+            round_bytes = _tree_bytes(first)
+            over = n_rounds * round_bytes > budget
+        else:
+            over = False           # budget disabled: skip the measurement
+        if over:
             # do NOT materialize the trajectory: generate each round's
             # batch inside the loop, constant-memory like the legacy loops
-            if scan:
+            sig = (round_bytes, n_rounds, budget)
+            if sig not in _SCAN_FALLBACK_WARNED:
+                _SCAN_FALLBACK_WARNED.add(sig)
                 warnings.warn(
                     f"stacked batches would exceed the scan budget "
                     f"({round_bytes:,} bytes/round x {n_rounds} rounds = "
@@ -330,7 +478,7 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
                     f"scan_batch_bytes_max={budget:,}); falling back to "
                     f"the per-round python loop — pass run(..., "
                     f"scan_batch_bytes_max=...) to raise the budget")
-                scan = False
+            scan = False
             lazy, batches, first = True, None, None
         else:
             batch_list = [first] + [data(t, batch_keys[t])
@@ -356,6 +504,12 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
             m[diag_name] = (tree_sq_norm(tree_sub(diag_new, diag_prev))
                             / gamma ** 2)
         if problem.loss is not None and eval_batch is not None:
+            if "loss" in m:
+                raise ValueError(
+                    "metric key collision: the problem's s_bar_metrics "
+                    "already reports a per-client 'loss' and the eval hook "
+                    "would overwrite it — drop eval_batch or rename the "
+                    "client metric")
             def eval_loss(_):
                 theta_eval = state.x if param_space else problem.T(state.x)
                 return jnp.asarray(problem.loss(eval_batch, theta_eval),
@@ -381,7 +535,9 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
                 batch = batches
             else:
                 gamma, k, t_idx, batch = xs
-            state, m = step(problem, spec, state, batch, gamma, k)
+            state, m = step(problem, spec, state, batch, gamma, k,
+                            mesh=mesh, client_axis=client_axis,
+                            client_mode=client_mode)
             m, theta_new, diag_new = round_metrics(state, m, gamma,
                                                    theta_prev, diag_prev,
                                                    t_idx)
@@ -398,7 +554,9 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
         return state, hist
 
     # python fallback: identical math, one jitted step per round
-    step_j = jax.jit(lambda st, b, g, k: step(problem, spec, st, b, g, k))
+    step_j = jax.jit(lambda st, b, g, k: step(
+        problem, spec, st, b, g, k, mesh=mesh, client_axis=client_axis,
+        client_mode=client_mode))
     state, theta_prev, diag_prev = state0, theta_prev0, diag_prev0
     hist = []
     for t in range(n_rounds):

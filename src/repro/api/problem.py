@@ -15,6 +15,12 @@ view:        (s, aux) -> broadcast payload handed to every client oracle.
              Defaults to ``T(s)`` (Algorithm 2 line 4: broadcast the mirror
              image). FedMM-OT overrides it to ``(omega, theta)`` because the
              client best-response needs the conjugate potential too.
+s_bar_metrics: (batch, view) -> (s, metrics dict) replaces ``s_bar`` as the
+             client oracle when the workload wants per-client diagnostics
+             without a second forward pass (the LM trainer: per-client loss
+             from the same value_and_grad). The driver stacks each metric
+             over the client axis and reports its mean over ALL clients
+             (active or not) — matching the legacy trainer's ``loss``.
 init_aux:    () -> auxiliary server state threaded through the rounds
              (FedMM-OT: the conjugate potential theta + its Adam state).
 server_step: (aux, x_new) -> (aux_new, metrics) run after the SA update
@@ -53,6 +59,7 @@ class MMProblem:
     g: Optional[Callable[[Pytree], jnp.ndarray]] = None
     # --- driver hooks (all optional) --------------------------------------
     view: Optional[Callable[[Pytree, Pytree], Pytree]] = None
+    s_bar_metrics: Optional[Callable[[Pytree, Pytree], tuple]] = None
     init_aux: Optional[Callable[[], Pytree]] = None
     server_step: Optional[Callable[[Pytree, Pytree], tuple]] = None
     server_opt: Optional[Callable[[Pytree, Pytree, Any, Pytree], tuple]] = None

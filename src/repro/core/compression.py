@@ -333,30 +333,67 @@ def _stream_dither(dither: str) -> str:
     return "hash" if dither == "kernel" else dither
 
 
-def _kernel_eligible(x, g: int, kernel_threshold: int) -> bool:
-    """One dispatch predicate shared by apply and encode (they MUST agree,
-    or decode . encode would not be bit-identical to apply): large leaf,
-    128-aligned group (lanes == g on the VPU). Multi-dim leaves dispatch
-    only on single-device processes: shard_safe mode exists to preserve
-    GSPMD sharding of parameter-sized leaves, and pallas_call has no
-    shard_map wrapper yet — on a multi-device mesh the (R, D) collapse
-    would force a gather, so those leaves keep the elementwise jnp-oracle
-    path (the pre-PR-3 behavior)."""
+def _kernel_route(x, g: int, kernel_threshold: int) -> str:
+    """One dispatch decision shared by apply and encode (they MUST agree,
+    or decode . encode would not be bit-identical to apply). Returns
+
+      * ``"kernel"``    — the direct Pallas path: large leaf, 128-aligned
+        group, and the leaf's buffers live on ONE device (unsharded,
+        fully replicated, or a single-device process);
+      * ``"shard_map"`` — the leaf is genuinely partitioned under a
+        ``NamedSharding`` whose per-shard last-axis width keeps whole
+        groups: run the kernel per shard via the ``kernels/ops.py``
+        shard_map wrappers (shard-safe groups are shard-local by
+        construction, so per-shard kernels are bit-identical to the
+        global oracle). Only the shard_safe caller honors this — the
+        flat (block-p) layout groups across the global element stream,
+        which shards do not preserve;
+      * ``"jnp"``       — everything else (small/misaligned leaves,
+        opaque or group-splitting shardings, and TRACED leaves inside a
+        jit on a multi-device process, whose sharding is unknowable at
+        trace time — the conservative pre-sharding behavior).
+
+    This replaces the old process-wide ``jax.device_count() > 1`` guard,
+    which silently dropped the kernel for every multi-dim leaf on a
+    multi-device host even when the leaf was unsharded or fully
+    replicated (tests/test_sharded_driver.py pins the regression under
+    8 fake CPU devices)."""
     if x.size < kernel_threshold or g % 128 != 0 or g < 2:
-        return False
-    if x.ndim > 1 and jax.device_count() > 1:
-        return False
-    return True
+        return "jnp"
+    # the tracer check is EXPLICIT (not "has no .sharding attribute"):
+    # newer jax versions expose abstract shardings on tracers, which must
+    # never route to the eager-only shard_map wrapper
+    sharding = (None if isinstance(x, jax.core.Tracer)
+                else getattr(x, "sharding", None))
+    if sharding is None:
+        # traced leaf (or ShapeDtypeStruct): sharding unknowable — keep
+        # the conservative behavior for multi-dim leaves so a pjit'd
+        # caller never pays a GSPMD gather around an unshardable
+        # pallas_call
+        if x.ndim > 1 and jax.device_count() > 1:
+            return "jnp"
+        return "kernel"
+    if sharding.is_fully_replicated or len(sharding.device_set) == 1:
+        return "kernel"
+    if isinstance(sharding, jax.sharding.NamedSharding):
+        shard_shape = sharding.shard_shape(tuple(x.shape))
+        if shard_shape[-1] % g == 0:
+            return "shard_map"
+    return "jnp"
+
+
+def _kernel_eligible(x, g: int, kernel_threshold: int) -> bool:
+    """The flat-mode predicate: only the direct single-device kernel path
+    (the flat element stream's groups cross shard boundaries, so sharded
+    leaves keep the jnp path there)."""
+    return _kernel_route(x, g, kernel_threshold) == "kernel"
 
 
 def _rows_view(x, g: int):
-    """The (R, D) kernel view: multi-dim leaves collapse leading dims and
-    keep the grouped LAST axis; flat leaves tile into g-wide rows. Row-major
-    order means the global element index (the hash-dither stream) is
-    unchanged."""
-    if x.ndim == 1:
-        return x.reshape(-1, g)
-    return x.reshape(-1, x.shape[-1])
+    """The (R, D) kernel view — ONE definition shared with the per-shard
+    dispatch (``kernels/ops.py:rows_view``): the row layout is bit-
+    identity-critical (it fixes the global dither element stream)."""
+    return kernel_ops.rows_view(x, g)
 
 
 def quantize_leaf(key, x, bits: int = 8, block: int = 256,
@@ -400,7 +437,8 @@ def quantize_leaf(key, x, bits: int = 8, block: int = 256,
             deq = kernel_ref.quantize_groups_native(xg, u.reshape(xg.shape),
                                                     bits=bits)
             return deq.reshape(x.shape)
-        if _kernel_eligible(x, g, kernel_threshold):
+        route = _kernel_route(x, g, kernel_threshold)
+        if route == "kernel":
             x2 = _rows_view(x.astype(jnp.float32), g)
             if dither == "kernel":
                 out = kernel_ops.quantize_dequantize_kernel_dither(
@@ -410,6 +448,19 @@ def quantize_leaf(key, x, bits: int = 8, block: int = 256,
                 out = kernel_ops.quantize_dequantize_grouped(
                     x2, u.reshape(x2.shape), bits=bits, group=g)
             return out.reshape(x.shape).astype(orig_dtype)
+        if route == "shard_map":
+            # partitioned leaf: one kernel per shard (groups are shard-
+            # local). The dither is streamed from GLOBAL element indices,
+            # so the draws — and hence the codes — are bit-identical to
+            # the unsharded kernel/oracle. ``dither="kernel"`` seeds from
+            # grid position, which is not stable under resharding, so it
+            # degrades to the streamed hash here like every off-kernel
+            # leaf.
+            u = _make_dither(_stream_dither(dither), key, x.shape)
+            out = kernel_ops.quantize_dequantize_sharded(
+                x.astype(jnp.float32), u, bits=bits, group=g,
+                sharding=x.sharding)
+            return out.astype(orig_dtype)
         u = _make_dither(_stream_dither(dither), key, x.shape)
         xg = x.astype(jnp.float32).reshape(x.shape[:-1] + (D // g, g))
         deq = kernel_ref.quantize_groups_ref(xg, u.reshape(xg.shape),
@@ -472,12 +523,13 @@ def encode_leaf(key, x, bits: int = 8, block: int = 256,
         g = group_size(D, block)
         if g < 2:
             return x
+        route = None if native else _kernel_route(x, g, kernel_threshold)
         if native:
             u = _make_dither(_stream_dither(dither), key, x.shape)
             xg = x.reshape(x.shape[:-1] + (D // g, g))
             codes, scales = kernel_ref.encode_groups_ref(
                 xg, u.reshape(xg.shape), bits=bits)
-        elif _kernel_eligible(x, g, kernel_threshold):
+        elif route == "kernel":
             x2 = _rows_view(x.astype(jnp.float32), g)
             if dither == "kernel":
                 c2, s2 = kernel_ops.quantize_encode_kernel_dither(
@@ -486,6 +538,15 @@ def encode_leaf(key, x, bits: int = 8, block: int = 256,
                 u = _make_dither(dither, key, x.shape)
                 c2, s2 = kernel_ops.quantize_encode_grouped(
                     x2, u.reshape(x2.shape), bits=bits, group=g)
+            codes = c2.reshape(x.shape[:-1] + (D // g, g))
+            scales = s2.reshape(x.shape[:-1] + (D // g, 1))
+        elif route == "shard_map":
+            # per-shard encode kernels; draws streamed from global indices
+            # (see quantize_leaf) — codes/scales stay sharded like x
+            u = _make_dither(_stream_dither(dither), key, x.shape)
+            c2, s2 = kernel_ops.quantize_encode_sharded(
+                x.astype(jnp.float32), u, bits=bits, group=g,
+                sharding=x.sharding)
             codes = c2.reshape(x.shape[:-1] + (D // g, g))
             scales = s2.reshape(x.shape[:-1] + (D // g, 1))
         else:
@@ -644,12 +705,17 @@ def rand_k(fraction: float) -> Compressor:
 
     def payload(shape, itemsize):
         # a sparse payload is (value, coordinate) pairs: each surviving
-        # coordinate carries its value (itemsize bytes) PLUS its index
-        # (ceil(log2 n) bits for a leaf of n coordinates). The old model
-        # billed values only — a free-coordinates fiction that understated
-        # e.g. a 1M-coord f32 leaf at fraction 0.1 by ~38%.
+        # coordinate carries its value (itemsize bytes) PLUS its index —
+        # ceil(log2 n) bits, clamped to >= 1 (an index field cannot be
+        # narrower than a bit: the old model billed 0 index bits for
+        # n == 1 leaves and called log2 on n == 0 for empty ones). The
+        # pre-PR-3 model billed values only — a free-coordinates fiction
+        # that understated e.g. a 1M-coord f32 leaf at fraction 0.1 by
+        # ~38%.
         n = float(math.prod(shape)) if shape else 1.0
-        idx_bits = math.ceil(math.log2(n)) if n > 1 else 0
+        if n == 0:
+            return 0.0
+        idx_bits = max(1, math.ceil(math.log2(n)))
         return n * fraction * (itemsize + idx_bits / 8.0)
 
     return Compressor(apply=apply, omega=float(omega), bits=32.0 * fraction,

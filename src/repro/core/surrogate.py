@@ -66,6 +66,16 @@ def tree_sq_norm(a: Pytree):
     return tree_dot(a, a)
 
 
+def tree_sq_norm_ew(a: Pytree):
+    """||a||^2 as an elementwise square + per-leaf sum in float32. Unlike
+    ``tree_sq_norm`` (vdot), this never ravels a leaf — a 1-D ravel of a
+    GSPMD-sharded tensor forces full replication, so sharded drivers and
+    the LM trainer use this form for their norm diagnostics."""
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(a)]
+    return sum(leaves) if leaves else jnp.asarray(0.0)
+
+
 def tree_norm(a: Pytree):
     return jnp.sqrt(tree_sq_norm(a))
 

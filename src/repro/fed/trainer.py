@@ -17,6 +17,11 @@ operator from (quant_bits, quant_block, quant_dither) or takes an explicit
 ``FedLMConfig.compressor``, so this trainer, ``core/fedmm.py``, and the raw
 kernel produce identical dequantized payloads for identical keys.
 
+It owns no client loop either: ``make_train_step`` adapts the model into an
+``api.MMProblem`` (``make_problem``) and runs each round as one
+``api.step`` call — physical silos on the driver's batched/shard_mapped
+path, logical clients on its sequential-scan mode (see below).
+
 Client topology (DESIGN.md §3):
   physical  n = |pod| x |data| silos; V_i / grads carry a leading client dim
             sharded over ('pod','data'); inner dims sharded over 'model'.
@@ -136,118 +141,75 @@ def init_state(model: Model, key, cfg: FedLMConfig) -> FedLMState:
     return FedLMState(s_hat=params, v=v, v_i=v_i, step=jnp.asarray(0))
 
 
-def make_train_step(model: Model, cfg: FedLMConfig):
+def make_problem(model: Model, cfg: FedLMConfig) -> "api.MMProblem":
+    """This trainer's workload as the ONE ``api.MMProblem``: the quadratic
+    surrogate (Example 1) on ``model.loss_fn`` — per-client oracle
+    S_i = theta - rho * grad_i(theta) (dtype-preserving: the f32 grads cast
+    back into the parameter dtype), T = the l2 prox, projection = identity
+    (S = R^q). ``s_bar_metrics`` surfaces the per-client loss from the same
+    ``value_and_grad`` call, so the driver's metrics carry the trainer's
+    ``loss`` without a second forward pass."""
+
+    def s_bar_metrics(cb, theta):
+        loss, g = jax.value_and_grad(model.loss_fn)(theta, cb)
+        s_i = jax.tree.map(
+            lambda th, gg: th - cfg.rho * gg.astype(th.dtype), theta, g)
+        return s_i, {"loss": loss}
+
+    return api.MMProblem(
+        s_bar=lambda cb, theta: s_bar_metrics(cb, theta)[0],
+        s_bar_metrics=s_bar_metrics,
+        T=lambda s: T_map(s, cfg))
+
+
+def make_train_step(model: Model, cfg: FedLMConfig, mesh=None,
+                    client_axis: str = "clients"):
     """Returns train_step(state, batch, key, gamma) -> (state, metrics).
     batch: {"tokens": (n_clients, B_local, S), "labels": ...} (+frontend).
-    All federation axes come off ``cfg.federation_spec()`` — the same
-    ``repro.api.FederationSpec`` the reference driver consumes."""
+
+    The round IS one ``api.step`` call (ROADMAP follow-up (a) — no
+    hand-rolled client loop left in this module): every federation axis
+    comes off ``cfg.federation_spec()``, the same ``FederationSpec`` the
+    reference driver consumes, and the client topology maps onto the
+    driver's client modes
+
+      * ``client_mode="physical"`` -> the batched/sharded driver path
+        (``client_mode="vmap"`` + optional ``mesh=``/``client_axis=``:
+        silos run concurrently, the client dim shard_mapped over the mesh
+        axis and the uplink a real code-space all_gather — without a mesh
+        the vmap stays hand-shardable by pjit exactly as before);
+      * ``client_mode="logical"``  -> the driver's sequential-scan client
+        mode (one client's grad/delta/quantize transients live at a time
+        — the production pattern for simulated cross-silo runs on shared
+        hardware).
+
+    ``tests/test_fed_trainer.py`` golden-pins both modes against a frozen
+    copy of the pre-collapse hand-rolled trainer."""
 
     spec = cfg.federation_spec()
     use_cv = spec.use_variates
-    comp = spec.compressor
-
-    def client_round(theta, s_hat, v_i_c, cb, qkey, active):
-        """One client's work (Algorithm 2 lines 5-9): oracle, drift-corrected
-        delta, compress (A4), control-variate update. active in {0., 1.}.
-        With use_cv=False (the alpha=0 / omega_p=0 regime of Theorem 1),
-        V_i is dropped entirely — no drift correction, no CV state."""
-        loss, g = jax.value_and_grad(model.loss_fn)(theta, cb)
-        if use_cv:
-            d = jax.tree.map(
-                lambda th, gg, s, vv: th - cfg.rho * gg.astype(th.dtype) - s - vv,
-                theta, g, s_hat, v_i_c)
-        else:
-            d = jax.tree.map(
-                lambda th, gg, s: th - cfg.rho * gg.astype(th.dtype) - s,
-                theta, g, s_hat)
-        if comp.encode is not None:
-            # express the uplink through the wire format: the payload
-            # between encode and decode is what a real quantized collective
-            # would move (packed codes + per-group scales). decode . encode
-            # == apply bit-for-bit and XLA fuses the round-trip, so the
-            # trajectory and cost are unchanged on a single device — this
-            # is the staging point for the ROADMAP's fused
-            # quantize->all-reduce->dequantize path. At bits <= 4 the
-            # nibble pack/unpack pair is real elementwise work (int8 stays
-            # free); the default 8-bit config pays nothing.
-            q = comp.decode(comp.encode(qkey, d))
-        else:
-            q = comp.apply(qkey, d)
-        q = jax.tree.map(lambda x: x * active.astype(x.dtype), q)
-        if not use_cv:
-            return loss, q, {}
-        v_new = jax.tree.map(
-            lambda v, dq: v + (spec.alpha / spec.participation) * dq,
-            v_i_c, q)
-        return loss, q, v_new
+    problem = make_problem(model, cfg)
+    driver_mode = "scan" if cfg.client_mode == "logical" else "vmap"
 
     def train_step(state: FedLMState, batch, key, gamma):
-        n, p, alpha = spec.n_clients, spec.participation, spec.alpha
-        theta = T_map(state.s_hat, cfg)
-
-        # A5 sampling + per-client key fold shared with the api driver
-        active, quant_keys = api.participation_draw(key, spec)
-        active = active.astype(jnp.float32)
-
-        if cfg.client_mode == "physical":
-            # silos run concurrently: client dim is sharded over ('pod','data')
-            losses, q, v_i_new = jax.vmap(
-                client_round, in_axes=(None, None, 0, 0, 0, 0))(
-                    theta, state.s_hat, state.v_i, batch, quant_keys, active)
-            agg = jax.tree.map(lambda x: jnp.mean(x, axis=0), q)  # mu_i = 1/n
-        else:
-            # logical clients share the whole mesh: process sequentially so
-            # only ONE client's grad/delta/quantize transients are live
-            # (38 GB/device -> fits; the production pattern for simulated
-            # cross-silo runs on shared hardware).
-            def body(carry, xs):
-                agg_sum, loss_sum = carry
-                cb, v_c, qk, act = xs
-                loss, q_c, v_new = client_round(theta, state.s_hat, v_c,
-                                                cb, qk, act)
-                agg_sum = jax.tree.map(
-                    lambda a, qq: a + qq.astype(a.dtype), agg_sum, q_c)
-                return (agg_sum, loss_sum + loss), v_new
-
-            zeros = jax.tree.map(
-                lambda x: jnp.zeros(x.shape, x.dtype), state.s_hat)
-            (agg_sum, loss_sum), v_i_new = jax.lax.scan(
-                body, (zeros, jnp.zeros((), jnp.float32)),
-                (batch, state.v_i, quant_keys, active))
-            agg = jax.tree.map(lambda a: a / n, agg_sum)
-            losses = loss_sum / n
-
-        # --- server aggregation (line 13) ----------------------------------
-        if use_cv:
-            h = jax.tree.map(lambda vv, a: vv + a.astype(vv.dtype) / p,
-                             state.v, agg)
-            v_new = jax.tree.map(
-                lambda vv, a: vv + ((alpha / p) * a).astype(vv.dtype),
-                state.v, agg)
-        else:
-            h = jax.tree.map(lambda a: a / p, agg)
-            v_new = state.v
-
-        # --- SA server update (line 15); S = R^q so projection = identity --
-        s_new = jax.tree.map(lambda s, hh: s + gamma * hh.astype(s.dtype),
-                             state.s_hat, h)
-
-        # NB: elementwise square+sum, NOT jnp.vdot — vdot ravels the operand
-        # and a 1-D ravel of a sharded tensor forces full replication.
-        e_s = sum(jnp.sum(jnp.square(hh.astype(jnp.float32)))
-                  for hh in jax.tree.leaves(h))
-        # per-round communication accounting (shapes are static under jit:
-        # payload per client is a Python float, only n_active is traced).
-        # wire_bytes measures the ACTUAL encoded buffers via eval_shape for
-        # wire-format compressors, the analytic model otherwise.
-        comm = comp.round_metrics(state.s_hat, p=p)
-        metrics = {"loss": jnp.mean(losses), "e_s": e_s,
-                   "n_active": jnp.sum(active),
-                   "comm_bytes": comp.wire_bytes(state.s_hat)
-                   * jnp.sum(active),
-                   "omega_eff": jnp.asarray(comm["omega_eff"], jnp.float32)}
-        return FedLMState(s_hat=s_new, v=v_new, v_i=v_i_new,
-                          step=state.step + 1), metrics
+        dstate = api.DriverState(x=state.s_hat, v=state.v, v_i=state.v_i,
+                                 aux=(), opt=(), step=state.step)
+        new, m = api.step(problem, spec, dstate, batch, gamma, key,
+                          mesh=mesh, client_axis=client_axis,
+                          client_mode=driver_mode, drift_metric=False)
+        # legacy metric names: e_s is ||h||^2 (elementwise square+sum — the
+        # driver's h_norm_sq), loss the all-client mean off s_bar_metrics
+        metrics = {"loss": m["loss"], "e_s": m["h_norm_sq"],
+                   "n_active": m["n_active"], "comm_bytes": m["comm_bytes"],
+                   "omega_eff": m["omega_eff"]}
+        if "collective_payload_bytes" in m:
+            metrics["collective_payload_bytes"] = \
+                m["collective_payload_bytes"]
+        return FedLMState(
+            s_hat=new.x,
+            v=new.v if use_cv else state.v,
+            v_i=new.v_i if use_cv else state.v_i,
+            step=new.step), metrics
 
     return train_step
 

@@ -11,6 +11,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec
 
 from .quantize_block import (quantize_block_pallas,
                              quantize_encode_grouped_pallas,
@@ -71,6 +73,75 @@ def quantize_encode_kernel_dither(x2, seed, bits: int = 8, group: int = 256):
     ``quantize_dequantize_kernel_dither``)."""
     return quantize_encode_grouped_pallas(x2, bits=bits, group=group,
                                           seed=seed, interpret=INTERPRET)
+
+
+# ---------------------------------------------------------------------------
+# shard_map wrappers: the kernel on GSPMD-sharded leaves, one pallas_call
+# per shard (ROADMAP "a shard_map wrapper so multi-dim sharded leaves can
+# use the kernel"). shard_safe grouping keeps quantization groups along the
+# last axis with g dividing the per-shard width, so every group is
+# shard-LOCAL and the per-shard kernel is bit-identical to the unsharded
+# kernel/oracle given the same streamed dither draws (which the caller
+# computes from GLOBAL element indices and shards alongside x).
+# ---------------------------------------------------------------------------
+
+def _full_pspec(sharding: NamedSharding, ndim: int) -> PartitionSpec:
+    """The leaf's PartitionSpec padded to full rank (shard_map in_specs
+    want one entry per dimension)."""
+    spec = tuple(sharding.spec)
+    return PartitionSpec(*(spec + (None,) * (ndim - len(spec))))
+
+
+def rows_view(x, group: int):
+    """The (R, D) kernel view — the ONE definition of the row layout every
+    dispatch path shares (``core/compression.py`` delegates here):
+    multi-dim leaves collapse leading dims and keep the grouped LAST axis;
+    flat leaves tile into group-wide rows. Row-major order means the
+    global element index (the hash-dither stream) is unchanged, which is
+    what keeps kernel, per-shard kernel and jnp-oracle paths bit-identical
+    for the same draws."""
+    return x.reshape(-1, x.shape[-1]) if x.ndim > 1 \
+        else x.reshape(-1, group)
+
+
+def quantize_dequantize_sharded(x, u, bits: int, group: int,
+                                sharding: NamedSharding):
+    """Grouped quantize->dequantize of a sharded leaf: each shard collapses
+    its LOCAL leading dims to rows and runs the Pallas kernel on its own
+    block — no gather, no resharding. ``u`` is the globally-indexed dither
+    (same shape as x); it is committed to x's sharding so each shard reads
+    exactly the draws of its own elements."""
+    pspec = _full_pspec(sharding, x.ndim)
+    u = jax.device_put(u, NamedSharding(sharding.mesh, pspec))
+
+    def body(xb, ub):
+        x2 = rows_view(xb, group)
+        out = quantize_dequantize_grouped(x2, ub.reshape(x2.shape),
+                                          bits=bits, group=group)
+        return out.reshape(xb.shape)
+
+    return shard_map(body, mesh=sharding.mesh, in_specs=(pspec, pspec),
+                     out_specs=pspec, check_rep=False)(x, u)
+
+
+def quantize_encode_sharded(x, u, bits: int, group: int,
+                            sharding: NamedSharding):
+    """Wire-format encode of a sharded leaf, one kernel per shard. Returns
+    ``(codes int8 shaped like x, scales f32 shaped x.shape[:-1] +
+    (D // group,))``, both sharded like x (the scales' last axis divides by
+    the same factor since group | per-shard width)."""
+    pspec = _full_pspec(sharding, x.ndim)
+    u = jax.device_put(u, NamedSharding(sharding.mesh, pspec))
+
+    def body(xb, ub):
+        x2 = rows_view(xb, group)
+        codes, scales = quantize_encode_grouped(x2, ub.reshape(x2.shape),
+                                                bits=bits, group=group)
+        return (codes.reshape(xb.shape),
+                scales.reshape(xb.shape[:-1] + (-1,)))
+
+    return shard_map(body, mesh=sharding.mesh, in_specs=(pspec, pspec),
+                     out_specs=(pspec, pspec), check_rep=False)(x, u)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "block"))

@@ -145,6 +145,134 @@ def test_int8_kv_cache_decode_close_to_bf16():
     assert c2[0]["k"].dtype == jnp.int8
 
 
+# ---------------------------------------------------------------------------
+# golden pin: the api.step-collapsed trainer vs the FROZEN pre-collapse
+# hand-rolled client loop (PR 4). The frozen copy is the golden oracle —
+# do not "simplify" it to call the new API.
+# ---------------------------------------------------------------------------
+
+def _legacy_make_train_step(model, cfg):
+    """Verbatim semantics of the pre-PR-4 ``make_train_step`` (hand-rolled
+    physical vmap / logical scan client loops)."""
+    from repro import api
+
+    spec = cfg.federation_spec()
+    use_cv = spec.use_variates
+    comp = spec.compressor
+
+    def client_round(theta, s_hat, v_i_c, cb, qkey, active):
+        loss, g = jax.value_and_grad(model.loss_fn)(theta, cb)
+        if use_cv:
+            d = jax.tree.map(
+                lambda th, gg, s, vv: th - cfg.rho * gg.astype(th.dtype)
+                - s - vv,
+                theta, g, s_hat, v_i_c)
+        else:
+            d = jax.tree.map(
+                lambda th, gg, s: th - cfg.rho * gg.astype(th.dtype) - s,
+                theta, g, s_hat)
+        if comp.encode is not None:
+            q = comp.decode(comp.encode(qkey, d))
+        else:
+            q = comp.apply(qkey, d)
+        q = jax.tree.map(lambda x: x * active.astype(x.dtype), q)
+        if not use_cv:
+            return loss, q, {}
+        v_new = jax.tree.map(
+            lambda v, dq: v + (spec.alpha / spec.participation) * dq,
+            v_i_c, q)
+        return loss, q, v_new
+
+    def train_step(state, batch, key, gamma):
+        n, p, alpha = spec.n_clients, spec.participation, spec.alpha
+        theta = FT.T_map(state.s_hat, cfg)
+        active, quant_keys = api.participation_draw(key, spec)
+        active = active.astype(jnp.float32)
+
+        if cfg.client_mode == "physical":
+            losses, q, v_i_new = jax.vmap(
+                client_round, in_axes=(None, None, 0, 0, 0, 0))(
+                    theta, state.s_hat, state.v_i, batch, quant_keys, active)
+            agg = jax.tree.map(lambda x: jnp.mean(x, axis=0), q)
+        else:
+            def body(carry, xs):
+                agg_sum, loss_sum = carry
+                cb, v_c, qk, act = xs
+                loss, q_c, v_new = client_round(theta, state.s_hat, v_c,
+                                                cb, qk, act)
+                agg_sum = jax.tree.map(
+                    lambda a, qq: a + qq.astype(a.dtype), agg_sum, q_c)
+                return (agg_sum, loss_sum + loss), v_new
+
+            zeros = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, x.dtype), state.s_hat)
+            (agg_sum, loss_sum), v_i_new = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)),
+                (batch, state.v_i, quant_keys, active))
+            agg = jax.tree.map(lambda a: a / n, agg_sum)
+            losses = loss_sum / n
+
+        if use_cv:
+            h = jax.tree.map(lambda vv, a: vv + a.astype(vv.dtype) / p,
+                             state.v, agg)
+            v_new = jax.tree.map(
+                lambda vv, a: vv + ((alpha / p) * a).astype(vv.dtype),
+                state.v, agg)
+        else:
+            h = jax.tree.map(lambda a: a / p, agg)
+            v_new = state.v
+
+        s_new = jax.tree.map(lambda s, hh: s + gamma * hh.astype(s.dtype),
+                             state.s_hat, h)
+        e_s = sum(jnp.sum(jnp.square(hh.astype(jnp.float32)))
+                  for hh in jax.tree.leaves(h))
+        comm = comp.round_metrics(state.s_hat, p=p)
+        metrics = {"loss": jnp.mean(losses), "e_s": e_s,
+                   "n_active": jnp.sum(active),
+                   "comm_bytes": comp.wire_bytes(state.s_hat)
+                   * jnp.sum(active),
+                   "omega_eff": jnp.asarray(comm["omega_eff"], jnp.float32)}
+        return FT.FedLMState(s_hat=s_new, v=v_new, v_i=v_i_new,
+                             step=state.step + 1), metrics
+
+    return train_step
+
+
+@pytest.mark.parametrize("mode", ["physical", "logical"])
+def test_collapsed_trainer_matches_frozen_legacy(mode):
+    """The api.step round reproduces the hand-rolled loop's trajectory.
+    (The server aggregation arithmetic changed shape — mu_i-weighted
+    tensordot / scan accumulation instead of mean / sum-then-divide — so
+    the pin is tight-allclose, not bit-exact; every other op is
+    order-identical.)"""
+    cfg = C.get("phi3-medium-14b").reduced()
+    model = build_model(cfg)
+    fcfg = FT.FedLMConfig(n_clients=2, rho=0.05, p=0.5, alpha=0.2,
+                          quant_bits=8, client_mode=mode)
+    state_new = FT.init_state(model, KEY, fcfg)
+    state_old = FT.init_state(model, KEY, fcfg)
+    step_new = jax.jit(FT.make_train_step(model, fcfg))
+    step_old = jax.jit(_legacy_make_train_step(model, fcfg))
+    b = make_batch(KEY, cfg, batch_size=4, seq_len=16)
+    batch = {k: v.reshape((2, 2) + v.shape[1:]) for k, v in b.items()}
+    for t in range(4):
+        state_new, m_new = step_new(state_new, batch,
+                                    jax.random.PRNGKey(t), 0.5)
+        state_old, m_old = step_old(state_old, batch,
+                                    jax.random.PRNGKey(t), 0.5)
+        for k in ("loss", "e_s", "n_active", "comm_bytes", "omega_eff"):
+            np.testing.assert_allclose(
+                np.asarray(m_new[k]), np.asarray(m_old[k]),
+                rtol=1e-5, atol=1e-6, err_msg=f"{mode} round {t}: {k}")
+    for name, a, b_ in (("s_hat", state_new.s_hat, state_old.s_hat),
+                        ("v", state_new.v, state_old.v),
+                        ("v_i", state_new.v_i, state_old.v_i)):
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b_)):
+            np.testing.assert_allclose(
+                np.asarray(la, np.float32), np.asarray(lb, np.float32),
+                rtol=1e-5, atol=1e-6, err_msg=f"{mode}: {name}")
+
+
 def test_t_map_is_l2_prox():
     fcfg = FT.FedLMConfig(n_clients=1, rho=0.1, weight_decay=0.5)
     s = {"w": jnp.ones((3,))}

@@ -1,0 +1,376 @@
+"""The sharded execution layer (PR 4): shard_mapped driver + code-space
+uplink collective, the per-leaf kernel-dispatch sharding guard, and the
+shard_map wrapper that keeps sharded leaves on the Pallas kernel.
+
+Contracts pinned here:
+  * ``api.run(..., mesh=)`` — the client stage shard_mapped over a named
+    client axis with the uplink as a real quantize -> all_gather(packed
+    codes + scales) -> dequantize -> reduce collective — is BIT-IDENTICAL
+    to the single-device trajectory (same key chain, same arithmetic
+    order), and the bytes moved by the collective equal the compressor's
+    ``payload_bytes`` (asserted via the ``collective_payload_bytes``
+    metric, not just logged);
+  * ``compression._kernel_route`` inspects the LEAF's sharding, not the
+    process device count: unsharded / fully-replicated / single-shard
+    leaves on a multi-device host keep the kernel path (the PR-3 guard
+    silently dropped every multi-dim leaf to the jnp path whenever
+    ``jax.device_count() > 1``), and genuinely partitioned leaves run the
+    kernel PER SHARD via the ``kernels/ops.py`` shard_map wrappers,
+    bit-identical to the unsharded kernel/oracle;
+  * the driver's sequential-scan client mode matches the vmap mode to
+    rounding;
+  * a subprocess regression re-runs the golden equivalence under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the
+    single-device dev box still exercises a real 8-device mesh (CI
+    additionally runs the whole fast tier under 8 fake devices).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import api
+from repro.core import compression as C
+from repro.core.quadratic import quadratic_for_objective
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _bit_equal(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=msg)
+
+
+def _quad_problem(n_clients=8, dim=64):
+    ks = jax.random.split(KEY, n_clients)
+    Xs = jnp.stack([jax.random.normal(k, (32, dim)) for k in ks])
+    w_i = jnp.stack([jnp.linspace(-1, 1, dim) + 2.0 * i
+                     for i in range(n_clients)])
+    ys = jnp.einsum("nbp,np->nb", Xs, w_i)
+
+    def loss(batch, theta):
+        xb, yb = batch
+        return 0.5 * jnp.mean((xb @ theta - yb) ** 2)
+
+    return (Xs, ys), quadratic_for_objective(loss, rho=0.05)
+
+
+def _client_mesh():
+    return Mesh(np.asarray(jax.devices()), ("clients",))
+
+
+# ---------------------------------------------------------------------------
+# the shard_mapped driver: bit-identity + collective byte accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variates,alpha", [("zero", 0.1), ("off", 0.0)])
+def test_mesh_run_bit_identical_to_single_device(variates, alpha):
+    """Acceptance: shard_mapped api.run == single-device api.run, bit for
+    bit, on the wire-format path (packed codes + scales cross the mesh)."""
+    n = 8
+    (Xs, ys), sur = _quad_problem(n_clients=n)
+    problem = api.as_problem(sur)
+    comp = C.block_quant(8, 64)
+    spec = api.FederationSpec(n_clients=n, participation=0.5, alpha=alpha,
+                              variates=variates, compressor=comp)
+    mesh = _client_mesh()
+    kwargs = dict(spec=spec, key=KEY, n_rounds=8, track_mirror=True)
+    st0, h0 = api.run(problem, jnp.zeros(64), lambda t, k: (Xs, ys), 0.3,
+                      **kwargs)
+    st1, h1 = api.run(problem, jnp.zeros(64), lambda t, k: (Xs, ys), 0.3,
+                      mesh=mesh, **kwargs)
+    _bit_equal(st0.x, st1.x)
+    if variates == "zero":
+        _bit_equal(st0.v, st1.v)
+        _bit_equal(st0.v_i, st1.v_i)
+    for k in h0:   # every shared metric, bit for bit
+        _bit_equal(h0[k], h1[k], msg=k)
+    # acceptance: the gathered collective moved EXACTLY the compressor's
+    # payload_bytes per client — and it is low-bit, not f32
+    per_client = comp.payload_bytes(jnp.zeros(64))
+    np.testing.assert_allclose(np.asarray(h1["collective_payload_bytes"]),
+                               n * per_client)
+
+
+def test_mesh_collective_moves_packed_codes():
+    """What crosses the mesh boundary is the PackedLeaf buffers: the
+    gathered stack bytes equal n * encoded bytes (codes int8 + scales f32
+    = ~1/4 of the f32 stack at b=8), for every round of the scan."""
+    n = 8
+    dim = 512
+    (Xs, ys), sur = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 128)
+    spec = api.FederationSpec(n_clients=n, compressor=comp)
+    _, hist = api.run(api.as_problem(sur), jnp.zeros(dim),
+                      lambda t, k: (Xs, ys), 0.3, spec=spec, key=KEY,
+                      n_rounds=3, mesh=_client_mesh())
+    actual_one = comp.encoded_bytes(comp.encode(KEY, jnp.zeros(dim)))
+    assert np.asarray(hist["collective_payload_bytes"]).tolist() == \
+        [n * actual_one] * 3
+    # and that really is ~4x smaller than an f32 stack would have been
+    assert n * actual_one < 0.3 * (n * dim * 4)
+
+
+def test_mesh_run_without_wire_format_gathers_raw():
+    """Non-wire compressors (identity) still shard_map the client stage;
+    the gather moves the raw payload and stays bit-identical."""
+    n = 8
+    (Xs, ys), sur = _quad_problem(n_clients=n)
+    spec = api.FederationSpec(n_clients=n, participation=1.0, alpha=0.1)
+    kwargs = dict(spec=spec, key=KEY, n_rounds=5)
+    st0, h0 = api.run(api.as_problem(sur), jnp.zeros(64),
+                      lambda t, k: (Xs, ys), 0.3, **kwargs)
+    st1, h1 = api.run(api.as_problem(sur), jnp.zeros(64),
+                      lambda t, k: (Xs, ys), 0.3, mesh=_client_mesh(),
+                      **kwargs)
+    _bit_equal(st0.x, st1.x)
+    np.testing.assert_allclose(np.asarray(h1["collective_payload_bytes"]),
+                               n * 64 * 4)   # raw f32 payload
+
+
+def test_mesh_validation_errors():
+    (Xs, ys), sur = _quad_problem(n_clients=3)
+    problem = api.as_problem(sur)
+    spec = api.FederationSpec(n_clients=3)
+    state = api.init(problem, jnp.zeros(64), spec)
+    mesh = _client_mesh()
+    if mesh.shape["clients"] > 1:
+        with pytest.raises(ValueError, match="divide evenly"):
+            api.step(problem, spec, state, (Xs, ys), 0.3, KEY, mesh=mesh)
+    with pytest.raises(ValueError, match="client_axis"):
+        api.step(problem, spec, state, (Xs, ys), 0.3, KEY, mesh=mesh,
+                 client_axis="nope")
+    with pytest.raises(ValueError, match="scan"):
+        api.step(problem, spec, state, (Xs, ys), 0.3, KEY, mesh=mesh,
+                 client_mode="scan")
+    with pytest.raises(ValueError, match="client_mode"):
+        api.step(problem, spec, state, (Xs, ys), 0.3, KEY,
+                 client_mode="pmap")
+
+
+def test_scan_client_mode_matches_vmap_to_rounding():
+    """The sequential-scan client mode (the LM trainer's logical topology)
+    reproduces the batched mode up to reduction-order rounding."""
+    n = 4
+    (Xs, ys), sur = _quad_problem(n_clients=n)
+    comp = C.block_quant(8, 64)
+    spec = api.FederationSpec(n_clients=n, participation=0.5, alpha=0.1,
+                              compressor=comp)
+    kwargs = dict(spec=spec, key=KEY, n_rounds=8)
+    st_v, h_v = api.run(api.as_problem(sur), jnp.zeros(64),
+                        lambda t, k: (Xs, ys), 0.3, **kwargs)
+    st_s, h_s = api.run(api.as_problem(sur), jnp.zeros(64),
+                        lambda t, k: (Xs, ys), 0.3, client_mode="scan",
+                        **kwargs)
+    np.testing.assert_allclose(np.asarray(st_v.x), np.asarray(st_s.x),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(h_v["e_s"]),
+                               np.asarray(h_s["e_s"]), rtol=1e-3)
+    # wire accounting is identical on both paths
+    _bit_equal(h_v["comm_bytes"], h_s["comm_bytes"])
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch: per-leaf sharding guard (the PR-3 device_count bugfix)
+# ---------------------------------------------------------------------------
+
+def test_kernel_route_unsharded_multidim_keeps_kernel_path():
+    """Regression: a plain (uncommitted, single-device) multi-dim leaf must
+    dispatch to the kernel REGARDLESS of jax.device_count() — the old
+    guard turned the kernel off for the whole process."""
+    x = jax.random.normal(KEY, (4, 4096))
+    assert C._kernel_route(x, 128, 1) == "kernel"
+    # fully-replicated on every device: still the direct kernel path
+    mesh = _client_mesh()
+    xr = jax.device_put(x, NamedSharding(mesh, P()))
+    assert C._kernel_route(xr, 128, 1) == "kernel"
+    # too small / misaligned groups stay jnp
+    assert C._kernel_route(x, 64, 1) == "jnp"
+    assert C._kernel_route(jnp.zeros((4, 4096)), 128, 10 ** 9) == "jnp"
+
+
+def test_kernel_route_partitioned_leaf_uses_shard_map():
+    mesh = _client_mesh()
+    if mesh.shape["clients"] == 1:
+        pytest.skip("needs >1 device (run under "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    x = jax.random.normal(KEY, (8, 4096))
+    xs = jax.device_put(x, NamedSharding(mesh, P("clients")))
+    assert C._kernel_route(xs, 128, 1) == "shard_map"
+    # a sharding that would split groups falls back to jnp
+    xlast = jax.device_put(x, NamedSharding(mesh, P(None, "clients")))
+    per_shard = 4096 // mesh.shape["clients"]
+    bad_g = per_shard * 2
+    assert C._kernel_route(xlast, bad_g, 1) == "jnp"
+
+
+@pytest.mark.parametrize("pspec_fn,shape", [
+    (lambda ax: P(ax), (8, 4096)),          # leading dim sharded
+    (lambda ax: P(None, ax), (8, 4096)),    # grouped last dim sharded
+    (lambda ax: P(ax), (32768,)),           # flat 1-D leaf sharded
+])
+def test_sharded_kernel_dispatch_bit_identical(pspec_fn, shape):
+    """quantize/encode of a partitioned leaf (per-shard Pallas kernels via
+    shard_map) == the unsharded kernel == the jnp oracle, bit for bit, and
+    decode . encode == apply still holds."""
+    mesh = _client_mesh()
+    x = jax.random.normal(KEY, shape) * 2.0
+    xs = jax.device_put(x, NamedSharding(mesh, pspec_fn("clients")))
+    kw = dict(bits=8, block=128, shard_safe=True, dither="hash",
+              kernel_threshold=1)
+    a_ref = C.quantize_leaf(KEY, x, **kw)                       # kernel
+    a_jnp = C.quantize_leaf(KEY, x, **dict(kw, kernel_threshold=1 << 62))
+    a_sh = C.quantize_leaf(KEY, xs, **kw)                       # shard_map
+    _bit_equal(a_ref, a_jnp)
+    _bit_equal(a_sh, a_ref)
+    p_ref = C.encode_leaf(KEY, x, **kw)
+    p_sh = C.encode_leaf(KEY, xs, **kw)
+    _bit_equal(p_sh.codes, p_ref.codes)
+    _bit_equal(p_sh.scales, p_ref.scales)
+    _bit_equal(C.decode_leaf(p_sh), a_sh)
+
+
+def test_kernel_dither_on_sharded_leaf_degrades_to_streamed_hash():
+    """dither='kernel' seeds from grid position, which is not stable under
+    resharding — partitioned leaves stream the hash draws instead, so the
+    result still matches dither='hash' bit for bit."""
+    mesh = _client_mesh()
+    if mesh.shape["clients"] == 1:
+        pytest.skip("needs >1 device")
+    x = jax.random.normal(KEY, (8, 4096))
+    xs = jax.device_put(x, NamedSharding(mesh, P("clients")))
+    kw = dict(bits=8, block=128, shard_safe=True, kernel_threshold=1)
+    _bit_equal(C.quantize_leaf(KEY, xs, dither="kernel", **kw),
+               C.quantize_leaf(KEY, x, dither="hash", **kw))
+
+
+# ---------------------------------------------------------------------------
+# scan-fallback short-circuit + warning dedupe (satellite)
+# ---------------------------------------------------------------------------
+
+def test_scan_false_never_measures_or_stacks():
+    """run(scan=False) generates batches lazily: the batch callable is
+    invoked exactly once per round (no up-front stacking pass), and no
+    budget warning fires."""
+    import warnings as W
+    (Xs, ys), sur = _quad_problem(n_clients=4)
+    spec = api.FederationSpec(n_clients=4)
+    calls = []
+
+    def data(t, k):
+        calls.append(int(t))
+        return (Xs, ys)
+
+    with W.catch_warnings():
+        W.simplefilter("error")
+        api.run(api.as_problem(sur), jnp.zeros(64), data, 0.3, spec=spec,
+                key=KEY, n_rounds=5, scan=False)
+    assert calls == [0, 1, 2, 3, 4]
+
+
+def test_disabled_budget_skips_measurement_and_keeps_scan():
+    """scan_batch_bytes_max <= 0 disables the check: the scan stacks
+    without a measurement pass and no warning can fire."""
+    import warnings as W
+    (Xs, ys), sur = _quad_problem(n_clients=4)
+    spec = api.FederationSpec(n_clients=4)
+    kwargs = dict(spec=spec, key=KEY, n_rounds=4)
+    st_ref, _ = api.run(api.as_problem(sur), jnp.zeros(64),
+                        lambda t, k: (Xs, ys), 0.3, **kwargs)
+    with W.catch_warnings():
+        W.simplefilter("error")
+        st0, _ = api.run(api.as_problem(sur), jnp.zeros(64),
+                         lambda t, k: (Xs, ys), 0.3,
+                         scan_batch_bytes_max=0, **kwargs)
+    _bit_equal(st_ref.x, st0.x)
+
+
+def test_scan_fallback_warning_fires_once_per_situation():
+    """The fallback warning is deduped: identical (bytes, rounds, budget)
+    triples warn on the first run() only."""
+    import warnings as W
+    (Xs, ys), sur = _quad_problem(n_clients=4)
+    spec = api.FederationSpec(n_clients=4)
+    kwargs = dict(spec=spec, key=KEY, n_rounds=4, scan_batch_bytes_max=3)
+    with W.catch_warnings(record=True) as rec:
+        W.simplefilter("always")
+        api.run(api.as_problem(sur), jnp.zeros(64), lambda t, k: (Xs, ys),
+                0.3, **kwargs)
+        first = len(rec)
+        api.run(api.as_problem(sur), jnp.zeros(64), lambda t, k: (Xs, ys),
+                0.3, **kwargs)
+    assert first == 1
+    assert len(rec) == 1   # the second, identical run stayed silent
+
+
+# ---------------------------------------------------------------------------
+# the real thing: a forced 8-device process (works from a 1-device dev box)
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_GOLDEN = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro import api
+from repro.core import compression as C
+from repro.core.quadratic import quadratic_for_objective
+
+assert jax.device_count() == 8, jax.device_count()
+KEY = jax.random.PRNGKey(0)
+n, dim = 8, 64
+ks = jax.random.split(KEY, n)
+Xs = jnp.stack([jax.random.normal(k, (32, dim)) for k in ks])
+w_i = jnp.stack([jnp.linspace(-1, 1, dim) + 2.0 * i for i in range(n)])
+ys = jnp.einsum("nbp,np->nb", Xs, w_i)
+def loss(batch, theta):
+    xb, yb = batch
+    return 0.5 * jnp.mean((xb @ theta - yb) ** 2)
+problem = api.as_problem(quadratic_for_objective(loss, rho=0.05))
+comp = C.block_quant(8, 64)
+spec = api.FederationSpec(n_clients=n, participation=0.5, alpha=0.1,
+                          compressor=comp)
+mesh = Mesh(np.asarray(jax.devices()), ("clients",))
+kwargs = dict(spec=spec, key=KEY, n_rounds=6)
+st0, h0 = api.run(problem, jnp.zeros(dim), lambda t, k: (Xs, ys), 0.3,
+                  **kwargs)
+st1, h1 = api.run(problem, jnp.zeros(dim), lambda t, k: (Xs, ys), 0.3,
+                  mesh=mesh, **kwargs)
+np.testing.assert_array_equal(np.asarray(st0.x), np.asarray(st1.x))
+np.testing.assert_array_equal(np.asarray(st0.v_i), np.asarray(st1.v_i))
+for k in h0:
+    np.testing.assert_array_equal(np.asarray(h0[k]), np.asarray(h1[k]), k)
+assert float(h1["collective_payload_bytes"][0]) == \
+    n * comp.payload_bytes(jnp.zeros(dim))
+
+# guard regression: an UNSHARDED multi-dim leaf on this 8-device host
+# keeps the kernel path (the old guard forced jnp for the whole process)
+x4 = jax.random.normal(KEY, (4, 4096))
+assert C._kernel_route(x4, 128, 1) == "kernel", C._kernel_route(x4, 128, 1)
+x = jax.random.normal(KEY, (8, 4096))
+xs = jax.device_put(x, NamedSharding(mesh, P("clients", None)))
+assert C._kernel_route(xs, 128, 1) == "shard_map"
+kw = dict(bits=8, block=128, shard_safe=True, dither="hash",
+          kernel_threshold=1)
+np.testing.assert_array_equal(np.asarray(C.quantize_leaf(KEY, xs, **kw)),
+                              np.asarray(C.quantize_leaf(KEY, x, **kw)))
+print("OK-8DEV")
+"""
+
+
+def test_golden_bit_identity_under_forced_8_devices():
+    """Satellite regression: the shard_mapped trajectory + the kernel
+    guard, in a real 8-device (fake CPU) process."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS_GOLDEN],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK-8DEV" in out.stdout

@@ -246,9 +246,19 @@ def test_rand_k_payload_model():
     leaf16 = jax.ShapeDtypeStruct((21,), jnp.bfloat16)
     assert comp.payload_bytes(leaf16) == pytest.approx(
         21 * 0.125 * (2.0 + math.ceil(math.log2(21)) / 8.0))
-    # single-coordinate leaves need no index
+    # tiny-leaf regression (satellite, PR 4): an index field is never
+    # narrower than one bit — ceil(log2 1) == 0 used to bill single-
+    # coordinate leaves at value-only rates, and empty leaves hit
+    # log2(0). Clamp to >= 1 bit per kept coordinate; empty leaves bill 0.
     one = jax.ShapeDtypeStruct((1,), jnp.float32)
-    assert comp.payload_bytes(one) == pytest.approx(0.125 * 4.0)
+    assert comp.payload_bytes(one) == pytest.approx(0.125 * (4.0 + 1.0 / 8.0))
+    assert comp.payload_bytes(one) > 0.125 * 4.0
+    empty = jax.ShapeDtypeStruct((0, 7), jnp.float32)
+    assert comp.payload_bytes(empty) == 0.0
+    # scalar leaves (shape ()) behave like n == 1
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    assert comp.payload_bytes(scalar) == pytest.approx(
+        0.125 * (4.0 + 1.0 / 8.0))
 
 
 # ---------------------------------------------------------------------------
