@@ -23,13 +23,17 @@ row:
 
   PYTHONPATH=src python -m benchmarks.perf_iterations --wire
 
-``--collective`` times the PR-4 shard_mapped driver — the client stage
-shard_mapped over every local device with the uplink as a real
-quantize -> all_gather(packed codes + scales) -> dequantize -> reduce
-collective — against the single-device vmap path on the same workload,
-and records the MEASURED bytes the collective moved (the
-``collective_payload_bytes`` metric) as a ``pair="collective"`` row. Run
-it under fake devices to exercise a real mesh on a CPU box:
+``--collective`` A/Bs the shard_mapped driver's two uplinks against the
+single-device vmap path on the same workload: ``uplink="gather"`` (PR 4
+— quantize -> all_gather(packed codes + scales) -> dequantize -> reduce
+on the replicated stack, bit-identical) and ``uplink="reduce"`` (PR 5 —
+shard-local decode/mask/weighting, ONE model-shaped psum, allclose;
+per-device collective operand O(n/axis_size * payload + model) instead
+of O(n * payload)). Records rounds/sec plus the MEASURED bytes each
+collective moved (the ``collective_payload_bytes`` metric) as TWO
+``pair="collective"`` rows (variants ``uplink_gather`` /
+``uplink_reduce``). Run it under fake devices to exercise a real mesh on
+a CPU box:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m benchmarks.perf_iterations --collective
@@ -256,12 +260,15 @@ def bench_wire(log_path: str = "results/perf_log.json", n_clients: int = 32,
 def bench_collective(rounds: int = 100,
                      log_path: str = "results/perf_log.json",
                      seed: int = 0):
-    """The shard_mapped driver (mesh over every local device, code-space
-    all_gather uplink) vs the single-device vmap path on the fig-1
-    federated dictionary-learning workload. Both are trajectory-identical
-    bit for bit (tests/test_sharded_driver.py); what this records is the
-    dispatch cost of the real collective plus the MEASURED wire bytes.
-    Records a ``pair="collective"`` row; returns the entry."""
+    """The shard_mapped driver's two uplinks (code-space all_gather vs the
+    fused shard-local reduce) vs the single-device vmap path on the fig-1
+    federated dictionary-learning workload. "gather" is trajectory-
+    identical bit for bit; "reduce" is allclose (psum reduction order) —
+    both pinned in tests/test_sharded_driver.py. What this records is the
+    dispatch cost of each collective plus the MEASURED bytes it moved
+    (``collective_payload_bytes``: the gathered stack for "gather", the
+    actual per-device psum operand for "reduce"). Records two
+    ``pair="collective"`` rows; returns them."""
     import time
 
     import jax
@@ -298,37 +305,75 @@ def bench_collective(rounds: int = 100,
         jax.block_until_ready(state.x)
         return rounds / (time.time() - t0), state, hist
 
+    def same(a, b, exact):
+        leaves = zip(jax.tree.leaves(a.x), jax.tree.leaves(b.x))
+        if exact:
+            return all(bool(jax.numpy.array_equal(x, y)) for x, y in leaves)
+        return all(bool(jax.numpy.allclose(x, y, rtol=1e-5, atol=1e-6))
+                   for x, y in leaves)
+
     rps_single, st_s, _ = timed()
-    rps_mesh, st_m, hist = timed(mesh=mesh)
-    identical = all(
-        bool(jax.numpy.array_equal(a, b)) for a, b in
-        zip(jax.tree.leaves(st_s.x), jax.tree.leaves(st_m.x)))
-    wire_bytes = float(np.asarray(hist["collective_payload_bytes"])[0])
+    rps_gather, st_g, hist_g = timed(mesh=mesh)
+    rps_reduce, st_r, hist_r = timed(mesh=mesh, uplink="reduce")
+    gather_identical = same(st_s, st_g, exact=True)
+    reduce_close = same(st_s, st_r, exact=False)
+    bytes_gather = float(np.asarray(hist_g["collective_payload_bytes"])[0])
+    bytes_reduce = float(np.asarray(hist_r["collective_payload_bytes"])[0])
+    model_bytes = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                      for l in jax.tree.leaves(s0))
     f32_stack = n_clients * sum(
         int(np.prod(l.shape)) * 4 for l in jax.tree.leaves(s0))
-    entry = {"pair": "collective", "variant": "shard_mapped_driver",
-             "hypothesis": "the uplink as a real code-space all_gather "
-             "over the client mesh axis: wire bytes = packed codes + "
-             "scales (~1/4 of f32 at b8), trajectory bit-identical; "
-             "rounds/sec pays the per-round collective dispatch",
-             "multi_pod": False,
-             "result": {"status": "ok", "rounds": rounds,
-                        "n_devices": n_devices, "n_clients": n_clients,
-                        "rounds_per_sec_single_device": rps_single,
-                        "rounds_per_sec_shard_mapped": rps_mesh,
-                        "trajectory_bit_identical": identical,
-                        "collective_wire_bytes_per_round": wire_bytes,
-                        "f32_stack_bytes_per_round": f32_stack,
-                        "wire_vs_f32_ratio": f32_stack / wire_bytes}}
+    payload_c = comp.payload_bytes(s0)
+    axis = mesh.shape["clients"]
+    common_r = {"status": "ok", "rounds": rounds, "n_devices": n_devices,
+                "n_clients": n_clients,
+                "rounds_per_sec_single_device": rps_single}
+    entry_g = {
+        "pair": "collective", "variant": "uplink_gather",
+        "hypothesis": "the uplink as a real code-space all_gather over "
+        "the client mesh axis: wire bytes = packed codes + scales (~1/4 "
+        "of f32 at b8), trajectory bit-identical; every device holds the "
+        "full n-client packed stack and pays the per-round collective "
+        "dispatch",
+        "multi_pod": False,
+        "result": dict(common_r,
+                       rounds_per_sec_shard_mapped=rps_gather,
+                       trajectory_bit_identical=gather_identical,
+                       collective_wire_bytes_per_round=bytes_gather,
+                       per_device_stack_bytes=bytes_gather,
+                       f32_stack_bytes_per_round=f32_stack,
+                       wire_vs_f32_ratio=f32_stack / bytes_gather)}
+    entry_r = {
+        "pair": "collective", "variant": "uplink_reduce",
+        "hypothesis": "decode + mask + mu-weighted partial-reduce run "
+        "shard-local and ONE model-shaped psum crosses the mesh: the "
+        "per-device collective operand drops from n*payload to the "
+        "model bytes (n/axis_size*payload + model peak), trajectory "
+        "allclose to gather (psum reduction order)",
+        "multi_pod": False,
+        "result": dict(common_r,
+                       rounds_per_sec_shard_mapped=rps_reduce,
+                       trajectory_allclose_vs_single=reduce_close,
+                       psum_operand_bytes_per_device=bytes_reduce,
+                       per_device_memory_bound_bytes=(
+                           n_clients / axis * payload_c + model_bytes),
+                       gathered_stack_bytes_gone=bytes_reduce < bytes_gather,
+                       gather_stack_vs_psum_ratio=bytes_gather
+                       / bytes_reduce)}
     print(f"[collective] devices={n_devices} clients={n_clients}: "
-          f"rounds/sec single={rps_single:.1f} shard_mapped={rps_mesh:.1f}"
-          f"  wire={wire_bytes:.0f}B/round vs f32 {f32_stack}B "
-          f"({f32_stack / wire_bytes:.2f}x)  bit-identical={identical}")
+          f"rounds/sec single={rps_single:.1f} gather={rps_gather:.1f} "
+          f"reduce={rps_reduce:.1f}")
+    print(f"[collective] per-device collective operand: gather stack "
+          f"{bytes_gather:.0f}B vs reduce psum {bytes_reduce:.0f}B "
+          f"({bytes_gather / bytes_reduce:.2f}x smaller)  "
+          f"bit-identical(gather)={gather_identical} "
+          f"allclose(reduce)={reduce_close}")
     log = json.load(open(log_path)) if os.path.exists(log_path) else []
-    log = [e for e in log if e.get("pair") != "collective"] + [entry]
+    log = [e for e in log if e.get("pair") != "collective"]
+    log += [entry_g, entry_r]
     os.makedirs(os.path.dirname(log_path) or ".", exist_ok=True)
     json.dump(log, open(log_path, "w"), indent=1)
-    return entry
+    return [entry_g, entry_r]
 
 
 def main():
@@ -342,9 +387,10 @@ def main():
                     "footprint + round time vs the dequant-materialized "
                     "path")
     ap.add_argument("--collective", action="store_true",
-                    help="time the shard_mapped driver (code-space "
-                    "all_gather uplink over every local device) vs the "
-                    "single-device path + record measured wire bytes")
+                    help="A/B the shard_mapped driver's gather vs reduce "
+                    "uplinks against the single-device path + record the "
+                    "measured collective bytes of each (two "
+                    "pair='collective' rows)")
     ap.add_argument("--rounds", type=int, default=200,
                     help="--driver/--collective: trajectory length to time")
     ap.add_argument("--variant", default=None,

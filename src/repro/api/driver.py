@@ -40,10 +40,16 @@ SCAN_BATCH_BYTES_MAX = 1 << 30
 
 CLIENT_MODES = ("vmap", "scan")
 
+UPLINKS = ("gather", "reduce")
+
 # (round_bytes, n_rounds, budget) triples already warned about — the scan
 # fallback fires the warning ONCE per distinct situation, not on every
-# ``run()`` call of a long sweep
-_SCAN_FALLBACK_WARNED: set = set()
+# ``run()`` call of a long sweep. An insertion-ordered dict with an LRU
+# cap, NOT a bare set: a sweep over many distinct (bytes, rounds, budget)
+# situations (e.g. a growing-batch schedule) would otherwise grow the
+# dedupe set without bound for the life of the process.
+_SCAN_FALLBACK_WARNED: "dict" = {}
+_SCAN_FALLBACK_WARNED_MAX = 128
 
 
 class DriverState(NamedTuple):
@@ -113,6 +119,20 @@ def centralized_init(problem, s0) -> DriverState:
 # step
 # ---------------------------------------------------------------------------
 
+def _variate_update(v, q, coef):
+    """Lines 8/11/17: V <- V + coef * q, leaf-wise (coef = alpha/p). The
+    ONE definition every client-stage branch shares — scan body, reduce
+    stage and gather tail must apply the identical update rule."""
+    return jax.tree.map(lambda vv, dq: vv + coef * dq, v, q)
+
+
+def _weighted_reduce(w, q):
+    """The mu-weighted client reduction (line 13), dtype-preserving: a
+    tensordot against f32 weights would silently upcast bf16 leaves."""
+    return jax.tree.map(
+        lambda x: jnp.tensordot(w, x, axes=1).astype(x.dtype), q)
+
+
 def centralized_step(problem: MMProblem, state: DriverState, batch, gamma):
     """Algorithm 1 (SA-SSMM): oracle, SA blend, projection."""
     theta = problem.T(state.x)
@@ -127,7 +147,8 @@ def centralized_step(problem: MMProblem, state: DriverState, batch, gamma):
 def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
          client_batches, gamma, key, active=None, *,
          mesh=None, client_axis: str = "clients",
-         client_mode: str = "vmap", drift_metric: bool = True):
+         client_mode: str = "vmap", uplink: str = "gather",
+         drift_metric: bool = True):
     """One federated MM round (Algorithm 2, every axis of the spec applied).
     ``client_batches`` is a pytree with a leading client axis of size n.
     ``active`` optionally overrides the A5 draw with a precomputed (n,)
@@ -158,17 +179,39 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
     mesh / client_axis — the SHARDED driver path: with a ``jax.sharding
     .Mesh`` whose ``client_axis`` dimension divides n, the client stage
     runs under ``shard_map`` — each device slice owns ``n / axis_size``
-    clients, computes their oracles and quantizes, and the uplink is a
-    REAL ``all_gather`` over the mesh axis **in code space**: the bytes
-    that cross the device boundary are the ``PackedLeaf`` codes+scales
-    buffers (raw payloads for non-wire compressors), never the
-    dequantized f32 stack. Per-client keys are split OUTSIDE the
-    shard_map from the same chain, the gather is tiled in client order,
-    and decode/mask/aggregation run on the replicated gathered stack —
-    the trajectory is BIT-IDENTICAL to the single-device path
-    (tests/test_sharded_driver.py pins this on 8 fake CPU devices). The
-    static ``collective_payload_bytes`` metric reports the gathered
-    buffer bytes (== n * ``Compressor.payload_bytes``)."""
+    clients and computes their oracles and quantizes locally. How the
+    round crosses the mesh is the ``uplink`` knob:
+
+      * ``uplink="gather"`` (default, the bit-identical golden path) —
+        the uplink is an ``all_gather`` over the mesh axis **in code
+        space**: the bytes that cross the device boundary are the
+        ``PackedLeaf`` codes+scales buffers (raw payloads for non-wire
+        compressors), never the dequantized f32 stack. Per-client keys
+        are split OUTSIDE the shard_map from the same chain, the gather
+        is tiled in client order, and decode/mask/aggregation run on the
+        replicated gathered stack — the trajectory is BIT-IDENTICAL to
+        the single-device path (tests/test_sharded_driver.py pins this
+        on 8 fake CPU devices). Every device holds the full n-client
+        payload stack: O(n * payload) memory per device. The static
+        ``collective_payload_bytes`` metric reports the gathered buffer
+        bytes (== n * ``Compressor.payload_bytes``).
+      * ``uplink="reduce"`` (the fused collective) — each device
+        decodes, masks and mu-weight-reduces ONLY its own clients'
+        payloads inside the shard_map (fusing dequantize into the
+        accumulation via the compressor's ``decode_reduce`` hook when
+        the control variates don't need the decoded stack), updates its
+        slice of ``v_i`` shard-locally, and the mesh is crossed by ONE
+        ``psum`` of the model-shaped partial aggregate — per-device
+        memory drops from O(n * payload) to O(n/axis_size * payload +
+        model). Partials cross the mesh in the ACCUMULATION dtype (f32)
+        and downcast to the iterate dtype once, after the collective —
+        matching the gather path's single cast, so bf16 models don't
+        round per device slice. The psum's f32 reduction order differs
+        from the gather path's tensordot over n clients, so ``"reduce"``
+        trajectories match ``"gather"`` to allclose, not bit-for-bit
+        (pinned in tests/test_sharded_driver.py).
+        ``collective_payload_bytes`` reports the ACTUAL per-device psum
+        operand bytes (the f32 partial aggregate)."""
     n, p, alpha = spec.n_clients, spec.participation, spec.alpha
     mu = spec.client_weights()
     param_space = spec.aggregation == "parameter"
@@ -177,6 +220,12 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
     use_wire = comp.encode is not None
     if client_mode not in CLIENT_MODES:
         raise ValueError(f"client_mode={client_mode!r} (want {CLIENT_MODES})")
+    if uplink not in UPLINKS:
+        raise ValueError(f"uplink={uplink!r} (want {UPLINKS})")
+    if uplink == "reduce" and mesh is None:
+        raise ValueError("uplink='reduce' is the cross-mesh partial-reduce "
+                         "collective; it needs mesh= (without a mesh the "
+                         "vmap path has no collective to fuse)")
     if mesh is not None:
         if client_mode != "vmap":
             raise ValueError("the sharded driver path shard_maps the "
@@ -238,8 +287,8 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
             payload_c, cm = upd(cb, v_c, qk)
             q_c = comp.decode(payload_c) if use_wire else payload_c
             q_c = jax.tree.map(lambda x: _mask_q(x, m_c), q_c)
-            v_c_new = (jax.tree.map(lambda v, dq: v + (alpha / p) * dq,
-                                    v_c, q_c) if use_v else ())
+            v_c_new = (_variate_update(v_c, q_c, alpha / p)
+                       if use_v else ())
             agg_sum = jax.tree.map(
                 lambda a, x: a + (mu_c * x).astype(a.dtype), agg_sum, q_c)
             return agg_sum, (v_c_new, cm)
@@ -248,6 +297,74 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
             body, zeros, (client_batches, state.v_i, quant_keys, mu, mask))
         # static per-client wire bytes via eval_shape (no stacked payload
         # exists on this path)
+        wire_bytes_client = comp.wire_bytes(state.x) if use_wire else None
+        q = None
+    elif mesh is not None and uplink == "reduce":
+        # the FUSED uplink: each device touches only its own clients —
+        # decode + mask + mu-weighted partial-reduce run shard-locally,
+        # v_i updates on the local slice, and a single psum of the
+        # model-shaped partial aggregate crosses the mesh. The gathered
+        # n-client payload stack of the "gather" path never exists.
+        cspec = PartitionSpec(client_axis)
+        measured = {}
+
+        def client_stage(cb, vi, qk, mu_l, m_l):
+            payload_l, cm = jax.vmap(upd, in_axes=(0, 0, 0))(cb, vi, qk)
+            n_l = m_l.shape[0]
+
+            def msk(x):
+                return _mask_q(x, m_l.reshape((n_l,) + (1,) * (x.ndim - 1)))
+
+            # partials stay in the ACCUMULATION dtype (f32 under f32
+            # weights) until after the psum: rounding each device's
+            # partial to a bf16 leaf dtype before summing axis_size of
+            # them would lose bf16-epsilon per round — the gather path
+            # does one f32 tensordot over all n clients and casts once,
+            # and the reduce path must match that discipline
+            if use_v:
+                # the variates need the decoded local stack anyway
+                # (O(n/axis_size * model) — still never the full n)
+                q_l = comp.decode(payload_l) if use_wire else payload_l
+                q_l = jax.tree.map(msk, q_l)
+                vi_new = _variate_update(vi, q_l, alpha / p)
+                part = jax.tree.map(
+                    lambda x: jnp.tensordot(mu_l, x, axes=1), q_l)
+            else:
+                vi_new = ()
+                if use_wire and comp.decode_reduce is not None:
+                    # fold the mask into the weights (exact: the mask is
+                    # 0.0/1.0) and fuse dequantize into the accumulation
+                    # via the COMPRESSOR's own reduce (which carries its
+                    # kernel dispatch policy) — the decoded local f32
+                    # stack never materializes. fused=True: this IS a
+                    # per-device shard_map body.
+                    part = comp.decode_reduce(payload_l, mu_l * m_l,
+                                              fused=True)
+                else:
+                    # wire compressors without a fused reduce decode
+                    # first; raw payloads reduce directly
+                    q_l = (jax.tree.map(msk, comp.decode(payload_l))
+                           if use_wire else jax.tree.map(msk, payload_l))
+                    part = jax.tree.map(
+                        lambda x: jnp.tensordot(mu_l, x, axes=1), q_l)
+            # the ACTUAL per-device psum operand (static under jit): the
+            # model-shaped partial aggregate — what really crosses the
+            # mesh, measured here rather than modeled
+            measured["psum_operand_bytes"] = _tree_bytes(part)
+            agg_l = jax.tree.map(
+                lambda x: jax.lax.psum(x, client_axis), part)
+            return agg_l, vi_new, cm
+
+        agg, v_i_new, cmetrics = shard_map(
+            client_stage, mesh=mesh,
+            in_specs=(cspec, cspec, cspec, cspec, cspec),
+            out_specs=(PartitionSpec(), cspec, cspec),
+            check_rep=False)(client_batches, state.v_i, quant_keys, mu, mask)
+        # the ONE downcast back to the iterate dtype, AFTER the collective
+        agg = jax.tree.map(lambda a, x: a.astype(x.dtype), agg, state.x)
+        collective_bytes = float(measured["psum_operand_bytes"])
+        # static per-client wire bytes via eval_shape (no stacked payload
+        # survives the shard_map on this path)
         wire_bytes_client = comp.wire_bytes(state.x) if use_wire else None
         q = None
     else:
@@ -289,14 +406,9 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
             lambda x: _mask_q(x, mask.reshape((n,) + (1,) * (x.ndim - 1))),
             q)
 
-        # client control variates (lines 8/11)
-        v_i_new = (jax.tree.map(lambda v, dq: v + (alpha / p) * dq,
-                                state.v_i, q) if use_v else ())
-
-        # server aggregation (line 13); the weighted reduction keeps each
-        # leaf's dtype (tensordot against f32 weights would upcast bf16)
-        agg = jax.tree.map(
-            lambda x: jnp.tensordot(mu, x, axes=1).astype(x.dtype), q)
+        # client control variates (lines 8/11) + server aggregation (13)
+        v_i_new = _variate_update(state.v_i, q, alpha / p) if use_v else ()
+        agg = _weighted_reduce(mu, q)
     if spec.normalization == "realized":
         scale = n / jnp.maximum(jnp.sum(mask), 1.0)
         h = jax.tree.map(lambda a: (scale * a).astype(a.dtype), agg)
@@ -380,7 +492,7 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
         state0: Optional[DriverState] = None,
         scan_batch_bytes_max: Optional[int] = None,
         mesh=None, client_axis: str = "clients",
-        client_mode: str = "vmap"):
+        client_mode: str = "vmap", uplink: str = "gather"):
     """Drive ``n_rounds`` of the MM recursion; returns
     ``(final DriverState, metrics)`` where metrics is a stacked-pytree dict
     (each key an array with leading round axis). Use ``history_list`` for
@@ -415,11 +527,14 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
     it on big-memory hosts to keep the scan; any value <= 0 DISABLES the
     check entirely (no measurement, the scan always stacks); lower
     positive values force the constant-memory path.
-    mesh / client_axis / client_mode: the sharded-driver knobs, passed
-    through to every ``step`` — see ``step``'s docstring. With a mesh the
-    per-client stage is shard_mapped over the ``client_axis`` devices and
-    the uplink is a code-space ``all_gather``; the trajectory stays
-    bit-identical to the single-device run.
+    mesh / client_axis / client_mode / uplink: the sharded-driver knobs,
+    passed through to every ``step`` — see ``step``'s docstring. With a
+    mesh the per-client stage is shard_mapped over the ``client_axis``
+    devices; ``uplink="gather"`` (default) crosses the mesh with a
+    code-space ``all_gather`` and stays bit-identical to the
+    single-device run, ``uplink="reduce"`` fuses decode/mask/weighting
+    shard-locally and psums the partial aggregate (allclose to gather;
+    O(n/axis_size) instead of O(n) payload memory per device).
     """
     problem = as_problem(problem)
 
@@ -469,8 +584,14 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
             # do NOT materialize the trajectory: generate each round's
             # batch inside the loop, constant-memory like the legacy loops
             sig = (round_bytes, n_rounds, budget)
-            if sig not in _SCAN_FALLBACK_WARNED:
-                _SCAN_FALLBACK_WARNED.add(sig)
+            if sig in _SCAN_FALLBACK_WARNED:
+                # LRU refresh: re-insert so hot situations outlive cold ones
+                _SCAN_FALLBACK_WARNED[sig] = _SCAN_FALLBACK_WARNED.pop(sig)
+            else:
+                _SCAN_FALLBACK_WARNED[sig] = True
+                while len(_SCAN_FALLBACK_WARNED) > _SCAN_FALLBACK_WARNED_MAX:
+                    oldest = next(iter(_SCAN_FALLBACK_WARNED))
+                    del _SCAN_FALLBACK_WARNED[oldest]
                 warnings.warn(
                     f"stacked batches would exceed the scan budget "
                     f"({round_bytes:,} bytes/round x {n_rounds} rounds = "
@@ -510,6 +631,11 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
                     "already reports a per-client 'loss' and the eval hook "
                     "would overwrite it — drop eval_batch or rename the "
                     "client metric")
+            # ONE f32 code path for both cadences: the eval_every == 1
+            # branch used to record problem.loss in native dtype (and
+            # compute theta_eval a second time) while the lax.cond branch
+            # cast to f32 — the stacked metric would silently change dtype
+            # with the cadence
             def eval_loss(_):
                 theta_eval = state.x if param_space else problem.T(state.x)
                 return jnp.asarray(problem.loss(eval_batch, theta_eval),
@@ -520,8 +646,7 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
                 m["loss"] = jax.lax.cond(
                     do, eval_loss, lambda _: jnp.float32(jnp.nan), None)
             else:
-                theta_eval = state.x if param_space else problem.T(state.x)
-                m["loss"] = problem.loss(eval_batch, theta_eval)
+                m["loss"] = eval_loss(None)
         return m, theta_new, diag_new
 
     theta_prev0 = problem.T(state0.x) if track_mirror else ()
@@ -537,7 +662,7 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
                 gamma, k, t_idx, batch = xs
             state, m = step(problem, spec, state, batch, gamma, k,
                             mesh=mesh, client_axis=client_axis,
-                            client_mode=client_mode)
+                            client_mode=client_mode, uplink=uplink)
             m, theta_new, diag_new = round_metrics(state, m, gamma,
                                                    theta_prev, diag_prev,
                                                    t_idx)
@@ -556,7 +681,7 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
     # python fallback: identical math, one jitted step per round
     step_j = jax.jit(lambda st, b, g, k: step(
         problem, spec, st, b, g, k, mesh=mesh, client_axis=client_axis,
-        client_mode=client_mode))
+        client_mode=client_mode, uplink=uplink))
     state, theta_prev, diag_prev = state0, theta_prev0, diag_prev0
     hist = []
     for t in range(n_rounds):

@@ -58,6 +58,7 @@ class FederationSpec:
     variates: str = "zero"                      # zero | at-init | off
     compressor: Compressor = dataclasses.field(default_factory=identity)
     mu: Optional[jnp.ndarray] = None            # client weights; uniform default
+    normalize_mu: bool = False                  # rescale mu to sum 1
     aggregation: str = "surrogate"              # surrogate | parameter
     normalization: str = "expected"             # expected | realized
     delta: str = "drift"                        # drift | oracle
@@ -66,6 +67,32 @@ class FederationSpec:
         if not (0.0 < self.participation <= 1.0):
             raise ValueError(f"participation must be in (0, 1], got "
                              f"{self.participation}")
+        if self.mu is not None:
+            # a wrong-length or non-normalized mu used to flow silently
+            # into the driver's tensordot (broadcasting or biasing h);
+            # validate eagerly where the spec is built, not rounds later
+            mu = jnp.asarray(self.mu)
+            if mu.shape != (self.n_clients,):
+                raise ValueError(
+                    f"client weights mu must have shape "
+                    f"({self.n_clients},) — one weight per client — got "
+                    f"{tuple(mu.shape)}")
+            if not isinstance(mu, jax.core.Tracer):
+                total = float(jnp.sum(mu))
+                if self.normalize_mu:
+                    if total <= 0.0:
+                        raise ValueError(
+                            f"normalize_mu=True needs mu with a positive "
+                            f"sum to rescale by, got sum {total:.6g} — "
+                            f"the rescaled weights would be NaN or "
+                            f"sign-flipped")
+                elif abs(total - 1.0) > 1e-4:
+                    raise ValueError(
+                        f"client weights mu sum to {total:.6g}, not 1 — "
+                        f"the aggregate h = sum_i mu_i q_i would be "
+                        f"silently scaled by {total:.6g}; pass "
+                        f"normalize_mu=True to rescale, or normalize mu "
+                        f"yourself")
         for field, allowed in (("variates", VARIATES),
                                ("aggregation", AGGREGATIONS),
                                ("normalization", NORMALIZATIONS),
@@ -79,9 +106,14 @@ class FederationSpec:
 
     # -- derived ------------------------------------------------------------
     def client_weights(self) -> jnp.ndarray:
-        """mu_i; uniform 1/n unless given explicitly."""
+        """mu_i; uniform 1/n unless given explicitly. With
+        ``normalize_mu=True`` an explicit mu is rescaled to sum to 1
+        (the escape hatch for raw per-client sample counts)."""
         if self.mu is not None:
-            return jnp.asarray(self.mu)
+            mu = jnp.asarray(self.mu)
+            if self.normalize_mu:
+                return mu / jnp.sum(mu)
+            return mu
         return jnp.full((self.n_clients,), 1.0 / self.n_clients)
 
     @property

@@ -86,6 +86,13 @@ trajectories are unchanged when drivers aggregate in code space.
 ``payload_bytes`` counts EXACTLY the bytes of those buffers (codes +
 scales, including flat-mode pad), and ``encoded_bytes``/``wire_bytes``
 measure the same number off an actual payload / eval_shape.
+
+``decode_reduce_tree`` is the server side of the driver's fused
+``uplink="reduce"`` collective: the mu-weighted sum over a stacked
+C-client payload with dequantize fused into the accumulation (the Pallas
+``decode_reduce_grouped_pallas`` kernel for large aligned leaves — the
+decoded f32 client stack never materializes; jnp decode + tensordot,
+bit-identical to decode-then-reduce, everywhere else).
 """
 from __future__ import annotations
 
@@ -193,6 +200,11 @@ class Compressor:
     payload_fn: Optional[Callable] = None
     encode: Optional[Callable] = None  # (key, pytree) -> payload pytree
     decode: Optional[Callable] = None  # payload pytree -> pytree
+    # (payload, w, fused=None) -> weighted partial aggregate in the
+    # accumulation dtype: the server side of the driver's fused
+    # ``uplink="reduce"`` stage, carrying this compressor's OWN kernel
+    # dispatch policy (threshold, alignment) — see ``decode_reduce_tree``
+    decode_reduce: Optional[Callable] = None
 
     def __call__(self, key, s):
         return self.apply(key, s)
@@ -631,6 +643,97 @@ def decode_tree(payload):
     return jax.tree.map(decode_leaf, payload, is_leaf=_is_payload_leaf)
 
 
+def decode_reduce_leaf(p, w, kernel_threshold: int = KERNEL_DISPATCH_MIN,
+                       fused: Optional[bool] = None):
+    """Weighted reduction over the leading client axis of ONE stacked
+    payload leaf: ``sum_c w[c] * decode(p[c])``, decoding in the same
+    pass. Returns the ACCUMULATION dtype (f32 under f32 weights), not the
+    leaf dtype — low-precision (bf16) payloads must not round per partial
+    when partials are later summed across devices; the caller downcasts
+    ONCE after its final reduction (the driver: after the psum).
+
+    ``PackedLeaf`` leaves whose per-client buffer is large enough (>=
+    ``kernel_threshold`` elements with a 128-aligned group) dispatch to the
+    fused Pallas dequantize+accumulate kernel (``kernels/ops.py:
+    dequantize_reduce_grouped``) — the decoded f32 C-client stack never
+    materializes; nibble-packed codes unpack to int8 first (1 byte/coord,
+    still never the 4-byte f32 stack). Everything else — small/misaligned
+    leaves and raw passthrough leaves — decodes via the jnp oracle and
+    reduces with a plain tensordot (bit-identical to decode-then-reduce).
+    The kernel accumulates sequentially in c, so against the tensordot
+    order it agrees to f32 rounding, not bit-for-bit.
+
+    ``fused`` routes the kernel dispatch the same way ``_kernel_route``
+    does for apply/encode (the PR-4 lesson: guard per leaf, not by
+    convention): ``None`` (default) inspects the codes buffer — eager
+    single-device / fully-replicated buffers take the kernel, traced
+    leaves on multi-device processes and genuinely partitioned buffers
+    keep the conservative jnp path (a pallas_call under GSPMD would force
+    a gather of the whole stacked payload). ``True`` asserts the caller
+    is already in a per-device (manual / shard_map) context — the
+    driver's reduce uplink; ``False`` forces the jnp path."""
+    if not isinstance(p, PackedLeaf):
+        return jnp.tensordot(w, p, axes=1)
+    shape, g, bits = p.shape, p.group, p.bits
+    n = int(math.prod(shape))
+    C = w.shape[0]
+    one_batch_axis = (p.codes.ndim - (len(shape) if p.mode == "shard"
+                                      else 1)) == 1
+    # the kernel route is f32-ONLY: for low-precision leaves, ``decode``
+    # rounds every dequantized element to the leaf dtype before any
+    # reduction — the gather path's per-element semantics. Accumulating
+    # the raw f32 dequant instead would differ by up to a leaf-dtype ulp
+    # per element (far beyond the documented f32 reduction-order
+    # tolerance), so bf16 payloads keep the decode-then-tensordot path.
+    route_ok = (fused is not False and n >= kernel_threshold
+                and g % 128 == 0 and g >= 2 and one_batch_axis
+                and jnp.dtype(p.dtype) == jnp.float32
+                and p.scales.dtype == jnp.float32)
+    if route_ok and fused is None:
+        if isinstance(p.codes, jax.core.Tracer):
+            # sharding unknowable at trace time: only safe on a
+            # single-device process (mirrors _kernel_route)
+            route_ok = jax.device_count() == 1
+        else:
+            sh = getattr(p.codes, "sharding", None)
+            route_ok = (sh is None or sh.is_fully_replicated
+                        or len(sh.device_set) == 1)
+    if route_ok:
+        codes = p.codes
+        if codes.dtype == jnp.uint8:
+            codes = unpack_nibbles(codes)
+        if p.mode == "shard":
+            D = shape[-1]
+            c3 = codes.reshape(C, -1, D)
+            s3 = p.scales.reshape(C, -1, D // g)
+        else:
+            # flat stream: group-wide rows, one scale per row (D == g)
+            c3 = codes.reshape(C, -1, g)
+            s3 = p.scales.reshape(C, -1, 1)
+        out = kernel_ops.dequantize_reduce_grouped(c3, s3, w, bits=bits,
+                                                   group=g)
+        if p.mode == "flat":
+            out = out.reshape(-1)[:n]
+        return out.reshape(shape)
+    return jnp.tensordot(w, decode_leaf(p), axes=1)
+
+
+def decode_reduce_tree(payload, w,
+                       kernel_threshold: int = KERNEL_DISPATCH_MIN,
+                       fused: Optional[bool] = None):
+    """``decode_reduce_leaf`` over a payload pytree: the mu-weighted
+    partial aggregate of a stacked C-client payload, fusing dequantize
+    into the accumulation leaf-wise (the ``uplink="reduce"`` server
+    stage). ``w`` is the (C,) weight vector — fold the participation mask
+    in by passing ``mu * mask`` (exact: the mask is 0.0/1.0). Partials
+    come back in the accumulation dtype (see ``decode_reduce_leaf``);
+    downcast once after the cross-device reduction."""
+    return jax.tree.map(
+        lambda p: decode_reduce_leaf(p, w, kernel_threshold=kernel_threshold,
+                                     fused=fused),
+        payload, is_leaf=_is_payload_leaf)
+
+
 def block_quant(bits: int = 8, block: int = 256, dither: str = "uniform",
                 shard_safe: bool = False,
                 kernel_threshold: int = KERNEL_DISPATCH_MIN,
@@ -653,6 +756,14 @@ def block_quant(bits: int = 8, block: int = 256, dither: str = "uniform",
                                      kernel_threshold=kernel_threshold,
                                      compute=compute),
             key, s)
+
+    def decode_reduce(payload, w, fused=None):
+        # honors THIS compressor's kernel_threshold (a closure argument,
+        # not a Compressor field) — callers that disabled kernel dispatch
+        # keep the bit-identical jnp reduce here too
+        return decode_reduce_tree(payload, w,
+                                  kernel_threshold=kernel_threshold,
+                                  fused=fused)
 
     def payload(shape, itemsize):
         # EXACT wire bytes (mirrors encode_leaf): packed codes (1 byte per
@@ -684,7 +795,8 @@ def block_quant(bits: int = 8, block: int = 256, dither: str = "uniform",
                       name=f"block_quant{bits}b{block}[{tag}]",
                       payload_fn=payload,
                       encode=encode if bits <= 8 else None,
-                      decode=decode_tree if bits <= 8 else None)
+                      decode=decode_tree if bits <= 8 else None,
+                      decode_reduce=decode_reduce if bits <= 8 else None)
 
 
 # ---------------------------------------------------------------------------

@@ -163,7 +163,7 @@ def make_problem(model: Model, cfg: FedLMConfig) -> "api.MMProblem":
 
 
 def make_train_step(model: Model, cfg: FedLMConfig, mesh=None,
-                    client_axis: str = "clients"):
+                    client_axis: str = "clients", uplink: str = "gather"):
     """Returns train_step(state, batch, key, gamma) -> (state, metrics).
     batch: {"tokens": (n_clients, B_local, S), "labels": ...} (+frontend).
 
@@ -176,8 +176,15 @@ def make_train_step(model: Model, cfg: FedLMConfig, mesh=None,
       * ``client_mode="physical"`` -> the batched/sharded driver path
         (``client_mode="vmap"`` + optional ``mesh=``/``client_axis=``:
         silos run concurrently, the client dim shard_mapped over the mesh
-        axis and the uplink a real code-space all_gather — without a mesh
-        the vmap stays hand-shardable by pjit exactly as before);
+        axis and the uplink a real code-space collective — without a mesh
+        the vmap stays hand-shardable by pjit exactly as before). The
+        ``uplink`` knob passes straight through to ``api.step``:
+        ``"gather"`` (default) all_gathers the packed payload stack onto
+        every silo (bit-identical golden path), ``"reduce"`` keeps each
+        silo on its own clients' payloads and psums the model-shaped
+        partial aggregate (allclose; O(n/axis_size) payload memory —
+        the right choice at LM scale, where the n-client stack per
+        device is exactly what the silo topology cannot afford);
       * ``client_mode="logical"``  -> the driver's sequential-scan client
         mode (one client's grad/delta/quantize transients live at a time
         — the production pattern for simulated cross-silo runs on shared
@@ -196,7 +203,8 @@ def make_train_step(model: Model, cfg: FedLMConfig, mesh=None,
                                  aux=(), opt=(), step=state.step)
         new, m = api.step(problem, spec, dstate, batch, gamma, key,
                           mesh=mesh, client_axis=client_axis,
-                          client_mode=driver_mode, drift_metric=False)
+                          client_mode=driver_mode, uplink=uplink,
+                          drift_metric=False)
         # legacy metric names: e_s is ||h||^2 (elementwise square+sum — the
         # driver's h_norm_sq), loss the all-client mean off s_bar_metrics
         metrics = {"loss": m["loss"], "e_s": m["h_norm_sq"],

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec
 
-from .quantize_block import (quantize_block_pallas,
+from .quantize_block import (decode_reduce_grouped_pallas,
+                             quantize_block_pallas,
                              quantize_encode_grouped_pallas,
                              quantize_grouped_pallas)
 from .flash_attention import flash_attention_pallas
@@ -142,6 +143,20 @@ def quantize_encode_sharded(x, u, bits: int, group: int,
 
     return shard_map(body, mesh=sharding.mesh, in_specs=(pspec, pspec),
                      out_specs=(pspec, pspec), check_rep=False)(x, u)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group"))
+def dequantize_reduce_grouped(codes, scales, w, bits: int = 8,
+                              group: int = 256):
+    """Fused dequantize + weighted accumulate over the leading client axis
+    (the ``uplink="reduce"`` server-side partial aggregation): returns
+    ``sum_c w[c] * dequant(codes[c], scales[c])`` without materializing the
+    decoded f32 client stack. codes: (C, R, D) int8 with D % group == 0;
+    scales: (C, R, D // group) f32; w: (C,) f32. Dequant math is the exact
+    tail of ``ref.decode_groups_ref``; the c-sequential accumulation
+    matches a tensordot over the decoded stack to f32 rounding."""
+    return decode_reduce_grouped_pallas(codes, scales, w, bits=bits,
+                                        group=group, interpret=INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "block"))

@@ -16,14 +16,20 @@ flat path is the ``D == g`` special case (one group per row); multi-dim
 shard_safe leaves dispatch with ``D = leaf.shape[-1]`` so the last-axis
 grouping (and hence GSPMD sharding) is preserved — no flatten required.
 
-Two kernel families:
+Three kernel families:
 
   * ``quantize_grouped_pallas`` — quantize->dequantize fused (what the
     server receives), same math as ``ref.quantize_groups_ref``;
   * ``quantize_encode_grouped_pallas`` — the WIRE variant: emits int8 codes
     plus one f32 scale per group (``ref.encode_groups_ref``). The dequantized
     f32 array never touches HBM; the uplink moves ``n + 4 * n/g`` bytes
-    instead of ``4 n``.
+    instead of ``4 n``;
+  * ``decode_reduce_grouped_pallas`` — the server side of the fused reduce
+    uplink (Algorithm 2 line 13): sum_c w_c * dequant(codes_c, scales_c)
+    over a stacked C-client payload, accumulating the weighted dequant
+    on-chip — the decoded f32 client stack never touches HBM (the
+    ``uplink="reduce"`` shard-local partial aggregation of
+    ``api/driver.py`` via ``core/compression.py:decode_reduce_tree``).
 
 Dither sources (per call, orthogonal to the kernel math):
 
@@ -256,6 +262,69 @@ def quantize_encode_grouped_pallas(x2, u2=None, *, bits: int = 8,
             interpret=interpret,
         )(x2p, u2p)
     return codes[:R], scales[:R]
+
+
+def _decode_reduce_kernel(w_ref, codes_ref, scales_ref, o_ref, *,
+                          levels: float):
+    """One (rows, g) tile of one client c: dequantize (== the tail of
+    ``ref.decode_groups_ref``) and accumulate w_c * deq into the output
+    block. The client grid dim is INNERMOST, so each output block stays
+    resident while every client's contribution lands on it."""
+    c = pl.program_id(2)
+    q = codes_ref[0].astype(jnp.float32)            # (rows, g)
+    scale = scales_ref[0].astype(jnp.float32)       # (rows, 1)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    deq = q * safe * (1.0 / levels)
+    deq = jnp.where(scale > 0, deq, 0.0)
+    contrib = w_ref[c, 0] * deq
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(c > 0)
+    def _acc():
+        o_ref[...] += contrib
+
+
+def decode_reduce_grouped_pallas(codes, scales, w, *, bits: int = 8,
+                                 group: int = 256, rows_per_tile: int = 64,
+                                 interpret: bool = True):
+    """Fused dequantize + weighted accumulate over the client axis.
+
+    codes: (C, R, D) int8 with D % group == 0; scales: (C, R, D // group)
+    f32 (one per quantization group); w: (C,) f32 client weights. Returns
+    the (R, D) f32 weighted sum sum_c w[c] * dequant(codes[c], scales[c])
+    — the decoded per-client f32 arrays never exist in HBM (the output is
+    the only f32 array the kernel writes). Dequant math is the exact tail
+    of ``ref.decode_groups_ref``; the accumulation order is sequential in
+    c, so against a tensordot over a decoded stack the result agrees to
+    f32 reduction-order rounding, not bit-for-bit.
+    """
+    C, R, D = codes.shape
+    assert D % group == 0, "last axis must be a whole number of groups"
+    assert scales.shape == (C, R, D // group), scales.shape
+    assert w.shape == (C,), w.shape
+    levels = 2.0 ** (bits - 1) - 1.0
+    rt = min(rows_per_tile, R)
+    n_tiles = -(-R // rt)
+    pad = n_tiles * rt - R
+    if pad:
+        # padded rows carry scale 0 -> contribute exactly 0
+        codes = jnp.pad(codes, ((0, 0), (0, pad), (0, 0)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad), (0, 0)))
+    grid = (n_tiles, D // group, C)                  # c innermost
+    out = pl.pallas_call(
+        functools.partial(_decode_reduce_kernel, levels=levels),
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((1, rt, group), lambda i, j, c: (c, i, j)),
+                  pl.BlockSpec((1, rt, 1), lambda i, j, c: (c, i, j))],
+        out_specs=pl.BlockSpec((rt, group), lambda i, j, c: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles * rt, D), jnp.float32),
+        interpret=interpret,
+    )(w.astype(jnp.float32).reshape(C, 1), codes, scales)
+    return out[:R]
 
 
 def quantize_block_pallas(x, u, bits: int = 8, block: int = 256,

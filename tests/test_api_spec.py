@@ -129,6 +129,29 @@ def test_at_init_variates_follow_the_aggregation_space():
             == (3,) + jax.tree.leaves(s0)[0].shape)
 
 
+def test_loss_hook_one_f32_code_path_on_both_cadences():
+    """The eval_every == 1 branch used to record problem.loss in native
+    dtype (and compute theta_eval a second time) while the lax.cond branch
+    cast to f32 — the recorded metric's dtype must not depend on the
+    cadence. A bf16-loss problem makes the old divergence visible."""
+    (Xs, ys), sur = _toy()
+    problem = api.as_problem(sur)
+    bf16_problem = dataclasses.replace(
+        problem,
+        loss=lambda b, th: problem.loss(b, th).astype(jnp.bfloat16))
+    spec = api.FederationSpec(n_clients=3)
+    eval_b = (Xs.reshape(-1, 4), ys.reshape(-1))
+    losses = {}
+    for every in (1, 3):
+        _, hist = api.run(api.as_problem(bf16_problem), jnp.zeros(4),
+                          lambda t, k: (Xs, ys), 0.3, spec=spec, key=KEY,
+                          n_rounds=6, eval_batch=eval_b, eval_every=every)
+        assert hist["loss"].dtype == jnp.float32, every
+        losses[every] = np.asarray(hist["loss"])
+    # the rounds both cadences evaluate agree exactly (same code path)
+    np.testing.assert_array_equal(losses[1][[2, 5]], losses[3][[2, 5]])
+
+
 def test_eval_every_subsamples_loss():
     (Xs, ys), sur = _toy()
     spec = api.FederationSpec(n_clients=3)
@@ -152,6 +175,60 @@ def test_spec_validation():
         api.FederationSpec(n_clients=2, variates="off", alpha=0.1)
     with pytest.raises(ValueError):
         api.FederationSpec(n_clients=2, variates="warm")
+
+
+def test_client_weights_validation():
+    """A wrong-length or non-normalized mu used to flow silently into the
+    driver's tensordot; now it fails loudly AT SPEC CONSTRUCTION with the
+    offending shape/sum in the message, and normalize_mu is the escape
+    hatch for raw sample counts."""
+    with pytest.raises(ValueError, match=r"shape \(3,\).*got \(2,\)"):
+        api.FederationSpec(n_clients=3, mu=jnp.array([0.5, 0.5]))
+    with pytest.raises(ValueError, match=r"\(3,\).*got \(3, 1\)"):
+        api.FederationSpec(n_clients=3, mu=jnp.ones((3, 1)) / 3)
+    with pytest.raises(ValueError, match="sum to 6.*normalize_mu"):
+        api.FederationSpec(n_clients=3, mu=jnp.array([1.0, 2.0, 3.0]))
+    # normalize_mu cannot rescue a zero/negative sum (NaN / sign-flipped
+    # weights) — that still fails at construction
+    with pytest.raises(ValueError, match="positive sum"):
+        api.FederationSpec(n_clients=3, mu=jnp.zeros(3), normalize_mu=True)
+    with pytest.raises(ValueError, match="positive sum"):
+        api.FederationSpec(n_clients=3, mu=jnp.array([1.0, -2.0, 0.5]),
+                           normalize_mu=True)
+    # the escape hatch: raw per-client sample counts, rescaled to sum 1
+    spec = api.FederationSpec(n_clients=3, mu=jnp.array([1.0, 2.0, 3.0]),
+                              normalize_mu=True)
+    np.testing.assert_allclose(np.asarray(spec.client_weights()),
+                               [1 / 6, 2 / 6, 3 / 6], rtol=1e-6)
+    # an already-normalized explicit mu passes through exactly
+    mu = jnp.array([0.2, 0.3, 0.5])
+    np.testing.assert_array_equal(
+        np.asarray(api.FederationSpec(n_clients=3, mu=mu).client_weights()),
+        np.asarray(mu))
+
+
+@pytest.mark.parametrize("normalization", ["expected", "realized"])
+def test_zero_active_round_stays_finite(normalization):
+    """A round where the A5 draw comes up empty: 'realized' hits its
+    n/max(|A|, 1) clamp, 'expected' scales a zero aggregate — both leave
+    the trajectory finite and the comm accounting at exactly 0."""
+    (Xs, ys), sur = _toy()
+    problem = api.as_problem(sur)
+    spec = api.FederationSpec(n_clients=3, participation=0.5, alpha=0.1,
+                              compressor=C.block_quant(8, 64),
+                              normalization=normalization)
+    state = api.init(problem, jnp.zeros(4), spec)
+    new, m = api.step(problem, spec, state, (Xs, ys), 0.3, KEY,
+                      active=jnp.zeros((3,), bool))
+    assert float(m["n_active"]) == 0.0
+    assert float(m["comm_bytes"]) == 0.0
+    for leaf in jax.tree.leaves((new.x, new.v, new.v_i)):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # zero-initialized variates + empty draw: the aggregate h is exactly
+    # zero, so the SA step moves nothing but the projection
+    np.testing.assert_allclose(np.asarray(new.x),
+                               np.asarray(problem.project(state.x)),
+                               rtol=1e-6, atol=1e-7)
 
 
 def test_resolve_schedule_forms():

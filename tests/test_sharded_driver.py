@@ -132,6 +132,102 @@ def test_mesh_run_without_wire_format_gathers_raw():
                                n * 64 * 4)   # raw f32 payload
 
 
+# ---------------------------------------------------------------------------
+# the fused reduce uplink (PR 5): shard-local decode/mask/variates + one psum
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variates,alpha", [("zero", 0.1), ("off", 0.0)])
+def test_reduce_uplink_allclose_to_gather(variates, alpha):
+    """uplink='reduce' — decode + mask + mu-weighted partial-reduce run
+    shard-locally and ONE model-shaped psum crosses the mesh — reproduces
+    the bit-identical 'gather' trajectory to f32 reduction-order rounding
+    (the documented caveat: psum-of-partials reassociates the tensordot
+    over n clients)."""
+    n = 8
+    (Xs, ys), sur = _quad_problem(n_clients=n)
+    problem = api.as_problem(sur)
+    comp = C.block_quant(8, 64)
+    spec = api.FederationSpec(n_clients=n, participation=0.5, alpha=alpha,
+                              variates=variates, compressor=comp)
+    mesh = _client_mesh()
+    kwargs = dict(spec=spec, key=KEY, n_rounds=8, track_mirror=True,
+                  mesh=mesh)
+    st_g, h_g = api.run(problem, jnp.zeros(64), lambda t, k: (Xs, ys), 0.3,
+                        **kwargs)
+    st_r, h_r = api.run(problem, jnp.zeros(64), lambda t, k: (Xs, ys), 0.3,
+                        uplink="reduce", **kwargs)
+    np.testing.assert_allclose(np.asarray(st_g.x), np.asarray(st_r.x),
+                               rtol=1e-5, atol=1e-6)
+    if variates == "zero":
+        # v_i updates shard-locally on the reduce path; same values
+        np.testing.assert_allclose(np.asarray(st_g.v_i),
+                                   np.asarray(st_r.v_i),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(st_g.v), np.asarray(st_r.v),
+                                   rtol=1e-5, atol=1e-6)
+    # the A5 draw, the uplink accounting and the oracle metrics are the
+    # SAME numbers on both paths (only the reduction order differs)
+    _bit_equal(h_g["n_active"], h_r["n_active"])
+    _bit_equal(h_g["comm_bytes"], h_r["comm_bytes"])
+    np.testing.assert_allclose(np.asarray(h_g["e_s"]),
+                               np.asarray(h_r["e_s"]), rtol=1e-3)
+
+
+def test_reduce_uplink_kills_the_gathered_stack():
+    """Acceptance: the per-device collective operand on the reduce path is
+    the model-shaped partial aggregate — <= n/axis_size * payload + model
+    bytes — not the gathered n-client payload stack, and the metric is
+    measured off the ACTUAL psum operand."""
+    n, dim = 8, 512
+    (Xs, ys), sur = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 128)
+    spec = api.FederationSpec(n_clients=n, compressor=comp)
+    mesh = _client_mesh()
+    kwargs = dict(spec=spec, key=KEY, n_rounds=3, mesh=mesh)
+    _, h_g = api.run(api.as_problem(sur), jnp.zeros(dim),
+                     lambda t, k: (Xs, ys), 0.3, **kwargs)
+    _, h_r = api.run(api.as_problem(sur), jnp.zeros(dim),
+                     lambda t, k: (Xs, ys), 0.3, uplink="reduce", **kwargs)
+    axis = mesh.shape["clients"]
+    payload_c = comp.payload_bytes(jnp.zeros(dim))
+    model_bytes = dim * 4
+    gather_bytes = np.asarray(h_g["collective_payload_bytes"])
+    reduce_bytes = np.asarray(h_r["collective_payload_bytes"])
+    # gather: every device holds the full n-client packed stack
+    np.testing.assert_allclose(gather_bytes, n * payload_c)
+    # reduce: the psum operand IS the model-shaped partial aggregate...
+    np.testing.assert_allclose(reduce_bytes, model_bytes)
+    # ...which satisfies the acceptance memory bound
+    assert (reduce_bytes <= n / axis * payload_c + model_bytes).all()
+    # and the gathered-stack buffer is gone from the collective
+    assert (reduce_bytes < gather_bytes).all()
+
+
+def test_reduce_uplink_zero_active_round_stays_finite():
+    """A round where NO client participates (the A5 draw comes up empty):
+    both normalizations keep the reduce-path trajectory finite and the
+    uplink accounting at zero, on the mesh."""
+    n = 8
+    (Xs, ys), sur = _quad_problem(n_clients=n)
+    problem = api.as_problem(sur)
+    comp = C.block_quant(8, 64)
+    mesh = _client_mesh()
+    for normalization in ("expected", "realized"):
+        spec = api.FederationSpec(n_clients=n, participation=0.5, alpha=0.1,
+                                  compressor=comp,
+                                  normalization=normalization)
+        state = api.init(problem, jnp.zeros(64), spec)
+        empty = jnp.zeros((n,), bool)
+        for uplink in ("gather", "reduce"):
+            new, m = api.step(problem, spec, state, (Xs, ys), 0.3, KEY,
+                              active=empty, mesh=mesh, uplink=uplink)
+            assert float(m["n_active"]) == 0.0, (normalization, uplink)
+            assert float(m["comm_bytes"]) == 0.0, (normalization, uplink)
+            for leaf in jax.tree.leaves((new.x, new.v, new.v_i)):
+                assert np.isfinite(np.asarray(leaf)).all(), (normalization,
+                                                             uplink)
+
+
 def test_mesh_validation_errors():
     (Xs, ys), sur = _quad_problem(n_clients=3)
     problem = api.as_problem(sur)
@@ -150,6 +246,11 @@ def test_mesh_validation_errors():
     with pytest.raises(ValueError, match="client_mode"):
         api.step(problem, spec, state, (Xs, ys), 0.3, KEY,
                  client_mode="pmap")
+    with pytest.raises(ValueError, match="uplink"):
+        api.step(problem, spec, state, (Xs, ys), 0.3, KEY, mesh=mesh,
+                 uplink="psum")
+    with pytest.raises(ValueError, match="mesh"):
+        api.step(problem, spec, state, (Xs, ys), 0.3, KEY, uplink="reduce")
 
 
 def test_scan_client_mode_matches_vmap_to_rounding():
@@ -307,6 +408,41 @@ def test_scan_fallback_warning_fires_once_per_situation():
     assert len(rec) == 1   # the second, identical run stayed silent
 
 
+def test_scan_fallback_dedupe_set_is_bounded(monkeypatch):
+    """The dedupe store is an LRU with a hard cap — a sweep over many
+    distinct (bytes, rounds, budget) situations cannot grow it without
+    bound (it lives for the whole process). Evicted situations warn
+    again, which is the correct trade: bounded memory over perfect
+    dedupe."""
+    import warnings as W
+    from repro.api import driver
+    monkeypatch.setattr(driver, "_SCAN_FALLBACK_WARNED_MAX", 3)
+    saved = dict(driver._SCAN_FALLBACK_WARNED)
+    driver._SCAN_FALLBACK_WARNED.clear()
+    try:
+        (Xs, ys), sur = _quad_problem(n_clients=4)
+        spec = api.FederationSpec(n_clients=4)
+
+        def go(budget):
+            with W.catch_warnings(record=True) as rec:
+                W.simplefilter("always")
+                api.run(api.as_problem(sur), jnp.zeros(64),
+                        lambda t, k: (Xs, ys), 0.3, spec=spec, key=KEY,
+                        n_rounds=2, scan_batch_bytes_max=budget)
+            return len(rec)
+
+        # 6 distinct situations all warn, but the store stays capped
+        assert [go(b) for b in range(1, 7)] == [1] * 6
+        assert len(driver._SCAN_FALLBACK_WARNED) == 3
+        # the oldest (budget=1,2,3) were evicted -> budget=1 warns again;
+        # a still-resident situation stays deduped
+        assert go(1) == 1
+        assert go(6) == 0
+    finally:
+        driver._SCAN_FALLBACK_WARNED.clear()
+        driver._SCAN_FALLBACK_WARNED.update(saved)
+
+
 # ---------------------------------------------------------------------------
 # the real thing: a forced 8-device process (works from a 1-device dev box)
 # ---------------------------------------------------------------------------
@@ -344,6 +480,19 @@ for k in h0:
     np.testing.assert_array_equal(np.asarray(h0[k]), np.asarray(h1[k]), k)
 assert float(h1["collective_payload_bytes"][0]) == \
     n * comp.payload_bytes(jnp.zeros(dim))
+
+# the fused reduce uplink on a REAL 8-way mesh: allclose to the golden
+# gather trajectory, v_i updated shard-locally, and the psum operand is
+# the model-shaped partial aggregate (the gathered stack is gone)
+st2, h2 = api.run(problem, jnp.zeros(dim), lambda t, k: (Xs, ys), 0.3,
+                  mesh=mesh, uplink="reduce", **kwargs)
+np.testing.assert_allclose(np.asarray(st0.x), np.asarray(st2.x),
+                           rtol=1e-5, atol=1e-6)
+np.testing.assert_allclose(np.asarray(st0.v_i), np.asarray(st2.v_i),
+                           rtol=1e-5, atol=1e-6)
+assert float(h2["collective_payload_bytes"][0]) == dim * 4
+assert float(h2["collective_payload_bytes"][0]) < \
+    float(h1["collective_payload_bytes"][0])
 
 # guard regression: an UNSHARDED multi-dim leaf on this 8-device host
 # keeps the kernel path (the old guard forced jnp for the whole process)

@@ -214,6 +214,130 @@ def test_payload_model_equals_actual_encoded_buffers():
         assert comp.wire_bytes(tree) == pytest.approx(actual), name
 
 
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("shard_safe,shape",
+                         [(True, (4, 4096)),   # g=128: fused kernel path
+                          (False, (1000,)),    # flat+pad: fused kernel path
+                          (True, (2, 3, 256))])  # g=8: jnp fallback only
+def test_decode_reduce_matches_decode_then_tensordot(bits, shard_safe,
+                                                     shape):
+    """``decode_reduce_tree`` (the uplink='reduce' server stage) equals
+    tensordot over the decoded stack: BIT-identical on the jnp fallback
+    (it IS decode-then-tensordot), allclose on the fused Pallas
+    dequantize+accumulate kernel (sequential-in-c accumulation order)."""
+    comp = C.block_quant(bits, 128, dither="hash", shard_safe=shard_safe,
+                         kernel_threshold=1 << 62)
+    n = 5
+    xs = jax.random.normal(KEY, (n,) + shape) * 2.0
+    keys = jax.random.split(KEY, n)
+    payload = jax.vmap(comp.encode)(keys, xs)
+    w = jax.random.uniform(jax.random.PRNGKey(1), (n,))
+    ref_agg = jax.tree.map(lambda q: jnp.tensordot(w, q, axes=1),
+                           comp.decode(payload))
+    fused = C.decode_reduce_tree(payload, w, kernel_threshold=1)
+    fallback = C.decode_reduce_tree(payload, w, kernel_threshold=1 << 62)
+    _bit_equal(fallback, ref_agg)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref_agg),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_decode_reduce_keeps_f32_accumulation_for_bf16():
+    """bf16 payloads: the weighted reduction accumulates in f32 (the
+    caller — the driver's reduce uplink — downcasts once after its
+    cross-device psum), and the fused KERNEL route is f32-only — for
+    low-precision leaves ``decode`` rounds every dequantized element to
+    the leaf dtype before reducing (the gather path's per-element
+    semantics), which the raw-f32-accumulating kernel cannot reproduce.
+    Even a kernel-eligible bf16 leaf must therefore stay bit-equal to
+    decode-then-tensordot."""
+    for compute, shape in (("native", (4, 256)), ("f32", (4, 4096))):
+        comp = C.block_quant(8, 128, shard_safe=True, compute=compute)
+        n = 3
+        xs = (jax.random.normal(KEY, (n,) + shape) * 2.0) \
+            .astype(jnp.bfloat16)
+        keys = jax.random.split(KEY, n)
+        payload = jax.vmap(comp.encode)(keys, xs)
+        w = jnp.array([0.2, 0.3, 0.5])
+        # kernel_threshold=1 would dispatch the kernel for an f32 leaf of
+        # this size — the bf16 dtype must veto it
+        out = C.decode_reduce_tree(payload, w, kernel_threshold=1,
+                                   fused=True)
+        assert out.dtype == jnp.float32, compute
+        _bit_equal(out, jnp.tensordot(w, comp.decode(payload), axes=1))
+
+
+def test_compressor_decode_reduce_honors_its_kernel_threshold():
+    """block_quant(kernel_threshold=...) is the documented way to disable
+    Pallas dispatch; the Compressor.decode_reduce hook (what the driver's
+    reduce uplink calls) must carry that policy rather than the module
+    default — bit-identical to the jnp decode-then-tensordot even on a
+    kernel-eligible leaf."""
+    n = 3
+    xs = jax.random.normal(KEY, (n, 4, 4096)) * 2.0
+    keys = jax.random.split(KEY, n)
+    w = jnp.array([0.2, 0.3, 0.5])
+    comp_off = C.block_quant(8, 128, shard_safe=True,
+                             kernel_threshold=1 << 62)
+    payload = jax.vmap(comp_off.encode)(keys, xs)
+    ref_agg = jax.tree.map(lambda q: jnp.tensordot(w, q, axes=1),
+                           comp_off.decode(payload))
+    _bit_equal(comp_off.decode_reduce(payload, w, fused=True), ref_agg)
+    # with the default threshold the same leaf takes the fused kernel
+    comp_on = C.block_quant(8, 128, shard_safe=True, kernel_threshold=1)
+    np.testing.assert_allclose(
+        np.asarray(comp_on.decode_reduce(payload, w, fused=True)),
+        np.asarray(ref_agg), rtol=1e-5, atol=1e-6)
+
+
+def test_decode_reduce_kernel_route_is_sharding_aware():
+    """The fused-kernel dispatch mirrors _kernel_route's per-leaf guard:
+    eager single-device buffers take the kernel, traced leaves on
+    multi-device processes keep the conservative jnp path unless the
+    caller asserts a per-device (shard_map) context with fused=True."""
+    comp = C.block_quant(8, 128, shard_safe=True, kernel_threshold=1 << 62)
+    n = 3
+    xs = jax.random.normal(KEY, (n, 4, 4096)) * 2.0
+    keys = jax.random.split(KEY, n)
+    payload = jax.vmap(comp.encode)(keys, xs)
+    w = jnp.array([0.2, 0.3, 0.5])
+    ref_agg = jax.tree.map(lambda q: jnp.tensordot(w, q, axes=1),
+                           comp.decode(payload))
+    # every route agrees; fused=False forces the bit-identical jnp path
+    forced_off = C.decode_reduce_tree(payload, w, kernel_threshold=1,
+                                      fused=False)
+    _bit_equal(forced_off, ref_agg)
+    for fused in (None, True):
+        out = C.decode_reduce_tree(payload, w, kernel_threshold=1,
+                                   fused=fused)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_agg),
+                                   rtol=1e-5, atol=1e-6)
+    # under jit on a multi-device process the auto route must stay jnp
+    # (tracer, sharding unknowable) — smoke that it traces and matches
+    jit_out = jax.jit(lambda pl, ww: C.decode_reduce_tree(
+        pl, ww, kernel_threshold=1))(payload, w)
+    np.testing.assert_allclose(np.asarray(jit_out), np.asarray(ref_agg),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_decode_reduce_raw_and_mixed_leaves():
+    """Raw passthrough leaves (identity payloads, shard-safe g == 1 dims)
+    reduce with a plain weighted tensordot alongside packed leaves."""
+    comp = C.block_quant(8, 64, shard_safe=True)
+    n = 3
+    tree = {"w": jnp.zeros((n, 4, 64)), "tiny": jnp.zeros((n, 5))}
+    xs = jax.tree.map(lambda z: jax.random.normal(KEY, z.shape), tree)
+    keys = jax.random.split(KEY, n)
+    payload = jax.vmap(comp.encode)(keys, xs)
+    assert isinstance(payload["w"], C.PackedLeaf)       # quantized
+    assert not isinstance(payload["tiny"], C.PackedLeaf)  # g == 1 raw
+    w = jnp.array([0.2, 0.3, 0.5])
+    out = C.decode_reduce_tree(payload, w)
+    ref_agg = jax.tree.map(lambda q: jnp.tensordot(w, q, axes=1),
+                           comp.decode(payload))
+    _bit_equal(out["tiny"], ref_agg["tiny"])
+    _bit_equal(out["w"], ref_agg["w"])
+
+
 def test_b8_vs_b4_footprint_ratio():
     """The point of the wire format: an n-client payload stack is ~4x
     (b=8, g=256) / ~8x (b=4) smaller than the dequantized f32 stack. The
