@@ -19,7 +19,6 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 # allow direct-script invocation (python benchmarks/fig1_dictlearn.py)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -14,12 +14,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 # allow direct-script invocation (python benchmarks/fig3_ot.py)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from repro import api
 from repro.core import fedmm_ot as ot
 from benchmarks.run import harness
 

@@ -24,7 +24,6 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import compression as C
 from repro.kernels import ops, ref

@@ -1,0 +1,45 @@
+"""``repro.analysis`` — static analysis + runtime sanitizers for the
+federated stack.
+
+Three layers, one theme: QSMM's correctness rests on exact contracts
+(surrogate statistics must survive quantize -> wire -> decode ->
+mu-weighted-reduce bit-for-bit on the gather uplink, or within the
+documented f32 reduction-order tolerance on the reduce uplink), and PRs
+1-5 each fixed a silent hand-rolled violation of them. This package
+machine-checks the bug classes the repo has actually shipped:
+
+* **Layer 1 — AST linter** (``linter.py`` + ``rules.py``): rules
+  RPL001-RPL006 over the source tree, each codifying a shipped bug class
+  (process-wide ``jax.device_count()`` dispatch guards, host randomness
+  inside traced code, tracer-typed Python control flow, pre-collective
+  downcasts inside ``shard_map`` bodies, unbound collective axis names,
+  Pallas BlockSpec lane misalignment / non-innermost accumulating output
+  blocks). Suppress a deliberate site with
+  ``# repro: allow[RPL00x] <reason>`` on the finding's line (or the line
+  above) — the reason is REQUIRED, and ``--strict`` budgets the total.
+* **Layer 2 — abstract-eval contract checker** (``contracts.py``):
+  ``check_compressor`` validates any ``core.compression.Compressor``
+  purely via ``jax.eval_shape`` — decode . encode shape/dtype roundtrip,
+  ``payload_bytes`` == actual wire-buffer bytes, ``decode_reduce`` output
+  contract, packed-leaf group alignment — no device execution, so CI vets
+  every future compressor before a single FLOP.
+* **Layer 3 — runtime sanitizer** (``runtime.py``):
+  ``api.run/step(..., sanitize=True)`` threads
+  ``jax.experimental.checkify`` (nan / div-by-zero / OOB-index checks)
+  through the scan + shard_map driver and audits the comm-bytes metric
+  against the actual encoded buffers. Off by default; zero-cost when off.
+
+CLI: ``python -m repro.analysis src/repro --strict`` (see ``__main__``).
+"""
+from .findings import Finding, Pragma, Severity
+from .linter import LintReport, lint_file, lint_paths, lint_source
+from .rules import RULES, rule_table
+from .contracts import (CompressorReport, ContractViolation,
+                        check_compressor)
+
+__all__ = [
+    "Finding", "Pragma", "Severity",
+    "LintReport", "lint_file", "lint_paths", "lint_source",
+    "RULES", "rule_table",
+    "CompressorReport", "ContractViolation", "check_compressor",
+]

@@ -1,0 +1,282 @@
+"""Layer 2 — abstract-eval contract checking for ``Compressor``s.
+
+``check_compressor`` vets any ``core.compression.Compressor`` against the
+wire contracts the driver relies on, purely via ``jax.eval_shape`` — no
+device execution, no FLOPs, so CI can reject a broken compressor before
+it ever runs:
+
+1. **apply roundtrip** — ``apply(key, tree)`` preserves every leaf's
+   shape AND dtype (A4 operators are endomorphisms of the surrogate
+   space; a dtype drift here silently upcasts the whole driver state).
+2. **decode . encode roundtrip** — decoding the encoded payload restores
+   every leaf's shape/dtype exactly (the bit-identity contract's
+   abstract shadow: if even the *structs* disagree, the golden
+   trajectories cannot survive code-space aggregation).
+3. **payload accounting** — ``payload_bytes`` (the analytic model) ==
+   the summed bytes of the ACTUAL encoded buffers (codes + scales +
+   raw passthrough leaves) == ``wire_bytes``. A lying model corrupts
+   ``comm_bytes`` metrics and every figure built on them.
+4. **packed-leaf layout** — each ``PackedLeaf``'s static metadata is
+   self-consistent: bits <= 8, group aligns with the recorded layout
+   (``shard`` mode: group divides the leaf's last dim; ``flat`` mode:
+   the padded stream is whole groups), scales count == group count,
+   nibble-packed codes only at bits <= 4 with an even stream.
+5. **decode_reduce** — on an (n_clients,)-stacked payload with (n,)
+   f32 weights, the fused reduce returns model-shaped leaves in a
+   floating accumulation dtype (never integer codes; never a stacked
+   axis left over).
+
+Violations are collected (not raised) so a report can show everything
+wrong with a compressor at once; ``CompressorReport.raise_if_failed``
+turns them into one error for test/CI use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..core.compression import PackedLeaf, _tree_bytes
+
+PACK_BITS = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractViolation:
+    contract: str   # "apply-roundtrip" / "payload-bytes" / ...
+    leaf: str       # pytree path string ("" for tree-level contracts)
+    detail: str
+
+    def format(self) -> str:
+        where = f" at leaf '{self.leaf}'" if self.leaf else ""
+        return f"[{self.contract}]{where}: {self.detail}"
+
+
+@dataclasses.dataclass
+class CompressorReport:
+    name: str
+    violations: list = dataclasses.field(default_factory=list)
+    checked: list = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def raise_if_failed(self):
+        if self.violations:
+            msg = "\n".join(v.format() for v in self.violations)
+            raise AssertionError(
+                f"compressor '{self.name}' violates "
+                f"{len(self.violations)} contract(s):\n{msg}")
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "ok": self.ok,
+                "checked": list(self.checked),
+                "violations": [dataclasses.asdict(v)
+                               for v in self.violations]}
+
+
+def _leaf_paths(tree):
+    leaves, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, PackedLeaf))
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in leaves]
+
+
+def _structs(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(tuple(x.shape), jnp.dtype(x.dtype)),
+        tree)
+
+
+def _check_same_structs(report, contract, ref_tree, got_tree):
+    ref = _leaf_paths(ref_tree)
+    got = _leaf_paths(got_tree)
+    if len(ref) != len(got):
+        report.violations.append(ContractViolation(
+            contract, "", f"leaf count changed: {len(ref)} -> {len(got)}"))
+        return
+    for (path, r), (_, g) in zip(ref, got):
+        if tuple(r.shape) != tuple(g.shape):
+            report.violations.append(ContractViolation(
+                contract, path,
+                f"shape {tuple(r.shape)} -> {tuple(g.shape)}"))
+        if jnp.dtype(r.dtype) != jnp.dtype(g.dtype):
+            report.violations.append(ContractViolation(
+                contract, path,
+                f"dtype {jnp.dtype(r.dtype).name} -> "
+                f"{jnp.dtype(g.dtype).name}"))
+
+
+def _check_packed_leaf(report, path, p: PackedLeaf):
+    n = int(math.prod(p.shape)) if p.shape else 1
+    if not (1 <= p.bits <= 8):
+        report.violations.append(ContractViolation(
+            "packed-layout", path,
+            f"bits={p.bits} outside the wire format's 1..8 range"))
+        return
+    packed = jnp.dtype(p.codes.dtype) == jnp.uint8
+    if packed and p.bits > PACK_BITS:
+        report.violations.append(ContractViolation(
+            "packed-layout", path,
+            f"nibble-packed uint8 codes at bits={p.bits} > {PACK_BITS}: "
+            f"two {p.bits}-bit codes do not fit one byte"))
+    n_code_elems = int(math.prod(p.codes.shape)) * (2 if packed else 1)
+    n_scales = int(math.prod(p.scales.shape))
+    if p.mode == "shard":
+        D = p.shape[-1] if p.shape else 1
+        if p.group < 1 or D % p.group != 0:
+            report.violations.append(ContractViolation(
+                "packed-layout", path,
+                f"shard-mode group {p.group} does not divide the leaf's "
+                f"last dim {D} — groups must stay shard-local (the "
+                f"shard_safe alignment contract)"))
+            return
+        if n_code_elems != n:
+            report.violations.append(ContractViolation(
+                "packed-layout", path,
+                f"shard-mode code stream holds {n_code_elems} elements "
+                f"for a {n}-element leaf"))
+        want_scales = n // p.group
+        if n_scales != want_scales:
+            report.violations.append(ContractViolation(
+                "packed-layout", path,
+                f"{n_scales} scales for {n // p.group} groups"))
+    else:  # flat
+        if p.group < 1:
+            report.violations.append(ContractViolation(
+                "packed-layout", path, f"flat-mode group {p.group} < 1"))
+            return
+        padded = -(-n // p.group) * p.group
+        if n_code_elems != padded:
+            report.violations.append(ContractViolation(
+                "packed-layout", path,
+                f"flat-mode code stream holds {n_code_elems} elements; "
+                f"the padded {p.group}-block stream of a {n}-element "
+                f"leaf is {padded}"))
+        if n_scales != padded // p.group:
+            report.violations.append(ContractViolation(
+                "packed-layout", path,
+                f"{n_scales} scales for {padded // p.group} blocks"))
+
+
+def check_compressor(comp, tree, *, n_clients: int = 4,
+                     key=None, bytes_tol: float = 0.0) -> CompressorReport:
+    """Validate ``comp`` against the wire contracts on ``tree``'s shapes.
+
+    Pure shape-land: every compressor hook runs under ``jax.eval_shape``
+    only. ``tree`` may hold arrays or ``ShapeDtypeStruct``s.
+    ``bytes_tol`` loosens contract 3 (in bytes) for compressors whose
+    analytic model is intentionally approximate — the block quantizer
+    family is EXACT and must pass at 0.0.
+    """
+    report = CompressorReport(name=getattr(comp, "name", repr(comp)))
+    structs = _structs(tree)
+    key = jax.random.PRNGKey(0) if key is None else key
+
+    # 1. apply roundtrip
+    report.checked.append("apply-roundtrip")
+    try:
+        applied = jax.eval_shape(comp.apply, key, structs)
+    except Exception as e:  # abstract eval itself blew up
+        report.violations.append(ContractViolation(
+            "apply-roundtrip", "", f"apply failed abstract eval: "
+            f"{type(e).__name__}: {e}"))
+        return report
+    _check_same_structs(report, "apply-roundtrip", structs, applied)
+
+    if comp.encode is None:
+        return report
+
+    # 2. decode . encode roundtrip — but vet the payload's PACKED LAYOUT
+    # first (contract 4): a self-inconsistent layout usually makes decode
+    # blow up with an opaque reshape error, and the structural diagnosis
+    # is the one worth reporting
+    report.checked.append("encode-decode-roundtrip")
+    try:
+        payload = jax.eval_shape(comp.encode, key, structs)
+    except Exception as e:
+        report.violations.append(ContractViolation(
+            "encode-decode-roundtrip", "",
+            f"encode failed abstract eval: {type(e).__name__}: {e}"))
+        return report
+    report.checked.append("packed-layout")
+    for path, leaf in _leaf_paths(payload):
+        if isinstance(leaf, PackedLeaf):
+            _check_packed_leaf(report, path, leaf)
+    if comp.decode is None:
+        report.violations.append(ContractViolation(
+            "encode-decode-roundtrip", "",
+            "encode is set but decode is None — the driver cannot "
+            "aggregate what it cannot decode"))
+        return report
+    try:
+        decoded = jax.eval_shape(comp.decode, payload)
+    except Exception as e:
+        report.violations.append(ContractViolation(
+            "encode-decode-roundtrip", "",
+            f"decode failed abstract eval: {type(e).__name__}: {e}"))
+        return report
+    _check_same_structs(report, "encode-decode-roundtrip", structs, decoded)
+
+    # 3. payload accounting: analytic model == actual buffers == wire_bytes
+    report.checked.append("payload-bytes")
+    actual = float(_tree_bytes(payload))
+    model = float(comp.payload_bytes(structs))
+    if abs(model - actual) > bytes_tol:
+        report.violations.append(ContractViolation(
+            "payload-bytes", "",
+            f"payload_bytes model says {model:.1f} B but the encoded "
+            f"buffers hold {actual:.1f} B (tol {bytes_tol}) — comm_bytes "
+            f"metrics would lie by {model - actual:+.1f} B per client"))
+    wire = float(comp.wire_bytes(structs))
+    if abs(wire - actual) > bytes_tol:
+        report.violations.append(ContractViolation(
+            "payload-bytes", "",
+            f"wire_bytes says {wire:.1f} B vs actual buffers "
+            f"{actual:.1f} B"))
+
+    # 5. decode_reduce on a stacked payload
+    if comp.decode_reduce is not None:
+        report.checked.append("decode-reduce")
+        keys = jax.random.split(key, n_clients)
+        try:
+            stacked = jax.eval_shape(jax.vmap(comp.encode), keys,
+                                     _stack_structs(structs, n_clients))
+            w = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
+            reduced = jax.eval_shape(
+                lambda pl_, w_: comp.decode_reduce(pl_, w_, fused=False),
+                stacked, w)
+        except Exception as e:
+            report.violations.append(ContractViolation(
+                "decode-reduce", "",
+                f"decode_reduce failed abstract eval: "
+                f"{type(e).__name__}: {e}"))
+            return report
+        ref = _leaf_paths(structs)
+        got = _leaf_paths(reduced)
+        if len(ref) != len(got):
+            report.violations.append(ContractViolation(
+                "decode-reduce", "",
+                f"leaf count changed: {len(ref)} -> {len(got)}"))
+        else:
+            for (path, r), (_, g) in zip(ref, got):
+                if tuple(r.shape) != tuple(g.shape):
+                    report.violations.append(ContractViolation(
+                        "decode-reduce", path,
+                        f"reduced shape {tuple(g.shape)} != model shape "
+                        f"{tuple(r.shape)} (a leftover client axis means "
+                        f"the reduce never happened)"))
+                if not jnp.issubdtype(jnp.dtype(g.dtype), jnp.floating):
+                    report.violations.append(ContractViolation(
+                        "decode-reduce", path,
+                        f"reduced dtype {jnp.dtype(g.dtype).name} is not "
+                        f"a floating accumulation dtype"))
+    return report
+
+
+def _stack_structs(structs, n: int):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype),
+        structs)

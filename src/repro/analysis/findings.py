@@ -1,0 +1,82 @@
+"""Finding / pragma datatypes shared by the linter and its CLI.
+
+A ``Finding`` is one rule violation at one source location. Suppression is
+via the allow-pragma (spelled with a real rule id, e.g. RPL001)
+
+    # repro: allow[RPLxxx] <reason>
+
+on the SAME line as the finding or the line immediately above it. The
+reason is mandatory — a bare ``allow[...]`` does not suppress (the whole
+point is that every deliberate violation carries its justification next
+to the code, machine-audited instead of documented in prose).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import re
+from typing import Optional
+
+PRAGMA_RE = re.compile(
+    r"#\s*repro:\s*allow\[(?P<rule>RPL\d{3})\]\s*(?P<reason>.*?)\s*$")
+
+
+class Severity(enum.Enum):
+    ERROR = "error"      # a shipped-bug class: fails --strict
+    WARNING = "warning"  # suspicious but not a known shipped class
+
+    def __str__(self):
+        return self.value
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one location."""
+    rule: str            # "RPL001"
+    path: str            # file path as given to the linter
+    line: int            # 1-based
+    col: int             # 0-based (ast convention)
+    message: str
+    severity: Severity = Severity.ERROR
+    suppressed: bool = False          # an allow-pragma covered it
+    suppression: Optional[str] = None  # the pragma's reason text
+
+    def format(self) -> str:
+        tag = " (allowed: %s)" % self.suppression if self.suppressed else ""
+        return (f"{self.path}:{self.line}:{self.col + 1}: "
+                f"{self.rule} [{self.severity}] {self.message}{tag}")
+
+    def to_json(self) -> dict:
+        return {
+            "rule": self.rule, "path": self.path, "line": self.line,
+            "col": self.col, "message": self.message,
+            "severity": str(self.severity), "suppressed": self.suppressed,
+            "suppression": self.suppression,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class Pragma:
+    """One parsed ``# repro: allow[RPLxxx] reason`` comment."""
+    rule: str
+    line: int
+    reason: str
+
+    @property
+    def valid(self) -> bool:
+        return bool(self.reason)
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "line": self.line, "reason": self.reason}
+
+
+def parse_pragmas(source: str) -> list[Pragma]:
+    """All allow-pragmas in a source file (valid or not — pragmas with an
+    empty reason are reported as findings by the linter, not honored)."""
+    out = []
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = PRAGMA_RE.search(text)
+        if m:
+            out.append(Pragma(rule=m.group("rule"), line=i,
+                              reason=m.group("reason").strip()))
+    return out

@@ -1,0 +1,249 @@
+"""Per-module AST index shared by every lint rule.
+
+One parse, one walk: parent links, the set of TRACED functions (bodies
+that run under a JAX trace — ``jit`` / ``vmap`` / ``pmap`` / ``lax.scan``
+/ ``shard_map`` — where host randomness and tracer-typed Python control
+flow are the shipped bug classes), the subset that are ``shard_map``
+BODIES (where collective axis names are bound and pre-collective
+downcasts matter), and simple name->value resolution for function-scope
+assignments (``tile = pl.BlockSpec(...)``; ``out_specs=tile``).
+
+Everything here is a lexical heuristic: a function is "traced" when it is
+decorated with a tracing transform or passed by name/lambda as the traced
+argument of one, or is lexically nested inside such a function. That is
+deliberately conservative in both directions — rules built on it aim at
+the repo's real bug classes, not at soundness.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Optional, Union
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+# callables that TRACE one or more of their arguments: final dotted
+# component -> positional indices of the traced function argument(s)
+# (``jax.jit``, ``functools.partial(jax.jit, ...)`` decorators are
+# unwrapped separately).
+_TRACING_CALLS = {
+    "jit": (0,), "pjit": (0,), "vmap": (0,), "pmap": (0,),
+    "scan": (0,), "shard_map": (0,), "checkify": (0,),
+    "eval_shape": (0,), "grad": (0,), "value_and_grad": (0,),
+    "fori_loop": (2,), "while_loop": (0, 1), "cond": (1, 2),
+}
+
+# the subset that additionally BINDS collective axis names for its body
+_AXIS_BINDING_CALLS = {"shard_map", "pmap"}
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.lax.scan`` for the corresponding Attribute chain; None for
+    anything that is not a pure Name/Attribute chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def last_component(node: ast.AST) -> Optional[str]:
+    name = dotted_name(node)
+    return name.rsplit(".", 1)[-1] if name else None
+
+
+def _unwrap_partial(call: ast.Call) -> Optional[ast.AST]:
+    """``functools.partial(jax.jit, ...)`` -> the ``jax.jit`` node."""
+    if last_component(call.func) == "partial" and call.args:
+        return call.args[0]
+    return None
+
+
+def _call_static_argnames(call: ast.Call) -> set:
+    """static_argnames=("bits", "block") values off a jit(...) /
+    partial(jax.jit, ...) call — those parameters are Python values, not
+    tracers, and must never be tainted."""
+    names = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+            for e in elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                    names.add(e.value)
+    return names
+
+
+@dataclasses.dataclass
+class TracedInfo:
+    """Why a function counts as traced, and which params are static."""
+    reason: str                      # "decorator:jit" / "arg-of:scan" / ...
+    static_params: set = dataclasses.field(default_factory=set)
+    axis_binding: bool = False       # shard_map / pmap body
+
+
+class ModuleIndex:
+    """All the per-module facts the rules need, built in one pass."""
+
+    def __init__(self, tree: ast.Module):
+        self.tree = tree
+        self.parents: dict = {}
+        self.functions: list = []
+        # FuncNode -> TracedInfo for DIRECTLY traced functions (nesting is
+        # resolved by enclosing_traced / in_traced below)
+        self.traced: dict = {}
+        # simple Name -> value-node assignments, innermost-scope-agnostic
+        # (good enough to resolve ``out_specs=tile`` in kernel modules)
+        self.assignments: dict = {}
+        self._func_defs: dict = {}    # name -> [FuncNode]
+        self._build()
+
+    # -- construction -------------------------------------------------
+
+    def _build(self):
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                self.functions.append(node)
+                if not isinstance(node, ast.Lambda):
+                    self._func_defs.setdefault(node.name, []).append(node)
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        self.assignments[t.id] = node.value
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._mark_decorated(node)
+            elif isinstance(node, ast.Call):
+                self._mark_call(node)
+
+    def _mark_decorated(self, func):
+        for dec in func.decorator_list:
+            target, static = dec, set()
+            if isinstance(dec, ast.Call):
+                inner = _unwrap_partial(dec)
+                if inner is not None:   # @functools.partial(jax.jit, ...)
+                    target = inner
+                    static = _call_static_argnames(dec)
+                else:                   # @jax.jit(static_argnames=...)
+                    target = dec.func
+                    static = _call_static_argnames(dec)
+            comp = last_component(target)
+            if comp in _TRACING_CALLS:
+                self.traced[func] = TracedInfo(
+                    reason=f"decorator:{comp}", static_params=static,
+                    axis_binding=comp in _AXIS_BINDING_CALLS)
+
+    def _mark_call(self, call: ast.Call):
+        comp = last_component(call.func)
+        if comp not in _TRACING_CALLS:
+            return
+        static = _call_static_argnames(call)
+        info = TracedInfo(reason=f"arg-of:{comp}", static_params=static,
+                          axis_binding=comp in _AXIS_BINDING_CALLS)
+        for pos in _TRACING_CALLS[comp]:
+            if pos >= len(call.args):
+                continue
+            traced_arg = call.args[pos]
+            if isinstance(traced_arg, ast.Lambda):
+                self.traced.setdefault(traced_arg, info)
+            elif isinstance(traced_arg, ast.Name):
+                for fn in self._func_defs.get(traced_arg.id, []):
+                    self.traced.setdefault(fn, info)
+            elif isinstance(traced_arg, ast.Call):
+                # shard_map(functools.partial(body, ...), ...)
+                inner = _unwrap_partial(traced_arg)
+                if isinstance(inner, ast.Name):
+                    for fn in self._func_defs.get(inner.id, []):
+                        self.traced.setdefault(fn, info)
+
+    # -- queries ------------------------------------------------------
+
+    def enclosing_function(self, node: ast.AST) -> Optional[FuncNode]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def enclosing_traced(self, node: ast.AST) -> Optional[TracedInfo]:
+        """The TracedInfo governing ``node``: the nearest enclosing
+        function that is directly traced, or any ancestor of one (bodies
+        nested inside a traced body are traced too)."""
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)) and cur in self.traced:
+                return self.traced[cur]
+            cur = self.parents.get(cur)
+        return None
+
+    def in_traced(self, node: ast.AST) -> bool:
+        return self.enclosing_traced(node) is not None
+
+    def in_axis_binding(self, node: ast.AST) -> bool:
+        """Is ``node`` lexically inside a shard_map / pmap body (where
+        collective axis names are bound)?"""
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                info = self.traced.get(cur)
+                if info is not None and info.axis_binding:
+                    return True
+            cur = self.parents.get(cur)
+        return False
+
+    def shard_map_body(self, node: ast.AST) -> Optional[FuncNode]:
+        """The nearest enclosing function that IS a shard_map/pmap body."""
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                info = self.traced.get(cur)
+                if info is not None and info.axis_binding:
+                    return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def resolve(self, node: ast.AST) -> ast.AST:
+        """Follow ONE level of ``name = <value>`` assignment (enough for
+        the kernel modules' ``tile = pl.BlockSpec(...)`` idiom)."""
+        if isinstance(node, ast.Name) and node.id in self.assignments:
+            return self.assignments[node.id]
+        return node
+
+    def tainted_params(self, func: FuncNode) -> set:
+        """Names that hold TRACER values inside a traced function: the
+        function's own parameters (minus any jit static_argnames) plus
+        one level of tuple-unpacking of those parameters (the
+        ``state, theta = carry`` scan-body idiom)."""
+        info = self.traced.get(func) or self.enclosing_traced(func)
+        static = info.static_params if info else set()
+        args = getattr(func, "args", None)
+        if args is None:
+            return set()
+        names = {a.arg for a in (args.posonlyargs + args.args
+                                 + args.kwonlyargs)}
+        if args.vararg:
+            names.add(args.vararg.arg)
+        names -= static
+        body = func.body if isinstance(func.body, list) else []
+        for stmt in body:
+            if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and isinstance(stmt.value, ast.Name)
+                    and stmt.value.id in names):
+                tgt = stmt.targets[0]
+                if isinstance(tgt, (ast.Tuple, ast.List)):
+                    for e in tgt.elts:
+                        if isinstance(e, ast.Name):
+                            names.add(e.id)
+        return names

@@ -1,0 +1,311 @@
+"""The RPL lint rules — one per bug class this repo has actually shipped.
+
+| rule   | bug class (the PR that fixed it by hand)                        |
+| ------ | --------------------------------------------------------------- |
+| RPL001 | process-wide ``jax.device_count()`` branching in dispatch code   |
+|        | (PR 4: the guard that silently dropped every multi-dim leaf off  |
+|        | the kernel path on multi-device hosts)                           |
+| RPL002 | host randomness / constant ``PRNGKey`` literals inside traced    |
+|        | code (a fresh draw per call becomes ONE draw baked at trace time)|
+| RPL003 | Python ``if`` / ``float()`` / ``.item()`` on tracer-typed values |
+|        | in traced bodies (TracerBoolConversionError at best, silent      |
+|        | trace-time constant-folding at worst)                            |
+| RPL004 | dtype downcast inside a ``shard_map`` body BEFORE the crossing   |
+|        | collective (PR 5: partials must cross in the accumulation dtype  |
+|        | with ONE downcast after the psum)                                |
+| RPL005 | collective axis names used outside any ``shard_map``/``pmap``    |
+|        | body (unbound axis name -> NameError at trace time on the mesh   |
+|        | path nobody ran in CI)                                           |
+| RPL006 | Pallas BlockSpec lane misalignment (last block dim % 128 != 0 —  |
+|        | interpret mode accepts what Mosaic rejects) and accumulating     |
+|        | output blocks revisited across non-innermost grid axes (the      |
+|        | decode-reduce kernel's correctness precondition)                 |
+
+Each rule is ``fn(index, path) -> list[Finding]``. Suppression/pragma
+handling lives in ``linter.py``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Callable
+
+from .findings import Finding, Severity
+from .modindex import ModuleIndex, dotted_name, last_component
+
+_COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "all_gather",
+                "psum_scatter", "all_to_all", "ppermute"}
+_LOW_PRECISION = {"jnp.bfloat16", "jnp.float16", "np.float16",
+                  "jax.numpy.bfloat16", "jax.numpy.float16",
+                  "numpy.float16"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "aval"}
+
+
+def _finding(rule, path, node, msg, severity=Severity.ERROR) -> Finding:
+    return Finding(rule=rule, path=path, line=node.lineno,
+                   col=node.col_offset, message=msg, severity=severity)
+
+
+# ---------------------------------------------------------------------------
+# RPL001 — process-wide device-count dispatch
+# ---------------------------------------------------------------------------
+
+def rpl001(index: ModuleIndex, path: str) -> list:
+    out = []
+    for node in ast.walk(index.tree):
+        if isinstance(node, ast.Call):
+            comp = last_component(node.func)
+            if comp in ("device_count", "local_device_count"):
+                out.append(_finding(
+                    "RPL001", path, node,
+                    f"process-wide jax.{comp}() in library code: dispatch "
+                    f"on the LEAF's .sharding (cf. compression._kernel_"
+                    f"route), not global device topology — the PR-4 bug "
+                    f"class (multi-dim leaves silently dropped off the "
+                    f"kernel path on multi-device hosts)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL002 — host randomness in traced code
+# ---------------------------------------------------------------------------
+
+def rpl002(index: ModuleIndex, path: str) -> list:
+    out = []
+    for node in ast.walk(index.tree):
+        if not (isinstance(node, ast.Call) and index.in_traced(node)):
+            continue
+        name = dotted_name(node.func) or ""
+        root = name.split(".", 1)[0]
+        if (name.startswith(("np.random.", "numpy.random."))
+                or root == "random"):
+            out.append(_finding(
+                "RPL002", path, node,
+                f"host randomness '{name}' inside a traced function: the "
+                f"draw is baked in as a trace-time constant (one value for "
+                f"every round/client) — thread a jax.random key instead"))
+        elif (last_component(node.func) == "PRNGKey" and node.args
+                and isinstance(node.args[0], ast.Constant)):
+            out.append(_finding(
+                "RPL002", path, node,
+                "constant PRNGKey literal inside a traced function: every "
+                "trace re-derives the SAME stream — fold/split a key "
+                "threaded through the caller instead"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL003 — tracer-typed Python control flow / host extraction
+# ---------------------------------------------------------------------------
+
+def _refs_tainted(index: ModuleIndex, expr: ast.AST, tainted: set) -> bool:
+    """Does ``expr`` read a tainted name OTHER than through a trace-static
+    attribute (``x.shape`` / ``x.ndim`` / ``x.dtype`` / ``len(x)``)?"""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name) and node.id in tainted:
+            parent = index.parents.get(node)
+            if (isinstance(parent, ast.Attribute)
+                    and parent.attr in _STATIC_ATTRS):
+                continue
+            if (isinstance(parent, ast.Call)
+                    and last_component(parent.func) == "len"):
+                continue
+            return True
+    return False
+
+
+def rpl003(index: ModuleIndex, path: str) -> list:
+    out = []
+    for node in ast.walk(index.tree):
+        if not index.in_traced(node):
+            continue
+        if isinstance(node, ast.Call):
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item" and not node.args):
+                out.append(_finding(
+                    "RPL003", path, node,
+                    ".item() inside a traced function forces a host sync "
+                    "and fails under jit — keep the value on device"))
+                continue
+            func = index.enclosing_function(node)
+            tainted = index.tainted_params(func) if func else set()
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in ("float", "int", "bool")
+                    and len(node.args) == 1
+                    and _refs_tainted(index, node.args[0], tainted)):
+                out.append(_finding(
+                    "RPL003", path, node,
+                    f"{node.func.id}() on a tracer-typed value inside a "
+                    f"traced function: ConcretizationTypeError under jit "
+                    f"— use jnp casts / keep it abstract"))
+        elif isinstance(node, (ast.If, ast.While)):
+            func = index.enclosing_function(node)
+            tainted = index.tainted_params(func) if func else set()
+            if _refs_tainted(index, node.test, tainted):
+                kw = "if" if isinstance(node, ast.If) else "while"
+                out.append(_finding(
+                    "RPL003", path, node,
+                    f"Python `{kw}` on a tracer-typed value inside a "
+                    f"traced function: branches on data need lax.cond/"
+                    f"lax.select (shape/dtype/ndim attribute tests are "
+                    f"fine and not flagged)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL004 — downcast before the crossing collective
+# ---------------------------------------------------------------------------
+
+def _is_low_precision(node: ast.AST) -> bool:
+    name = dotted_name(node)
+    if name in _LOW_PRECISION:
+        return True
+    return (isinstance(node, ast.Constant)
+            and node.value in ("bfloat16", "float16"))
+
+
+def rpl004(index: ModuleIndex, path: str) -> list:
+    out = []
+    for node in ast.walk(index.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "astype" and node.args
+                and _is_low_precision(node.args[0])):
+            continue
+        body = index.shard_map_body(node)
+        if body is None:
+            continue
+        later_collective = any(
+            isinstance(n, ast.Call)
+            and last_component(n.func) in _COLLECTIVES
+            and n.lineno > node.lineno
+            for n in ast.walk(body))
+        if later_collective:
+            out.append(_finding(
+                "RPL004", path, node,
+                "low-precision downcast inside a shard_map body BEFORE "
+                "the crossing collective: partials must cross the mesh in "
+                "the accumulation dtype (f32) with ONE downcast after the "
+                "reduction, or each device slice rounds independently "
+                "(the PR-5 bf16 invariant)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL005 — collective axis-name hygiene
+# ---------------------------------------------------------------------------
+
+def rpl005(index: ModuleIndex, path: str) -> list:
+    out = []
+    for node in ast.walk(index.tree):
+        if not (isinstance(node, ast.Call)
+                and last_component(node.func) in _COLLECTIVES):
+            continue
+        if index.in_axis_binding(node):
+            continue
+        comp = last_component(node.func)
+        out.append(_finding(
+            "RPL005", path, node,
+            f"collective '{comp}' outside any shard_map/pmap body: its "
+            f"axis name has no binding context here — it will fail at "
+            f"trace time on the mesh path (move it inside the shard_map "
+            f"body, or allow-pragma a deliberate vmap(axis_name=...) "
+            f"site)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL006 — Pallas BlockSpec lane alignment + accumulating output blocks
+# ---------------------------------------------------------------------------
+
+def _blockspec_findings(index: ModuleIndex, path: str, spec: ast.AST,
+                        is_out: bool) -> list:
+    out = []
+    spec = index.resolve(spec)
+    if isinstance(spec, (ast.Tuple, ast.List)):
+        for elt in spec.elts:
+            out.extend(_blockspec_findings(index, path, elt, is_out))
+        return out
+    if not (isinstance(spec, ast.Call)
+            and last_component(spec.func) == "BlockSpec"):
+        return out
+    if spec.args and isinstance(spec.args[0], ast.Tuple):
+        elts = spec.args[0].elts
+        if elts and isinstance(elts[-1], ast.Constant) \
+                and isinstance(elts[-1].value, int) \
+                and elts[-1].value % 128 != 0:
+            out.append(_finding(
+                "RPL006", path, spec,
+                f"BlockSpec last block dim {elts[-1].value} is not "
+                f"128-lane aligned: interpret mode accepts it but Mosaic "
+                f"lane-width rules on real TPU may not — retile, or "
+                f"allow-pragma a store that is pending on-TPU validation"))
+    if is_out and len(spec.args) >= 2 \
+            and isinstance(spec.args[1], ast.Lambda):
+        lam = spec.args[1]
+        params = [a.arg for a in lam.args.args]
+        used = {n.id for n in ast.walk(lam.body)
+                if isinstance(n, ast.Name)}
+        unused_idx = [i for i, p in enumerate(params) if p not in used]
+        used_idx = [i for i, p in enumerate(params) if p in used]
+        if unused_idx and used_idx and min(unused_idx) < max(used_idx):
+            out.append(_finding(
+                "RPL006", path, spec,
+                "accumulating output block: the index_map ignores grid "
+                "axes that are not innermost — Pallas revisits an output "
+                "block only when the varying axes are the trailing "
+                "(innermost) grid dims; reorder the grid (cf. the "
+                "decode-reduce kernel's c-innermost contract)"))
+    return out
+
+
+def rpl006(index: ModuleIndex, path: str) -> list:
+    out = []
+    for node in ast.walk(index.tree):
+        if not (isinstance(node, ast.Call)
+                and last_component(node.func) == "pallas_call"):
+            continue
+        for kw in node.keywords:
+            if kw.arg in ("in_specs", "out_specs"):
+                out.extend(_blockspec_findings(index, path, kw.value,
+                                               is_out=kw.arg == "out_specs"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+RULES: dict = {
+    "RPL001": (rpl001, "process-wide device_count() dispatch in library "
+                       "code (dispatch on leaf .sharding instead)"),
+    "RPL002": (rpl002, "host randomness / constant PRNGKey literal inside "
+                       "traced code"),
+    "RPL003": (rpl003, "Python if/float()/.item() on tracer-typed values "
+                       "in traced bodies"),
+    "RPL004": (rpl004, "low-precision downcast inside a shard_map body "
+                       "before the crossing collective"),
+    "RPL005": (rpl005, "collective with an unbound axis name (outside any "
+                       "shard_map/pmap body)"),
+    "RPL006": (rpl006, "Pallas BlockSpec lane misalignment / accumulating "
+                       "output block not innermost"),
+}
+
+
+def rule_table() -> str:
+    lines = ["rule    description", "------  -----------"]
+    for rid, (_, desc) in sorted(RULES.items()):
+        lines.append(f"{rid}  {desc}")
+    return "\n".join(lines)
+
+
+def get_rules(names=None) -> dict:
+    """Subset of RULES by id (all when ``names`` is None)."""
+    if names is None:
+        return dict(RULES)
+    unknown = set(names) - set(RULES)
+    if unknown:
+        raise KeyError(f"unknown rule(s): {sorted(unknown)}")
+    return {k: RULES[k] for k in names}
+
+
+RuleFn = Callable[[ModuleIndex, str], list]

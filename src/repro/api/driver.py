@@ -148,7 +148,8 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
          client_batches, gamma, key, active=None, *,
          mesh=None, client_axis: str = "clients",
          client_mode: str = "vmap", uplink: str = "gather",
-         drift_metric: bool = True):
+         drift_metric: bool = True, sanitize: bool = False,
+         _comm_audit: bool = False):
     """One federated MM round (Algorithm 2, every axis of the spec applied).
     ``client_batches`` is a pytree with a leading client axis of size n.
     ``active`` optionally overrides the A5 draw with a precomputed (n,)
@@ -211,7 +212,33 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
         trajectories match ``"gather"`` to allclose, not bit-for-bit
         (pinned in tests/test_sharded_driver.py).
         ``collective_payload_bytes`` reports the ACTUAL per-device psum
-        operand bytes (the f32 partial aggregate)."""
+        operand bytes (the f32 partial aggregate).
+
+    sanitize — the Layer-3 runtime sanitizer (``repro.analysis.runtime``):
+    threads ``jax.experimental.checkify`` NaN / div-by-zero / OOB checks
+    through the whole round (including vmap'd clients, the client scan and
+    the shard_map body) and raises EAGERLY on the first tripped check,
+    plus cross-checks the analytic ``Compressor.payload_bytes`` model
+    against the bytes measured off the actual encoded buffers (the
+    comm-bytes audit). checkify only ADDS error outputs — the primal
+    math is untouched, so trajectories stay bit-identical (pinned in
+    tests/test_sanitizer.py). Off by default and zero-cost when off.
+    ``step(sanitize=True)`` throws eagerly so it must not itself be
+    wrapped in ``jax.jit`` — jit your own wrapper around
+    ``step(sanitize=False)``, or use ``run(..., sanitize=True)`` which
+    checkifies the scanned trajectory correctly."""
+    if sanitize:
+        from ..analysis.runtime import checkified
+
+        def _plain(state, client_batches, gamma, key, active):
+            return step(problem, spec, state, client_batches, gamma, key,
+                        active, mesh=mesh, client_axis=client_axis,
+                        client_mode=client_mode, uplink=uplink,
+                        drift_metric=drift_metric, _comm_audit=True)
+        err, out = checkified(_plain)(state, client_batches, gamma, key,
+                                      active)
+        err.throw()
+        return out
     n, p, alpha = spec.n_clients, spec.participation, spec.alpha
     mu = spec.client_weights()
     param_space = spec.aggregation == "parameter"
@@ -443,6 +470,14 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
     comm = comp.round_metrics(state.x, p=p)
     per_client = (wire_bytes_client if use_wire
                   else comm["payload_bytes_per_client"])
+    if _comm_audit and use_wire:
+        # trace-time: wire_bytes_client is a static Python float (read off
+        # the encoded buffer shapes), so a lying payload_bytes model fails
+        # HERE with a diagnosable error, not downstream in a metrics plot
+        from ..analysis.runtime import assert_comm_audit
+        assert_comm_audit(
+            comp, state.x, per_client,
+            where=f"step(client_mode={client_mode!r}, uplink={uplink!r})")
     metrics = {
         "n_active": jnp.sum(mask),
         # actual encoded-buffer bytes on the wire path, analytic otherwise
@@ -492,7 +527,8 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
         state0: Optional[DriverState] = None,
         scan_batch_bytes_max: Optional[int] = None,
         mesh=None, client_axis: str = "clients",
-        client_mode: str = "vmap", uplink: str = "gather"):
+        client_mode: str = "vmap", uplink: str = "gather",
+        sanitize: bool = False):
     """Drive ``n_rounds`` of the MM recursion; returns
     ``(final DriverState, metrics)`` where metrics is a stacked-pytree dict
     (each key an array with leading round axis). Use ``history_list`` for
@@ -535,8 +571,23 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
     single-device run, ``uplink="reduce"`` fuses decode/mask/weighting
     shard-locally and psums the partial aggregate (allclose to gather;
     O(n/axis_size) instead of O(n) payload memory per device).
+    sanitize: thread ``jax.experimental.checkify`` NaN / div-by-zero /
+    OOB-index checks through the WHOLE trajectory (one checkify around the
+    ``lax.scan``; per-round on the python fallback) and run the comm-bytes
+    audit every round — see ``step``'s docstring. The first tripped check
+    raises ``checkify.JaxRuntimeError`` with the failing round's origin;
+    with no trips the returned trajectory is BIT-IDENTICAL to
+    ``sanitize=False`` (checkify only adds error outputs; pinned in
+    tests/test_sanitizer.py). Off by default, zero-cost when off.
+    Federated runs only (centralized ``spec=None`` rejects it).
     """
     problem = as_problem(problem)
+
+    if sanitize and spec is None:
+        raise ValueError("sanitize=True is the federated driver's runtime "
+                         "sanitizer; the centralized path does not thread "
+                         "it — wrap centralized_step in "
+                         "analysis.runtime.checkified yourself")
 
     if spec is None:
         return _run_centralized(problem, x0, data, schedule,
@@ -662,7 +713,8 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
                 gamma, k, t_idx, batch = xs
             state, m = step(problem, spec, state, batch, gamma, k,
                             mesh=mesh, client_axis=client_axis,
-                            client_mode=client_mode, uplink=uplink)
+                            client_mode=client_mode, uplink=uplink,
+                            _comm_audit=sanitize)
             m, theta_new, diag_new = round_metrics(state, m, gamma,
                                                    theta_prev, diag_prev,
                                                    t_idx)
@@ -674,14 +726,35 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
         t_idxs = jnp.arange(n_rounds)
         xs = ((gammas, round_keys, t_idxs) if static
               else (gammas, round_keys, t_idxs, batches))
-        (state, _, _), hist = jax.lax.scan(
-            body, (state0, theta_prev0, diag_prev0), xs)
+        if sanitize:
+            # ONE checkify around the whole scanned trajectory: the checks
+            # ride the scan body's trace, so err carries the first tripped
+            # check of ANY round; thrown eagerly here, after the scan
+            from ..analysis.runtime import checkified
+            err, ((state, _, _), hist) = checkified(
+                lambda c0, x: jax.lax.scan(body, c0, x))(
+                    (state0, theta_prev0, diag_prev0), xs)
+            err.throw()
+        else:
+            (state, _, _), hist = jax.lax.scan(
+                body, (state0, theta_prev0, diag_prev0), xs)
         return state, hist
 
     # python fallback: identical math, one jitted step per round
-    step_j = jax.jit(lambda st, b, g, k: step(
-        problem, spec, st, b, g, k, mesh=mesh, client_axis=client_axis,
-        client_mode=client_mode, uplink=uplink))
+    def _base(st, b, g, k):
+        return step(problem, spec, st, b, g, k, mesh=mesh,
+                    client_axis=client_axis, client_mode=client_mode,
+                    uplink=uplink, _comm_audit=sanitize)
+    if sanitize:
+        from ..analysis.runtime import checkified
+        _checked_j = jax.jit(checkified(_base))
+
+        def step_j(st, b, g, k):
+            err, out = _checked_j(st, b, g, k)
+            err.throw()
+            return out
+    else:
+        step_j = jax.jit(_base)
     state, theta_prev, diag_prev = state0, theta_prev0, diag_prev0
     hist = []
     for t in range(n_rounds):

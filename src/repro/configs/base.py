@@ -7,7 +7,6 @@ the CPU smoke-test variant (2 layers, d_model <= 512, <= 4 experts).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

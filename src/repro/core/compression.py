@@ -382,6 +382,7 @@ def _kernel_route(x, g: int, kernel_threshold: int) -> str:
         # the conservative behavior for multi-dim leaves so a pjit'd
         # caller never pays a GSPMD gather around an unshardable
         # pallas_call
+        # repro: allow[RPL001] tracer fallback only — eager leaves above
         if x.ndim > 1 and jax.device_count() > 1:
             return "jnp"
         return "kernel"
@@ -693,6 +694,7 @@ def decode_reduce_leaf(p, w, kernel_threshold: int = KERNEL_DISPATCH_MIN,
         if isinstance(p.codes, jax.core.Tracer):
             # sharding unknowable at trace time: only safe on a
             # single-device process (mirrors _kernel_route)
+            # repro: allow[RPL001] tracer fallback mirroring _kernel_route
             route_ok = jax.device_count() == 1
         else:
             sh = getattr(p.codes, "sharding", None)

@@ -28,10 +28,9 @@ from __future__ import annotations
 import dataclasses
 from typing import NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 
-from .surrogate import Surrogate, tree_sub
+from .surrogate import Surrogate
 from .compression import Compressor, identity
 from .. import api
 

@@ -33,7 +33,6 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .surrogate import tree_add, tree_axpy, tree_scale, tree_sub, tree_sq_norm
 from ..optim.optimizers import adam_init, adam_update
 from .. import api
 

@@ -19,7 +19,6 @@ Two concrete instances from Appendix C:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

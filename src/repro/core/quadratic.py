@@ -17,7 +17,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from .surrogate import Surrogate, tree_dot, tree_sq_norm
+from .surrogate import Surrogate, tree_sq_norm
 from . import prox as _prox
 
 

@@ -16,9 +16,7 @@ T(s) = argmin_theta  eta ||theta||^2 + Tr(theta^T theta s1) - 2 Tr(theta^T s2)
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from .surrogate import Surrogate

@@ -238,6 +238,7 @@ def quantize_encode_grouped_pallas(x2, u2=None, *, bits: int = 8,
     # been exercised for this store yet (see ROADMAP). If lowering rejects
     # it on hardware, fall back to the jnp encode path via
     # kernel_threshold until the scales store is retiled.
+    # repro: allow[RPL006] (rt, 1) scales store pending on-TPU validation
     out_specs = [tile, pl.BlockSpec((rt, 1), lambda i, j: (i, j))]
     out_shape = [jax.ShapeDtypeStruct((n_tiles * rt, D), jnp.int8),
                  jax.ShapeDtypeStruct((n_tiles * rt, G), jnp.float32)]
@@ -319,6 +320,7 @@ def decode_reduce_grouped_pallas(codes, scales, w, *, bits: int = 8,
         grid=grid,
         in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
                   pl.BlockSpec((1, rt, group), lambda i, j, c: (c, i, j)),
+                  # repro: allow[RPL006] (1, rt, 1) scales load pending on-TPU validation
                   pl.BlockSpec((1, rt, 1), lambda i, j, c: (c, i, j))],
         out_specs=pl.BlockSpec((rt, group), lambda i, j, c: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n_tiles * rt, D), jnp.float32),

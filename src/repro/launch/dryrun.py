@@ -235,7 +235,11 @@ def compile_one(arch_id: str, shape_name: str, multi_pod: bool,
             **extra,
         }
         return result
-    except Exception as e:
+    except (ValueError, TypeError, NotImplementedError, RuntimeError) as e:
+        # compile/lowering failures only (shape errors, unsupported ops,
+        # XlaRuntimeError/Mosaic are RuntimeError subclasses): those are a
+        # sweep RESULT. Anything else — KeyboardInterrupt, OOM kills,
+        # our own bugs (AttributeError/KeyError/...) — propagates
         return {"arch": arch_id, "shape": shape_name, "multi_pod": multi_pod,
                 "status": "error", "error": f"{type(e).__name__}: {e}",
                 "traceback": traceback.format_exc()[-2000:]}

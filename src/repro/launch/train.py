@@ -15,7 +15,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 import repro.configs as C
 from repro.data.synthetic import token_stream

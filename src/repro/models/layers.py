@@ -3,8 +3,6 @@ cross), SwiGLU MLP, embeddings. Pure functions over param dicts; bf16-friendly
 (norm + softmax statistics in f32)."""
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

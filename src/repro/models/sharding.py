@@ -8,7 +8,6 @@ in DESIGN.md section 5.
 """
 from __future__ import annotations
 
-import re
 from typing import Optional
 
 import jax

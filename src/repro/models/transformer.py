@@ -18,8 +18,6 @@ unrolls the cycle — compact HLO even for 94-layer, 128-expert configs.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

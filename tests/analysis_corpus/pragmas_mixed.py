@@ -1,0 +1,26 @@
+"""Pragma accounting: valid suppression, reason-less, stale."""
+import jax
+
+
+def routed(x):
+    # repro: allow[RPL001] corpus case: pragma on the line above, with reason
+    if jax.device_count() > 1:
+        return "multi"
+    return "single"
+
+
+def routed_same_line(x):
+    if jax.device_count() > 1:  # repro: allow[RPL001] same-line pragma
+        return "multi"
+    return "single"
+
+
+def unexcused(x):
+    # repro: allow[RPL001]
+    if jax.device_count() > 1:  # expect: RPL001
+        return "multi"
+    return "single"
+
+
+# repro: allow[RPL003] nothing fires RPL003 here, so this pragma is stale
+WIDTH = 128

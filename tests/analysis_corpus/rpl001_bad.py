@@ -1,0 +1,10 @@
+"""RPL001 firing: process-wide device-count branching in dispatch code."""
+import jax
+
+
+def route(x):
+    if x.ndim > 1 and jax.device_count() > 1:  # expect: RPL001
+        return "kernel"
+    if jax.local_device_count() == 1:  # expect: RPL001
+        return "flat"
+    return "eager"

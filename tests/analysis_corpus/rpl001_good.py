@@ -1,0 +1,8 @@
+"""RPL001 non-firing: dispatch on the LEAF's sharding, not global topology."""
+
+
+def route(x):
+    sh = getattr(x, "sharding", None)
+    if x.ndim > 1 and sh is not None and len(sh.device_set) > 1:
+        return "shard_map"
+    return "kernel"

@@ -1,0 +1,20 @@
+"""RPL002 firing: host randomness / constant PRNGKey inside traced code."""
+import random
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def dithered(x):
+    eps = np.random.normal(size=(4,))  # expect: RPL002
+    key = jax.random.PRNGKey(0)  # expect: RPL002
+    return x + eps + jax.random.normal(key, x.shape)
+
+
+def scanned(xs):
+    def body(c, x):
+        jitter = random.random()  # expect: RPL002
+        return c + jitter * x, c
+
+    return jax.lax.scan(body, 0.0, xs)

@@ -1,0 +1,19 @@
+"""RPL002 non-firing: keys threaded through the caller; host randomness
+only OUTSIDE traced code."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def dithered(x, key):
+    return x + jax.random.normal(key, x.shape)
+
+
+def host_batch(shape):
+    # host randomness in eager setup code is fine
+    return np.random.normal(size=shape)
+
+
+def root_key():
+    # a constant PRNGKey at the top of the host-side chain is the idiom
+    return jax.random.PRNGKey(0)

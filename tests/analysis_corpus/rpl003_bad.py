@@ -1,0 +1,28 @@
+"""RPL003 firing: Python control flow / host extraction on tracers."""
+import jax
+
+
+@jax.jit
+def clip_if_large(x, thresh):
+    if x > thresh:  # expect: RPL003
+        return thresh
+    return x
+
+
+@jax.jit
+def as_host_float(x):
+    return float(x) * 2.0  # expect: RPL003
+
+
+@jax.jit
+def host_sync(x):
+    return x.sum().item()  # expect: RPL003
+
+
+def scanned(xs):
+    def body(c, x):
+        while c < x:  # expect: RPL003
+            c = c + 1.0
+        return c, c
+
+    return jax.lax.scan(body, 0.0, xs)

@@ -1,0 +1,26 @@
+"""RPL003 non-firing: static attribute tests and lax control flow."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def reduce_leading(x):
+    if x.ndim > 1:  # .shape/.ndim/.dtype tests are trace-static: fine
+        return jnp.sum(x, axis=0)
+    return x
+
+
+@jax.jit
+def clip_if_large(x, thresh):
+    return jax.lax.select(x > thresh, thresh, x)
+
+
+@jax.jit
+def sized(x, n):
+    if len(x.shape) == 2:  # len() of a static attribute: fine
+        return x * n
+    return x
+
+
+def host_extract(arr):
+    return float(arr[0])  # not traced: fine

@@ -1,0 +1,15 @@
+"""RPL004 firing: downcast inside a shard_map body BEFORE the psum."""
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
+
+
+def partial_reduce(mesh, x):
+    def body(xl):
+        part = xl.sum(axis=0).astype(jnp.bfloat16)  # expect: RPL004
+        return jax.lax.psum(part, "clients")
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(PartitionSpec("clients"),),
+                     out_specs=PartitionSpec())(x)

@@ -1,0 +1,12 @@
+"""RPL005 firing: collectives with no axis-binding context."""
+import jax
+
+
+def aggregate(x):
+    return jax.lax.psum(x, "clients")  # expect: RPL005
+
+
+@jax.jit
+def gather_all(x):
+    # jit alone binds NO axis names — still a firing site
+    return jax.lax.all_gather(x, "clients", axis=0, tiled=True)  # expect: RPL005

@@ -1,0 +1,20 @@
+"""RPL005 non-firing: collectives inside shard_map / pmap bodies."""
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
+
+
+def aggregate(mesh, x):
+    def body(xl):
+        return jax.lax.psum(xl, "clients")
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(PartitionSpec("clients"),),
+                     out_specs=PartitionSpec())(x)
+
+
+def mean_over_devices(x):
+    def body(xl):
+        return jax.lax.pmean(xl, "devices")
+
+    return jax.pmap(body, axis_name="devices")(x)

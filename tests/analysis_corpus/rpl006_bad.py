@@ -1,0 +1,27 @@
+"""RPL006 firing: lane-misaligned BlockSpec + accumulating output block
+whose varying grid axes are not innermost."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def misaligned(kernel, x):
+    return pl.pallas_call(
+        kernel,
+        grid=(4, 2),
+        in_specs=[pl.BlockSpec((8, 64), lambda i, j: (i, j))],  # expect: RPL006
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((32, 256), jnp.float32),
+    )(x)
+
+
+def bad_accumulator(kernel, x):
+    # the output block varies over j but is revisited across i — with i
+    # OUTERMOST each j-block is revisited non-contiguously
+    return pl.pallas_call(
+        kernel,
+        grid=(4, 2),
+        in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (j, 0)),  # expect: RPL006
+        out_shape=jax.ShapeDtypeStruct((16, 128), jnp.float32),
+    )(x)

@@ -1,0 +1,41 @@
+"""RPL006 non-firing: 128-lane-aligned tiles; accumulating output block
+revisited only over the TRAILING (innermost) grid axis; name-resolved
+spec assignments followed."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def aligned(kernel, x):
+    tile = pl.BlockSpec((8, 128), lambda i, j: (i, j))
+    return pl.pallas_call(
+        kernel,
+        grid=(4, 2),
+        in_specs=[tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((32, 256), jnp.float32),
+    )(x)
+
+
+def good_accumulator(kernel, x):
+    # revisits the output block across c, and c is the TRAILING grid axis:
+    # the innermost-accumulation contract holds
+    return pl.pallas_call(
+        kernel,
+        grid=(4, 8),
+        in_specs=[pl.BlockSpec((8, 128), lambda i, c: (c, i))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, c: (i,)),
+        out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+    )(x)
+
+
+def dynamic_last_dim(kernel, x, group):
+    # a non-literal last block dim is not judged (group is runtime-static
+    # but unknown to the AST)
+    return pl.pallas_call(
+        kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, group), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, group), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 256), jnp.float32),
+    )(x)

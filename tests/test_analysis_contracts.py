@@ -1,0 +1,153 @@
+"""The abstract-eval Compressor contract checker (repro.analysis Layer 2).
+
+Contracts pinned here:
+  * the REAL block-quantizer family passes at bytes_tol=0.0 — every
+    supported bit width (2..8; bits=1 has zero quantization levels and
+    the constructor rejects it) in BOTH shard_safe modes, plus rand_k
+    and the identity compressor;
+  * the checker runs purely in shape-land: a tree of bare
+    ``ShapeDtypeStruct``s (no device arrays anywhere) is enough;
+  * deliberately broken compressors are REJECTED, each by the contract
+    that owns its failure mode: a decode that drifts dtype, a lying
+    ``payload_fn``, shard-group misalignment smuggled into the
+    ``PackedLeaf`` metadata, a decode_reduce that never reduces, and an
+    apply that upcasts.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import check_compressor
+from repro.core import compression as C
+from repro.core.compression import PackedLeaf
+
+TREE = {"w": jnp.zeros((64, 256), jnp.float32),
+        "b": jnp.zeros((256,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# the real family passes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shard_safe", [False, True])
+@pytest.mark.parametrize("bits", [2, 3, 4, 5, 6, 7, 8])
+def test_block_quant_family_passes(bits, shard_safe):
+    comp = C.block_quant(bits=bits, block=256, shard_safe=shard_safe)
+    report = check_compressor(comp, TREE)
+    report.raise_if_failed()
+    assert {"apply-roundtrip", "encode-decode-roundtrip", "payload-bytes",
+            "packed-layout", "decode-reduce"} <= set(report.checked)
+
+
+@pytest.mark.parametrize("comp", [C.identity(), C.rand_k(0.25)],
+                         ids=["identity", "rand_k"])
+def test_non_wire_compressors_pass(comp):
+    check_compressor(comp, TREE).raise_if_failed()
+
+
+def test_pure_shape_land_no_arrays_needed():
+    structs = {"w": jax.ShapeDtypeStruct((32, 512), jnp.float32)}
+    report = check_compressor(C.block_quant(4, 128), structs)
+    report.raise_if_failed()
+
+
+def test_bits1_is_rejected_by_the_constructor():
+    with pytest.raises(ZeroDivisionError):
+        C.block_quant(bits=1, block=256)
+
+
+# ---------------------------------------------------------------------------
+# broken compressors are rejected by the owning contract
+# ---------------------------------------------------------------------------
+
+def _violated(report):
+    return {v.contract for v in report.violations}
+
+
+def test_wrong_decode_dtype_rejected():
+    base = C.block_quant(8, 256)
+
+    def bad_decode(payload):
+        return jax.tree.map(lambda x: x.astype(jnp.float16),
+                            base.decode(payload))
+
+    report = check_compressor(dataclasses.replace(base, decode=bad_decode),
+                              TREE)
+    assert "encode-decode-roundtrip" in _violated(report)
+    assert any("dtype" in v.detail for v in report.violations)
+    with pytest.raises(AssertionError, match="encode-decode-roundtrip"):
+        report.raise_if_failed()
+
+
+def test_lying_payload_model_rejected():
+    base = C.block_quant(4, 256)
+    lying = dataclasses.replace(base,
+                                payload_fn=lambda shape, itemsize: 1.0)
+    report = check_compressor(lying, TREE)
+    assert "payload-bytes" in _violated(report)
+    assert any("comm_bytes metrics would lie" in v.detail
+               for v in report.violations)
+    # the honest model passes the same check at tol 0.0
+    assert check_compressor(base, TREE).ok
+
+
+def test_misaligned_shard_groups_rejected():
+    base = C.block_quant(8, 256, shard_safe=True)
+
+    def bad_encode(key, tree):
+        def smudge(leaf):
+            if isinstance(leaf, PackedLeaf) and leaf.mode == "shard":
+                # group=96 does not divide the 256-wide last dim
+                return dataclasses.replace(leaf, group=96)
+            return leaf
+
+        return jax.tree.map(smudge, base.encode(key, tree),
+                            is_leaf=lambda x: isinstance(x, PackedLeaf))
+
+    report = check_compressor(dataclasses.replace(base, encode=bad_encode),
+                              TREE)
+    assert "packed-layout" in _violated(report)
+    assert any("shard_safe alignment" in v.detail for v in report.violations)
+
+
+def test_decode_reduce_that_never_reduces_rejected():
+    base = C.block_quant(8, 256)
+
+    def no_reduce(payload, w, fused=None):
+        return base.decode(payload)   # leaves the (n, ...) client axis
+
+    report = check_compressor(
+        dataclasses.replace(base, decode_reduce=no_reduce), TREE)
+    assert "decode-reduce" in _violated(report)
+    assert any("leftover client axis" in v.detail for v in report.violations)
+
+
+def test_upcasting_apply_rejected():
+    base = C.block_quant(8, 256)
+
+    def bad_apply(key, tree):
+        # float16, not float64: with x64 disabled jnp silently keeps f32
+        # on a float64 astype, which would make this fixture a no-op
+        return jax.tree.map(lambda x: x.astype(jnp.float16),
+                            base.apply(key, tree))
+
+    report = check_compressor(dataclasses.replace(base, apply=bad_apply),
+                              TREE)
+    assert "apply-roundtrip" in _violated(report)
+
+
+def test_encode_without_decode_rejected():
+    base = C.block_quant(8, 256)
+    report = check_compressor(dataclasses.replace(base, decode=None), TREE)
+    assert "encode-decode-roundtrip" in _violated(report)
+    assert any("decode is None" in v.detail for v in report.violations)
+
+
+def test_report_json_shape():
+    report = check_compressor(C.block_quant(4, 256), TREE)
+    data = report.to_json()
+    assert data["ok"] is True
+    assert data["violations"] == []
+    assert "payload-bytes" in data["checked"]

@@ -16,11 +16,11 @@ from repro import api
 from repro.core import compression as C
 from repro.core import fedmm, fedmm_ot, naive, sassmm
 from repro.core.quadratic import quadratic_for_objective
-from repro.core.surrogate import (Surrogate, tree_add, tree_axpy, tree_lerp,
+from repro.core.surrogate import (tree_add, tree_axpy, tree_lerp,
                                   tree_scale, tree_sub, tree_sq_norm)
 from repro.core.variational import DictLearnSpec, make_dictlearn
 from repro.data.synthetic import dictlearn_data
-from repro.optim.optimizers import adam_init, adam_update
+from repro.optim.optimizers import adam_update
 
 KEY = jax.random.PRNGKey(0)
 

@@ -2,7 +2,6 @@
 XLA_FLAGS set before jax init, so full-combination checks run in a
 subprocess (one fast combo per step kind); pure-python pieces (roofline
 parsing, spec builders) are tested in-process."""
-import json
 import os
 import subprocess
 import sys

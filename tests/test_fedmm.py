@@ -3,12 +3,11 @@ heterogeneity robustness with control variates, Theorem-1 regime checks."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import compression as C
 from repro.core import fedmm, naive, sassmm
 from repro.core.quadratic import quadratic_for_objective
-from repro.core.surrogate import Surrogate, tree_sub, tree_sq_norm
+from repro.core.surrogate import Surrogate
 
 KEY = jax.random.PRNGKey(0)
 

@@ -9,10 +9,8 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 
-from repro.core import compression as C
 from repro.core.compression import group_size, quantize_leaf
-from repro.core.surrogate import (tree_add, tree_lerp, tree_scale, tree_sub,
-                                  tree_weighted_sum)
+from repro.core.surrogate import tree_lerp, tree_weighted_sum
 from repro.fed.trainer import T_map, FedLMConfig
 
 
@@ -90,7 +88,6 @@ def test_t_map_nonexpansive(rho, wd, seed):
 def test_param_specs_always_valid(depth, width, seed):
     """param_specs yields a PartitionSpec per leaf with rank == leaf rank
     and only divisible dims sharded, for random pytree shapes."""
-    from jax.sharding import PartitionSpec as P
     from repro.models.sharding import param_specs
     rng = np.random.default_rng(seed)
     tree = {}

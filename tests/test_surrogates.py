@@ -1,12 +1,11 @@
 """MM-1/MM-2 structural properties of the three surrogate families."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core import prox, sassmm
-from repro.core.quadratic import quadratic_for_objective, make_quadratic_surrogate
+from repro.core.quadratic import quadratic_for_objective
 from repro.core.variational import DictLearnSpec, make_dictlearn, sparse_code
-from repro.core.surrogate import tree_dot, tree_sub, tree_sq_norm
+from repro.core.surrogate import tree_dot
 from repro.data.synthetic import dictlearn_data
 
 KEY = jax.random.PRNGKey(0)

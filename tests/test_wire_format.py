@@ -29,7 +29,6 @@ import pytest
 from repro import api
 from repro.core import compression as C
 from repro.core.quadratic import quadratic_for_objective
-from repro.kernels import ref
 
 KEY = jax.random.PRNGKey(0)
 
