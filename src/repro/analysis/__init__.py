@@ -34,8 +34,6 @@ CLI: ``python -m repro.analysis src/repro --strict`` (see ``__main__``).
 from .findings import Finding, Pragma, Severity
 from .linter import LintReport, lint_file, lint_paths, lint_source
 from .rules import RULES, rule_table
-from .contracts import (CompressorReport, ContractViolation,
-                        check_compressor)
 
 __all__ = [
     "Finding", "Pragma", "Severity",
@@ -43,3 +41,16 @@ __all__ = [
     "RULES", "rule_table",
     "CompressorReport", "ContractViolation", "check_compressor",
 ]
+
+_CONTRACT_EXPORTS = ("CompressorReport", "ContractViolation",
+                     "check_compressor")
+
+
+def __getattr__(name):
+    # Layer 2 needs jax; Layer 1 (the linter + CLI) is stdlib-only so the
+    # tier-0 CI lint job can run without installing the stack. Resolve the
+    # contracts exports lazily instead of importing them here.
+    if name in _CONTRACT_EXPORTS:
+        from . import contracts
+        return getattr(contracts, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -14,7 +14,9 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import io
 import re
+import tokenize
 from typing import Optional
 
 PRAGMA_RE = re.compile(
@@ -72,11 +74,22 @@ class Pragma:
 
 def parse_pragmas(source: str) -> list[Pragma]:
     """All allow-pragmas in a source file (valid or not — pragmas with an
-    empty reason are reported as findings by the linter, not honored)."""
+    empty reason are reported as findings by the linter, not honored).
+
+    Only real COMMENT tokens count: pragma-shaped text inside a string
+    literal or docstring (e.g. documentation quoting the convention) is
+    not a pragma — it must neither suppress a finding on the adjacent
+    line nor consume the --strict budget.
+    """
     out = []
-    for i, text in enumerate(source.splitlines(), start=1):
-        m = PRAGMA_RE.search(text)
-        if m:
-            out.append(Pragma(rule=m.group("rule"), line=i,
-                              reason=m.group("reason").strip()))
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = PRAGMA_RE.search(tok.string)
+            if m:
+                out.append(Pragma(rule=m.group("rule"), line=tok.start[0],
+                                  reason=m.group("reason").strip()))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        pass  # unparseable source is an RPL999 finding upstream, not ours
     return out

@@ -174,10 +174,17 @@ def rpl004(index: ModuleIndex, path: str) -> list:
         body = index.shard_map_body(node)
         if body is None:
             continue
+        # "before the collective" = the collective starts at a later
+        # source position, OR the downcast is nested inside the collective
+        # call itself (psum(x.astype(bf16), ...) — the call's position is
+        # the operand's, so position alone would miss the same-line form).
+        # psum(...).astype(bf16) — ONE downcast after the reduction — is
+        # the sanctioned pattern and matches neither arm.
         later_collective = any(
             isinstance(n, ast.Call)
             and last_component(n.func) in _COLLECTIVES
-            and n.lineno > node.lineno
+            and ((n.lineno, n.col_offset) > (node.lineno, node.col_offset)
+                 or any(child is node for child in ast.walk(n)))
             for n in ast.walk(body))
         if later_collective:
             out.append(_finding(

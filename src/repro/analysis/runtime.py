@@ -88,7 +88,15 @@ def _patch_shard_map_checkify_rule():
 
     def rule_with_scalar_error(error, enabled_errors, *vals, **params):
         new_error, outs = orig(error, enabled_errors, *vals, **params)
-        return _collapse_error_device_axis(new_error), outs
+        try:
+            new_error = _collapse_error_device_axis(new_error)
+        except Exception:
+            # the collapse pokes at jax._src.checkify.Error internals
+            # (_pred/_code/_metadata/_payload, positional ctor) — if a jax
+            # upgrade reshuffles that layout, degrade to the upstream
+            # rule's (device-shaped) error instead of crashing the trace
+            pass
+        return new_error, outs
 
     cki.error_checks[_sm.shard_map_p] = rule_with_scalar_error
     _SHARD_MAP_RULE_PATCHED = True

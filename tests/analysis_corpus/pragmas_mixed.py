@@ -24,3 +24,19 @@ def unexcused(x):
 
 # repro: allow[RPL003] nothing fires RPL003 here, so this pragma is stale
 WIDTH = 128
+
+
+def documented(x):
+    """Documentation QUOTING the convention is not a pragma:
+
+        # repro: allow[RPL001] quoted in a docstring, must not count
+
+    Only real comment tokens suppress or consume the --strict budget —
+    the RPL001 on the next line must stay active.
+    """
+    if jax.device_count() > 1:  # expect: RPL001
+        return "multi"
+    return "single"
+
+
+QUOTED = "# repro: allow[RPL001] quoted in a string literal, must not count"

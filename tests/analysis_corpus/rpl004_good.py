@@ -20,3 +20,15 @@ def partial_reduce(mesh, x):
 def host_cast(x):
     # a downcast with no shard_map body anywhere near it: fine
     return x.astype(jnp.bfloat16)
+
+
+def partial_reduce_one_line(mesh, x):
+    def body(xl):
+        # the sanctioned pattern as a single expression: the downcast
+        # wraps the psum (reduce first, ONE cast after), so the collective
+        # is neither at a later position nor an ancestor of the astype
+        return jax.lax.psum(xl.sum(axis=0), "clients").astype(jnp.bfloat16)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(PartitionSpec("clients"),),
+                     out_specs=PartitionSpec())(x)

@@ -174,6 +174,33 @@ def test_injected_nan_is_flagged_in_eager_step():
         api.step(problem, spec, state0, (Xs, ys), 0.3, KEY, sanitize=True)
 
 
+def test_collapse_failure_degrades_to_upstream_rule(monkeypatch):
+    """The device-axis collapse pokes at jax._src.checkify.Error internals
+    — if a jax upgrade reshuffles that layout, the patched shard_map rule
+    must degrade to the upstream rule's error, not crash the trace with
+    the collapse's own exception."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    from repro.analysis import runtime
+
+    def boom(error):
+        raise RuntimeError("checkify Error layout changed")
+
+    monkeypatch.setattr(runtime, "_collapse_error_device_axis", boom)
+    mesh = Mesh(np.asarray(jax.devices()), ("clients",))
+    x = jnp.ones((len(jax.devices()), 4))
+
+    def f(a):
+        return shard_map(lambda xl: jnp.log(xl),
+                         mesh=mesh, in_specs=(PartitionSpec("clients"),),
+                         out_specs=PartitionSpec("clients"))(a)
+
+    err, out = runtime.checkified(f)(x)  # must not raise the RuntimeError
+    err.throw()  # log(1) trips nothing
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
 # ---------------------------------------------------------------------------
 # the comm-bytes audit
 # ---------------------------------------------------------------------------
