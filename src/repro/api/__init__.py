@@ -9,6 +9,7 @@ from .problem import MMProblem, as_problem  # noqa: F401
 from .spec import FederationSpec, participation_draw  # noqa: F401
 from .schedule import (decaying_stepsize, resolve_schedule,  # noqa: F401
                        schedule_length)
-from .driver import (DriverState, centralized_init, centralized_step,  # noqa: F401
+from .driver import (CohortPartial, CohortSlice, DriverState,  # noqa: F401
+                     apply_partial, centralized_init, centralized_step,
                      history_list, init, mean_oracle_diag, run, step,
                      variates_at_init)

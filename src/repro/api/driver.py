@@ -57,13 +57,53 @@ class DriverState(NamedTuple):
     (parameter aggregation); ``v``/``v_i`` the control variates (empty
     pytrees when ``variates='off'``); ``aux`` problem-owned server state
     (e.g. the FedMM-OT conjugate potential); ``opt`` server-optimizer state
-    (e.g. FedAdam's moments)."""
+    (e.g. FedAdam's moments, or the FedAvgM momentum buffer when
+    ``spec.server_momentum > 0``)."""
     x: Pytree
     v: Pytree
     v_i: Pytree
     aux: Pytree
     opt: Pytree
     step: jnp.ndarray
+
+
+class CohortSlice(NamedTuple):
+    """The per-round inputs for ONE cohort of clients, gathered by a
+    scheduler (``repro.sched``) from its population arena. All leading
+    dimensions are the cohort size C — never the population size.
+
+    ``mask`` is the A5 participation mask for the cohort's clients
+    (0.0 also for PADDED slots of a ragged last cohort, so padding
+    contributes nothing to the aggregate or to ``comm_bytes``); ``mu``
+    is the matching slice of the GLOBAL client weights (NOT renormalized
+    — summing cohort partials then equals the full-population weighted
+    reduce, pads zeroed); ``quant_keys`` the per-client A4 keys from the
+    driver's shared key fold; ``v_i`` the cohort's control-variate slice
+    (``()`` when variates are off); ``valid`` an optional real-client
+    indicator (1.0 real / 0.0 padded) so per-client metric sums exclude
+    padding — None means every slot is real."""
+    mask: jnp.ndarray
+    mu: jnp.ndarray
+    quant_keys: jnp.ndarray
+    v_i: Pytree = ()
+    valid: Optional[jnp.ndarray] = None
+
+
+class CohortPartial(NamedTuple):
+    """What one cohort contributes to a round: the masked mu-weighted
+    partial aggregate (iterate dtype — summing these across cohorts with
+    weight 1.0 is bit-identical to the single full-participation reduce),
+    the updated control-variate slice to scatter back into the arena,
+    the realized participation count, the measured uplink bytes, the
+    per-client oracle-metric SUMS over the cohort's real clients (divide
+    by n_total after summing cohorts to recover ``step``'s means), and
+    the actual cross-mesh collective bytes (None off-mesh)."""
+    agg: Pytree
+    v_i: Pytree
+    n_active: jnp.ndarray
+    comm_bytes: jnp.ndarray
+    metric_sums: dict
+    collective_payload_bytes: Optional[float]
 
 
 # ---------------------------------------------------------------------------
@@ -104,7 +144,16 @@ def init(problem, x0, spec: FederationSpec, v0_i=None,
     else:
         v, v0_i = (), ()
     aux = problem.init_aux() if problem.init_aux is not None else ()
-    opt = problem.init_opt(x0) if problem.init_opt is not None else ()
+    if spec.server_momentum > 0.0:
+        if problem.server_opt is not None or problem.init_opt is not None:
+            raise ValueError(
+                "server_momentum and a custom MMProblem.server_opt/init_opt "
+                "both claim the server update (and the opt state slot) — "
+                "fold the momentum into your server_opt instead")
+        # FedAvgM heavy-ball buffer m_0 = 0, living in the opt slot
+        opt = jax.tree.map(jnp.zeros_like, x0)
+    else:
+        opt = problem.init_opt(x0) if problem.init_opt is not None else ()
     return DriverState(x=x0, v=v, v_i=v0_i, aux=aux, opt=opt,
                        step=jnp.asarray(0))
 
@@ -133,6 +182,271 @@ def _weighted_reduce(w, q):
         lambda x: jnp.tensordot(w, x, axes=1).astype(x.dtype), q)
 
 
+def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
+                  client_batches, v_i, quant_keys, mask, mu, *,
+                  mesh, client_axis, client_mode, uplink):
+    """The client half of Algorithm 2, shared by the full-population
+    ``step`` and the cohort path: oracles (+ optional per-client metrics),
+    drift/A4 compression, the uplink (vmap stack, sequential scan, or one
+    of the two shard_map collectives), masking, V_i update, and the
+    mu-weighted reduction. Operates on whatever leading client dimension
+    the inputs carry — ``spec.n_clients`` in ``step``, the cohort size C
+    under a scheduler — so the mesh divisibility constraint applies to
+    the LOCAL count, not the population.
+
+    Returns ``(agg, v_i_new, cmetrics, wire_bytes_client,
+    collective_bytes)``: the masked mu-weighted aggregate (iterate dtype),
+    the updated variate slice, stacked per-client oracle metrics, the
+    measured per-client uplink bytes (None for analytic compressors), and
+    the actual cross-mesh collective bytes (None off-mesh)."""
+    p, alpha = spec.participation, spec.alpha
+    param_space = spec.aggregation == "parameter"
+    use_v = spec.use_variates
+    comp = spec.compressor
+    use_wire = comp.encode is not None
+    n_local = mask.shape[0]
+    if mesh is not None and n_local % mesh.shape[client_axis] != 0:
+        raise ValueError(
+            f"the client-stage leading dim ({n_local} clients) must "
+            f"divide evenly over the '{client_axis}' mesh axis "
+            f"(size {mesh.shape[client_axis]})")
+
+    def client_update(batch, v_c, qkey):
+        """One client's round: oracle (+ optional metrics), drift, wire
+        encode. Returns (payload, per-client metrics dict)."""
+        if problem.s_bar_metrics is not None:
+            s_i, cm = problem.s_bar_metrics(batch, view)   # line 6 (oracle)
+        else:
+            s_i, cm = problem.s_bar(batch, view), {}
+        out = problem.T(s_i) if param_space else s_i       # eq. 21 local MM
+        if spec.delta == "oracle":
+            d = out                                        # raw payload
+        else:
+            d = tree_sub(out, x_ref)                       # line 7 (drift)
+            if use_v:
+                d = tree_sub(d, v_c)
+        if use_wire:
+            return comp.encode(qkey, d), cm                # line 9: wire fmt
+        return comp.apply(qkey, d), cm                     # line 9 (A4)
+
+    def upd(batch, v_c, qkey):
+        return client_update(batch, v_c if use_v else None, qkey)
+
+    def _mask_q(x, m):
+        # dtype-preserving: never let an f32 mask upcast a bf16 payload
+        return x * m.astype(x.dtype)
+
+    collective_bytes = None
+    if client_mode == "scan":
+        # sequential clients: one oracle/quantize transient live at a time;
+        # the mu_i-weighted aggregate accumulates in the iterate's dtype
+        def body(agg_sum, xs):
+            cb, v_c, qk, mu_c, m_c = xs
+            payload_c, cm = upd(cb, v_c, qk)
+            q_c = comp.decode(payload_c) if use_wire else payload_c
+            q_c = jax.tree.map(lambda x: _mask_q(x, m_c), q_c)
+            v_c_new = (_variate_update(v_c, q_c, alpha / p)
+                       if use_v else ())
+            agg_sum = jax.tree.map(
+                lambda a, x: a + (mu_c * x).astype(a.dtype), agg_sum, q_c)
+            return agg_sum, (v_c_new, cm)
+        zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), x_ref)
+        agg, (v_i_new, cmetrics) = jax.lax.scan(
+            body, zeros, (client_batches, v_i, quant_keys, mu, mask))
+        # static per-client wire bytes via eval_shape (no stacked payload
+        # exists on this path)
+        wire_bytes_client = comp.wire_bytes(x_ref) if use_wire else None
+    elif mesh is not None and uplink == "reduce":
+        # the FUSED uplink: each device touches only its own clients —
+        # decode + mask + mu-weighted partial-reduce run shard-locally,
+        # v_i updates on the local slice, and a single psum of the
+        # model-shaped partial aggregate crosses the mesh. The gathered
+        # n-client payload stack of the "gather" path never exists.
+        cspec = PartitionSpec(client_axis)
+        measured = {}
+
+        def client_stage(cb, vi, qk, mu_l, m_l):
+            payload_l, cm = jax.vmap(upd, in_axes=(0, 0, 0))(cb, vi, qk)
+            n_l = m_l.shape[0]
+
+            def msk(x):
+                return _mask_q(x, m_l.reshape((n_l,) + (1,) * (x.ndim - 1)))
+
+            # partials stay in the ACCUMULATION dtype (f32 under f32
+            # weights) until after the psum: rounding each device's
+            # partial to a bf16 leaf dtype before summing axis_size of
+            # them would lose bf16-epsilon per round — the gather path
+            # does one f32 tensordot over all n clients and casts once,
+            # and the reduce path must match that discipline
+            if use_v:
+                # the variates need the decoded local stack anyway
+                # (O(n/axis_size * model) — still never the full n)
+                q_l = comp.decode(payload_l) if use_wire else payload_l
+                q_l = jax.tree.map(msk, q_l)
+                vi_new = _variate_update(vi, q_l, alpha / p)
+                part = jax.tree.map(
+                    lambda x: jnp.tensordot(mu_l, x, axes=1), q_l)
+            else:
+                vi_new = ()
+                if use_wire and comp.decode_reduce is not None:
+                    # fold the mask into the weights (exact: the mask is
+                    # 0.0/1.0) and fuse dequantize into the accumulation
+                    # via the COMPRESSOR's own reduce (which carries its
+                    # kernel dispatch policy) — the decoded local f32
+                    # stack never materializes. fused=True: this IS a
+                    # per-device shard_map body.
+                    part = comp.decode_reduce(payload_l, mu_l * m_l,
+                                              fused=True)
+                else:
+                    # wire compressors without a fused reduce decode
+                    # first; raw payloads reduce directly
+                    q_l = (jax.tree.map(msk, comp.decode(payload_l))
+                           if use_wire else jax.tree.map(msk, payload_l))
+                    part = jax.tree.map(
+                        lambda x: jnp.tensordot(mu_l, x, axes=1), q_l)
+            # the ACTUAL per-device psum operand (static under jit): the
+            # model-shaped partial aggregate — what really crosses the
+            # mesh, measured here rather than modeled
+            measured["psum_operand_bytes"] = _tree_bytes(part)
+            agg_l = jax.tree.map(
+                lambda x: jax.lax.psum(x, client_axis), part)
+            return agg_l, vi_new, cm
+
+        agg, v_i_new, cmetrics = shard_map(
+            client_stage, mesh=mesh,
+            in_specs=(cspec, cspec, cspec, cspec, cspec),
+            out_specs=(PartitionSpec(), cspec, cspec),
+            check_rep=False)(client_batches, v_i, quant_keys, mu, mask)
+        # the ONE downcast back to the iterate dtype, AFTER the collective
+        agg = jax.tree.map(lambda a, x: a.astype(x.dtype), agg, x_ref)
+        collective_bytes = float(measured["psum_operand_bytes"])
+        # static per-client wire bytes via eval_shape (no stacked payload
+        # survives the shard_map on this path)
+        wire_bytes_client = comp.wire_bytes(x_ref) if use_wire else None
+    else:
+        if mesh is not None:
+            cspec = PartitionSpec(client_axis)
+
+            def client_stage(cb, vi, qk):
+                # each device slice runs its local clients...
+                local = jax.vmap(upd, in_axes=(0, 0, 0))(cb, vi, qk)
+                # ...and the uplink collective moves the ENCODED buffers:
+                # packed codes + per-group scales cross the mesh boundary
+                return jax.tree.map(
+                    lambda x: jax.lax.all_gather(x, client_axis, axis=0,
+                                                 tiled=True), local)
+
+            # check_rep=False: all_gather's replication over client_axis is
+            # real but not statically inferred on this jax version
+            payload, cmetrics = shard_map(
+                client_stage, mesh=mesh,
+                in_specs=(cspec, cspec, cspec), out_specs=PartitionSpec(),
+                check_rep=False)(client_batches, v_i, quant_keys)
+            # the gathered stack's actual buffer bytes (static under jit):
+            # for wire compressors this is n * payload_bytes — asserted in
+            # tests/test_sharded_driver.py, not just logged
+            collective_bytes = float(_tree_bytes(payload))
+        else:
+            payload, cmetrics = jax.vmap(upd, in_axes=(0, 0, 0))(
+                client_batches, v_i, quant_keys)
+        if use_wire:
+            # actual uplink bytes of ONE client's payload, read off the
+            # stacked encoded buffers (shapes are static under jit)
+            wire_bytes_client = comp.encoded_bytes(payload) / n_local
+            q = comp.decode(payload)   # batched; fuses into the aggregation
+        else:
+            wire_bytes_client = None
+            q = payload
+        # non-participating clients send nothing / keep V_i
+        q = jax.tree.map(
+            lambda x: _mask_q(x, mask.reshape((n_local,)
+                                              + (1,) * (x.ndim - 1))),
+            q)
+
+        # client control variates (lines 8/11) + server aggregation (13)
+        v_i_new = _variate_update(v_i, q, alpha / p) if use_v else ()
+        agg = _weighted_reduce(mu, q)
+    return agg, v_i_new, cmetrics, wire_bytes_client, collective_bytes
+
+
+def _server_apply(problem: MMProblem, spec: FederationSpec,
+                  state: DriverState, agg, v_i_new, n_active, gamma):
+    """The server half of Algorithm 2: normalization (line 13's 1/p or the
+    realized n/|A_t|), the control-variate shift h = V + h, the server
+    update (custom server_opt, FedAvgM heavy-ball momentum, or the plain
+    SA step + projection), the server variate update (line 17), and the
+    problem-owned aux update. ``agg`` is the masked mu-weighted aggregate
+    over the WHOLE population — either straight from ``_client_stage`` or
+    a (staleness-weighted) sum of ``CohortPartial.agg`` terms.
+
+    Returns ``(new_state, h, aux_metrics)``."""
+    n, p, alpha = spec.n_clients, spec.participation, spec.alpha
+    param_space = spec.aggregation == "parameter"
+    use_v = spec.use_variates
+    if spec.normalization == "realized":
+        scale = n / jnp.maximum(n_active, 1.0)
+        h = jax.tree.map(lambda a: (scale * a).astype(a.dtype), agg)
+    else:
+        h = tree_scale(agg, 1.0 / p)
+    if use_v:
+        h = jax.tree.map(lambda v, hh: v + hh.astype(v.dtype), state.v, h)
+
+    # server update (lines 15-16): SA step + projection, unless the problem
+    # supplies its own server optimizer (e.g. FedAdam) or the spec asks
+    # for FedAvgM heavy-ball momentum on the aggregated direction
+    if problem.server_opt is not None:
+        if spec.server_momentum > 0.0:
+            raise ValueError(
+                "server_momentum and a custom MMProblem.server_opt both "
+                "claim the server update — fold the momentum into your "
+                "server_opt instead")
+        x_new, opt_new = problem.server_opt(state.x, h, gamma, state.opt)
+    elif spec.server_momentum > 0.0:
+        # m <- beta m + h (buffer keeps the iterate dtype), x <- x + gamma m
+        opt_new = jax.tree.map(
+            lambda m, hh: (spec.server_momentum * m
+                           + hh.astype(m.dtype)).astype(m.dtype),
+            state.opt, h)
+        x_new = jax.tree.map(
+            lambda mm, xx: (gamma * mm.astype(xx.dtype) + xx).astype(xx.dtype),
+            opt_new, state.x)
+        if not param_space:
+            x_new = problem.project(x_new)
+    else:
+        x_new = jax.tree.map(
+            lambda hh, xx: (gamma * hh.astype(xx.dtype) + xx).astype(xx.dtype),
+            h, state.x)
+        if not param_space:
+            x_new = problem.project(x_new)
+        opt_new = state.opt
+
+    # server control variate (line 17)
+    v_new = (jax.tree.map(
+        lambda v, a: v + ((alpha / p) * a).astype(v.dtype), state.v, agg)
+        if use_v else ())
+
+    # problem-owned server state (FedMM-OT line 16: conjugate update)
+    if problem.server_step is not None:
+        aux_new, aux_metrics = problem.server_step(state.aux, x_new)
+    else:
+        aux_new, aux_metrics = state.aux, {}
+    new_state = DriverState(x=x_new, v=v_new, v_i=v_i_new, aux=aux_new,
+                            opt=opt_new, step=state.step + 1)
+    return new_state, h, aux_metrics
+
+
+def _broadcast_view(problem: MMProblem, spec: FederationSpec,
+                    state: DriverState):
+    """Line 4: the view broadcast to clients — the mirror image T(Shat)
+    (surrogate mode), the iterate itself (parameter mode), or the
+    problem's custom view hook."""
+    if spec.aggregation == "parameter":
+        return state.x
+    if problem.view is not None:
+        return problem.view(state.x, state.aux)
+    return problem.T(state.x)
+
+
 def centralized_step(problem: MMProblem, state: DriverState, batch, gamma):
     """Algorithm 1 (SA-SSMM): oracle, SA blend, projection."""
     theta = problem.T(state.x)
@@ -149,6 +463,7 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
          mesh=None, client_axis: str = "clients",
          client_mode: str = "vmap", uplink: str = "gather",
          drift_metric: bool = True, sanitize: bool = False,
+         cohort: Optional[CohortSlice] = None,
          _comm_audit: bool = False):
     """One federated MM round (Algorithm 2, every axis of the spec applied).
     ``client_batches`` is a pytree with a leading client axis of size n.
@@ -226,7 +541,26 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
     ``step(sanitize=True)`` throws eagerly so it must not itself be
     wrapped in ``jax.jit`` — jit your own wrapper around
     ``step(sanitize=False)``, or use ``run(..., sanitize=True)`` which
-    checkifies the scanned trajectory correctly."""
+    checkifies the scanned trajectory correctly.
+
+    cohort — the SCHEDULER path (``repro.sched``): instead of drawing
+    participation and applying the server update, run the client stage on
+    a provided ``CohortSlice`` (mask / mu slice / quant keys / v_i slice,
+    leading dim = cohort size C, padding pre-zeroed) and return the
+    ``CohortPartial`` — the masked mu-weighted partial aggregate plus its
+    accounting — WITHOUT touching the iterate. The caller accumulates
+    partials (optionally staleness-weighted) and lands them with
+    ``apply_partial``. ``key``/``active``/``gamma`` are ignored on this
+    path (the scheduler owns the key chain and the step size)."""
+    if cohort is not None:
+        if sanitize:
+            raise ValueError(
+                "sanitize=True is not threaded through the cohort partial "
+                "path — checkify the scheduler's jitted cohort step "
+                "yourself via analysis.runtime.checkified")
+        return _cohort_partial(problem, spec, state, client_batches, cohort,
+                               mesh=mesh, client_axis=client_axis,
+                               client_mode=client_mode, uplink=uplink)
     if sanitize:
         from ..analysis.runtime import checkified
 
@@ -239,233 +573,28 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
                                       active)
         err.throw()
         return out
-    n, p, alpha = spec.n_clients, spec.participation, spec.alpha
+    n, p = spec.n_clients, spec.participation
     mu = spec.client_weights()
     param_space = spec.aggregation == "parameter"
-    use_v = spec.use_variates
     comp = spec.compressor
     use_wire = comp.encode is not None
-    if client_mode not in CLIENT_MODES:
-        raise ValueError(f"client_mode={client_mode!r} (want {CLIENT_MODES})")
-    if uplink not in UPLINKS:
-        raise ValueError(f"uplink={uplink!r} (want {UPLINKS})")
-    if uplink == "reduce" and mesh is None:
-        raise ValueError("uplink='reduce' is the cross-mesh partial-reduce "
-                         "collective; it needs mesh= (without a mesh the "
-                         "vmap path has no collective to fuse)")
-    if mesh is not None:
-        if client_mode != "vmap":
-            raise ValueError("the sharded driver path shard_maps the "
-                             "batched client stage; client_mode='scan' is "
-                             "sequential — drop mesh= or use 'vmap'")
-        if client_axis not in mesh.shape:
-            raise ValueError(f"client_axis={client_axis!r} not an axis of "
-                             f"the mesh (axes: {tuple(mesh.shape)})")
-        if n % mesh.shape[client_axis] != 0:
-            raise ValueError(
-                f"n_clients={n} must divide evenly over the "
-                f"'{client_axis}' mesh axis (size {mesh.shape[client_axis]})")
+    _validate_topology(mesh, client_axis, client_mode, uplink)
 
-    # line 4: broadcast — the mirror image T(Shat) (surrogate mode), the
-    # iterate itself (parameter mode), or the problem's custom view
-    if param_space:
-        view = state.x
-    elif problem.view is not None:
-        view = problem.view(state.x, state.aux)
-    else:
-        view = problem.T(state.x)
+    view = _broadcast_view(problem, spec, state)           # line 4
 
     drawn, quant_keys = participation_draw(key, spec)      # A5
     if active is None:
         active = drawn
     mask = active.astype(jnp.float32)
 
-    def client_update(batch, v_i, qkey):
-        """One client's round: oracle (+ optional metrics), drift, wire
-        encode. Returns (payload, per-client metrics dict)."""
-        if problem.s_bar_metrics is not None:
-            s_i, cm = problem.s_bar_metrics(batch, view)   # line 6 (oracle)
-        else:
-            s_i, cm = problem.s_bar(batch, view), {}
-        out = problem.T(s_i) if param_space else s_i       # eq. 21 local MM
-        if spec.delta == "oracle":
-            d = out                                        # raw payload
-        else:
-            d = tree_sub(out, state.x)                     # line 7 (drift)
-            if use_v:
-                d = tree_sub(d, v_i)
-        if use_wire:
-            return comp.encode(qkey, d), cm                # line 9: wire fmt
-        return comp.apply(qkey, d), cm                     # line 9 (A4)
-
-    def upd(batch, v_i, qkey):
-        return client_update(batch, v_i if use_v else None, qkey)
-
-    def _mask_q(x, m):
-        # dtype-preserving: never let an f32 mask upcast a bf16 payload
-        return x * m.astype(x.dtype)
-
-    collective_bytes = None
-    if client_mode == "scan":
-        # sequential clients: one oracle/quantize transient live at a time;
-        # the mu_i-weighted aggregate accumulates in the iterate's dtype
-        def body(agg_sum, xs):
-            cb, v_c, qk, mu_c, m_c = xs
-            payload_c, cm = upd(cb, v_c, qk)
-            q_c = comp.decode(payload_c) if use_wire else payload_c
-            q_c = jax.tree.map(lambda x: _mask_q(x, m_c), q_c)
-            v_c_new = (_variate_update(v_c, q_c, alpha / p)
-                       if use_v else ())
-            agg_sum = jax.tree.map(
-                lambda a, x: a + (mu_c * x).astype(a.dtype), agg_sum, q_c)
-            return agg_sum, (v_c_new, cm)
-        zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), state.x)
-        agg, (v_i_new, cmetrics) = jax.lax.scan(
-            body, zeros, (client_batches, state.v_i, quant_keys, mu, mask))
-        # static per-client wire bytes via eval_shape (no stacked payload
-        # exists on this path)
-        wire_bytes_client = comp.wire_bytes(state.x) if use_wire else None
-        q = None
-    elif mesh is not None and uplink == "reduce":
-        # the FUSED uplink: each device touches only its own clients —
-        # decode + mask + mu-weighted partial-reduce run shard-locally,
-        # v_i updates on the local slice, and a single psum of the
-        # model-shaped partial aggregate crosses the mesh. The gathered
-        # n-client payload stack of the "gather" path never exists.
-        cspec = PartitionSpec(client_axis)
-        measured = {}
-
-        def client_stage(cb, vi, qk, mu_l, m_l):
-            payload_l, cm = jax.vmap(upd, in_axes=(0, 0, 0))(cb, vi, qk)
-            n_l = m_l.shape[0]
-
-            def msk(x):
-                return _mask_q(x, m_l.reshape((n_l,) + (1,) * (x.ndim - 1)))
-
-            # partials stay in the ACCUMULATION dtype (f32 under f32
-            # weights) until after the psum: rounding each device's
-            # partial to a bf16 leaf dtype before summing axis_size of
-            # them would lose bf16-epsilon per round — the gather path
-            # does one f32 tensordot over all n clients and casts once,
-            # and the reduce path must match that discipline
-            if use_v:
-                # the variates need the decoded local stack anyway
-                # (O(n/axis_size * model) — still never the full n)
-                q_l = comp.decode(payload_l) if use_wire else payload_l
-                q_l = jax.tree.map(msk, q_l)
-                vi_new = _variate_update(vi, q_l, alpha / p)
-                part = jax.tree.map(
-                    lambda x: jnp.tensordot(mu_l, x, axes=1), q_l)
-            else:
-                vi_new = ()
-                if use_wire and comp.decode_reduce is not None:
-                    # fold the mask into the weights (exact: the mask is
-                    # 0.0/1.0) and fuse dequantize into the accumulation
-                    # via the COMPRESSOR's own reduce (which carries its
-                    # kernel dispatch policy) — the decoded local f32
-                    # stack never materializes. fused=True: this IS a
-                    # per-device shard_map body.
-                    part = comp.decode_reduce(payload_l, mu_l * m_l,
-                                              fused=True)
-                else:
-                    # wire compressors without a fused reduce decode
-                    # first; raw payloads reduce directly
-                    q_l = (jax.tree.map(msk, comp.decode(payload_l))
-                           if use_wire else jax.tree.map(msk, payload_l))
-                    part = jax.tree.map(
-                        lambda x: jnp.tensordot(mu_l, x, axes=1), q_l)
-            # the ACTUAL per-device psum operand (static under jit): the
-            # model-shaped partial aggregate — what really crosses the
-            # mesh, measured here rather than modeled
-            measured["psum_operand_bytes"] = _tree_bytes(part)
-            agg_l = jax.tree.map(
-                lambda x: jax.lax.psum(x, client_axis), part)
-            return agg_l, vi_new, cm
-
-        agg, v_i_new, cmetrics = shard_map(
-            client_stage, mesh=mesh,
-            in_specs=(cspec, cspec, cspec, cspec, cspec),
-            out_specs=(PartitionSpec(), cspec, cspec),
-            check_rep=False)(client_batches, state.v_i, quant_keys, mu, mask)
-        # the ONE downcast back to the iterate dtype, AFTER the collective
-        agg = jax.tree.map(lambda a, x: a.astype(x.dtype), agg, state.x)
-        collective_bytes = float(measured["psum_operand_bytes"])
-        # static per-client wire bytes via eval_shape (no stacked payload
-        # survives the shard_map on this path)
-        wire_bytes_client = comp.wire_bytes(state.x) if use_wire else None
-        q = None
-    else:
-        if mesh is not None:
-            cspec = PartitionSpec(client_axis)
-
-            def client_stage(cb, vi, qk):
-                # each device slice runs its local clients...
-                local = jax.vmap(upd, in_axes=(0, 0, 0))(cb, vi, qk)
-                # ...and the uplink collective moves the ENCODED buffers:
-                # packed codes + per-group scales cross the mesh boundary
-                return jax.tree.map(
-                    lambda x: jax.lax.all_gather(x, client_axis, axis=0,
-                                                 tiled=True), local)
-
-            # check_rep=False: all_gather's replication over client_axis is
-            # real but not statically inferred on this jax version
-            payload, cmetrics = shard_map(
-                client_stage, mesh=mesh,
-                in_specs=(cspec, cspec, cspec), out_specs=PartitionSpec(),
-                check_rep=False)(client_batches, state.v_i, quant_keys)
-            # the gathered stack's actual buffer bytes (static under jit):
-            # for wire compressors this is n * payload_bytes — asserted in
-            # tests/test_sharded_driver.py, not just logged
-            collective_bytes = float(_tree_bytes(payload))
-        else:
-            payload, cmetrics = jax.vmap(upd, in_axes=(0, 0, 0))(
-                client_batches, state.v_i, quant_keys)
-        if use_wire:
-            # actual uplink bytes of ONE client's payload, read off the
-            # stacked encoded buffers (shapes are static under jit)
-            wire_bytes_client = comp.encoded_bytes(payload) / n
-            q = comp.decode(payload)   # batched; fuses into the aggregation
-        else:
-            wire_bytes_client = None
-            q = payload
-        # non-participating clients send nothing / keep V_i
-        q = jax.tree.map(
-            lambda x: _mask_q(x, mask.reshape((n,) + (1,) * (x.ndim - 1))),
-            q)
-
-        # client control variates (lines 8/11) + server aggregation (13)
-        v_i_new = _variate_update(state.v_i, q, alpha / p) if use_v else ()
-        agg = _weighted_reduce(mu, q)
-    if spec.normalization == "realized":
-        scale = n / jnp.maximum(jnp.sum(mask), 1.0)
-        h = jax.tree.map(lambda a: (scale * a).astype(a.dtype), agg)
-    else:
-        h = tree_scale(agg, 1.0 / p)
-    if use_v:
-        h = jax.tree.map(lambda v, hh: v + hh.astype(v.dtype), state.v, h)
-
-    # server update (lines 15-16): SA step + projection, unless the problem
-    # supplies its own server optimizer (e.g. FedAdam)
-    if problem.server_opt is not None:
-        x_new, opt_new = problem.server_opt(state.x, h, gamma, state.opt)
-    else:
-        x_new = jax.tree.map(
-            lambda hh, xx: (gamma * hh.astype(xx.dtype) + xx).astype(xx.dtype),
-            h, state.x)
-        if not param_space:
-            x_new = problem.project(x_new)
-        opt_new = state.opt
-
-    # server control variate (line 17)
-    v_new = (jax.tree.map(
-        lambda v, a: v + ((alpha / p) * a).astype(v.dtype), state.v, agg)
-        if use_v else ())
-
-    # problem-owned server state (FedMM-OT line 16: conjugate update)
-    if problem.server_step is not None:
-        aux_new, aux_metrics = problem.server_step(state.aux, x_new)
-    else:
-        aux_new, aux_metrics = state.aux, {}
+    agg, v_i_new, cmetrics, wire_bytes_client, collective_bytes = \
+        _client_stage(problem, spec, view, state.x, client_batches,
+                      state.v_i, quant_keys, mask, mu, mesh=mesh,
+                      client_axis=client_axis, client_mode=client_mode,
+                      uplink=uplink)
+    new_state, h, aux_metrics = _server_apply(
+        problem, spec, state, agg, v_i_new, jnp.sum(mask), gamma)
+    x_new = new_state.x
 
     comm = comp.round_metrics(state.x, p=p)
     per_client = (wire_bytes_client if use_wire
@@ -507,8 +636,111 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
                          f"driver metrics — rename them in the problem")
     metrics.update({k: jnp.mean(v, axis=0) for k, v in cmetrics.items()})
     metrics.update(aux_metrics)
-    new_state = DriverState(x=x_new, v=v_new, v_i=v_i_new, aux=aux_new,
-                            opt=opt_new, step=state.step + 1)
+    return new_state, metrics
+
+
+def _validate_topology(mesh, client_axis, client_mode, uplink):
+    """The mesh/client-stage knob validation shared by ``step`` and the
+    cohort path (the n-divisibility check lives in ``_client_stage``
+    where the local client count is known)."""
+    if client_mode not in CLIENT_MODES:
+        raise ValueError(f"client_mode={client_mode!r} (want {CLIENT_MODES})")
+    if uplink not in UPLINKS:
+        raise ValueError(f"uplink={uplink!r} (want {UPLINKS})")
+    if uplink == "reduce" and mesh is None:
+        raise ValueError("uplink='reduce' is the cross-mesh partial-reduce "
+                         "collective; it needs mesh= (without a mesh the "
+                         "vmap path has no collective to fuse)")
+    if mesh is not None:
+        if client_mode != "vmap":
+            raise ValueError("the sharded driver path shard_maps the "
+                             "batched client stage; client_mode='scan' is "
+                             "sequential — drop mesh= or use 'vmap'")
+        if client_axis not in mesh.shape:
+            raise ValueError(f"client_axis={client_axis!r} not an axis of "
+                             f"the mesh (axes: {tuple(mesh.shape)})")
+
+
+def _cohort_partial(problem: MMProblem, spec: FederationSpec,
+                    state: DriverState, client_batches, cohort: CohortSlice,
+                    *, mesh, client_axis, client_mode, uplink):
+    """``step(..., cohort=...)``: the client stage on one cohort slice,
+    returning the ``CohortPartial`` instead of applying it. The cohort's
+    ``mu`` is the un-renormalized slice of the global weights, so summing
+    the partial ``agg`` terms over a population's cohorts reproduces the
+    full-population weighted reduce (bit-identical for a single
+    full-participation cohort, reassociation-close otherwise)."""
+    problem = as_problem(problem)
+    _validate_topology(mesh, client_axis, client_mode, uplink)
+    comp = spec.compressor
+    use_wire = comp.encode is not None
+    mask = cohort.mask.astype(jnp.float32)
+    c = mask.shape[0]
+    for name, arr in (("mu", cohort.mu), ("quant_keys", cohort.quant_keys)):
+        if jnp.shape(arr)[0] != c:
+            raise ValueError(
+                f"CohortSlice.{name} has leading dim "
+                f"{jnp.shape(arr)[0]} != cohort size {c}")
+
+    view = _broadcast_view(problem, spec, state)           # line 4
+    agg, v_i_new, cmetrics, wire_bytes_client, collective_bytes = \
+        _client_stage(problem, spec, view, state.x, client_batches,
+                      cohort.v_i, cohort.quant_keys, mask, cohort.mu,
+                      mesh=mesh, client_axis=client_axis,
+                      client_mode=client_mode, uplink=uplink)
+    comm = comp.round_metrics(state.x, p=spec.participation)
+    per_client = (wire_bytes_client if use_wire
+                  else comm["payload_bytes_per_client"])
+    if cohort.valid is None:
+        metric_sums = {k: jnp.sum(v, axis=0) for k, v in cmetrics.items()}
+    else:
+        # padded slots duplicate a real client's batch — their oracle
+        # metrics must not count toward the population means
+        valid = cohort.valid.astype(jnp.float32)
+        metric_sums = {
+            k: jnp.sum(v * valid.reshape((c,) + (1,) * (v.ndim - 1)),
+                       axis=0)
+            for k, v in cmetrics.items()}
+    return CohortPartial(
+        agg=agg, v_i=v_i_new, n_active=jnp.sum(mask),
+        # the mask is already 0.0 on padded slots, so ragged cohorts bill
+        # exactly the real active clients' uplink bytes
+        comm_bytes=per_client * jnp.sum(mask),
+        metric_sums=metric_sums,
+        collective_payload_bytes=collective_bytes)
+
+
+def apply_partial(problem: MMProblem, spec: FederationSpec,
+                  state: DriverState, agg, n_active, gamma, *,
+                  drift_metric: bool = True):
+    """Land an accumulated surrogate partial: the server half of ``step``
+    for a scheduler that built ``agg`` by summing (possibly
+    staleness-weighted) ``CohortPartial.agg`` terms over the population.
+    ``n_active`` is the total realized participation count of the
+    contributing cohorts (the 'realized' normalization divides by it).
+    ``state.v_i`` passes through untouched — cohort variate slices live
+    in the scheduler's population arena, not in the ``DriverState``.
+
+    Returns ``(new_state, metrics)`` with the server-side metrics
+    (``n_active``, ``omega_eff``, ``e_s``/``e_p``, ``h_norm_sq``, aux);
+    the scheduler merges in the cohorts' comm accounting."""
+    problem = as_problem(problem)
+    param_space = spec.aggregation == "parameter"
+    n_active = jnp.asarray(n_active, jnp.float32)
+    new_state, h, aux_metrics = _server_apply(
+        problem, spec, state, agg, state.v_i, n_active, gamma)
+    comm = spec.compressor.round_metrics(state.x, p=spec.participation)
+    metrics = {
+        "n_active": n_active,
+        "omega_eff": jnp.asarray(comm["omega_eff"], jnp.float32),
+    }
+    if drift_metric:
+        drift = tree_sub(new_state.x, state.x)
+        metrics["e_p" if param_space else "e_s"] = \
+            tree_sq_norm(drift) / (gamma ** 2)
+    if not param_space:
+        metrics["h_norm_sq"] = tree_sq_norm_ew(h)
+    metrics.update(aux_metrics)
     return new_state, metrics
 
 

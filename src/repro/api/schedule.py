@@ -18,23 +18,44 @@ Schedule = Union[callable, Sequence, float]
 
 
 def resolve_schedule(gammas: Schedule, n_rounds: int) -> jnp.ndarray:
-    """Materialize a step-size schedule as a float32 array of length
-    ``n_rounds``.
+    """Materialize a step-size schedule as a float32 array of shape
+    ``(n_rounds,)`` — one SCALAR gamma per round, validated eagerly.
 
     * callable: evaluated at t = 1..n_rounds (the paper's 1-indexed
       gamma_t convention, matching the legacy ``gammas(t + 1)`` call sites);
     * sequence/array: the first ``n_rounds`` entries (must be long enough);
     * python scalar: a constant schedule.
+
+    Every consumer indexes the resolved array by a (possibly traced) round
+    counter — ``gammas[t]`` under jit CLAMPS out-of-range indices to the
+    last entry instead of raising, so a short or wrongly-shaped schedule
+    would silently replay its last gamma (or broadcast a vector gamma into
+    the server update). Both are rejected HERE, at resolution time, where
+    the shapes are still static and the error can name the problem.
     """
     if callable(gammas):
-        vals = [gammas(t + 1) for t in range(n_rounds)]
-        return jnp.asarray(jnp.stack([jnp.asarray(v, jnp.float32) for v in vals]))
+        vals = [jnp.asarray(gammas(t + 1), jnp.float32)
+                for t in range(n_rounds)]
+        bad = [v.shape for v in vals if v.ndim != 0]
+        if bad:
+            raise ValueError(
+                f"callable schedule must return a scalar gamma per round, "
+                f"got array shape(s) {sorted(set(bad))} — a non-scalar "
+                f"gamma would silently broadcast into the server update")
+        return jnp.stack(vals) if vals else jnp.zeros((0,), jnp.float32)
     arr = jnp.asarray(gammas, jnp.float32)
     if arr.ndim == 0:
         return jnp.full((n_rounds,), arr)
+    if arr.ndim > 1:
+        raise ValueError(
+            f"schedule must be a 1-D array of per-round scalar gammas, got "
+            f"shape {tuple(arr.shape)} — a {arr.ndim}-D schedule would "
+            f"silently broadcast vector gammas into the server update")
     if arr.shape[0] < n_rounds:
         raise ValueError(
-            f"schedule has {arr.shape[0]} entries < n_rounds={n_rounds}")
+            f"schedule has {arr.shape[0]} entries < n_rounds={n_rounds} — "
+            f"indexing it by round under jit would silently clamp to the "
+            f"last entry instead of raising")
     return arr[:n_rounds]
 
 

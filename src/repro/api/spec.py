@@ -32,11 +32,23 @@ delta:          "drift"  — clients send oracle - iterate - V_i
                            (Algorithm 2 line 7);
                 "oracle" — clients send the oracle output itself
                            (FedAdam: raw local gradients).
+server_momentum: heavy-ball momentum on the aggregated direction h
+                (FedAvgM: m <- beta m + h, iterate update uses m). 0
+                disables; incompatible with a custom MMProblem.server_opt
+                (which owns the server update entirely).
+max_staleness / staleness_weight: bounded-staleness async semantics for
+                the cohort scheduler (``repro.sched``). A cohort landing
+                tau server-updates after it was launched contributes with
+                weight ``staleness_weight(tau)``; ``max_staleness`` forces
+                cohorts older than the bound to land before the next
+                update. ``staleness_weight(0)`` MUST be 1 so a fresh
+                (synchronous) cohort recovers the sync algorithm exactly.
+                Ignored by the synchronous ``api.run`` loop.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +74,9 @@ class FederationSpec:
     aggregation: str = "surrogate"              # surrogate | parameter
     normalization: str = "expected"             # expected | realized
     delta: str = "drift"                        # drift | oracle
+    server_momentum: float = 0.0                # FedAvgM heavy-ball beta
+    max_staleness: Optional[int] = None         # async drain bound (sched)
+    staleness_weight: Optional[Callable[[int], float]] = None  # w(tau)
 
     def __post_init__(self):
         if not (0.0 < self.participation <= 1.0):
@@ -103,6 +118,24 @@ class FederationSpec:
         if self.variates == "off" and self.alpha != 0.0:
             raise ValueError("variates='off' drops V/V_i entirely; "
                              "alpha must be 0")
+        if not (0.0 <= self.server_momentum < 1.0):
+            raise ValueError(f"server_momentum must be in [0, 1), got "
+                             f"{self.server_momentum}")
+        if self.max_staleness is not None and self.max_staleness < 0:
+            raise ValueError(f"max_staleness must be None or >= 0, got "
+                             f"{self.max_staleness}")
+        if self.staleness_weight is not None:
+            if not callable(self.staleness_weight):
+                raise ValueError("staleness_weight must be a callable "
+                                 "tau -> weight")
+            w0 = float(self.staleness_weight(0))
+            # w(0) == 1 is the contract that makes async with no staleness
+            # collapse to the sync algorithm — anything else silently
+            # rescales every fresh cohort's contribution to h
+            if abs(w0 - 1.0) > 1e-6:
+                raise ValueError(
+                    f"staleness_weight(0) must be 1.0 so a fresh cohort "
+                    f"recovers the synchronous update exactly, got {w0:.6g}")
 
     # -- derived ------------------------------------------------------------
     def client_weights(self) -> jnp.ndarray:

@@ -68,6 +68,7 @@ class FedLMConfig:
     use_cv: bool = True            # False (alpha=0 regime): drop V/V_i
                                    # entirely — saves 2x params of state
                                    # (Theorem 1's omega_p=0 / alpha=0 case)
+    server_momentum: float = 0.0   # FedAvgM heavy-ball beta on the server
     # explicit FederationSpec: overrides n_clients/p/alpha/use_cv/quant_*
     # (the same object the repro.api driver and core shims consume)
     federation: Optional[api.FederationSpec] = None
@@ -90,7 +91,8 @@ class FedLMConfig:
         return api.FederationSpec(
             n_clients=self.n_clients, participation=self.p,
             alpha=self.alpha if self.use_cv else 0.0,
-            variates="zero" if self.use_cv else "off", compressor=comp)
+            variates="zero" if self.use_cv else "off", compressor=comp,
+            server_momentum=self.server_momentum)
 
 
 def resolve_compressor(cfg: FedLMConfig) -> Compressor:
@@ -106,6 +108,8 @@ class FedLMState(NamedTuple):
     v: object
     v_i: object                    # leading client dim
     step: jnp.ndarray
+    opt: object = ()               # FedAvgM momentum buffer (param-shaped
+                                   # when cfg.server_momentum > 0)
 
 
 def param_count(model: Model) -> int:
@@ -133,12 +137,17 @@ def T_map(s_hat, cfg: FedLMConfig):
 def init_state(model: Model, key, cfg: FedLMConfig) -> FedLMState:
     spec = cfg.federation_spec()
     params = model.init(key)
+    # m_0 = 0 heavy-ball buffer when the spec carries server momentum
+    opt = (jax.tree.map(jnp.zeros_like, params)
+           if spec.server_momentum > 0.0 else ())
     if not spec.use_variates:
-        return FedLMState(s_hat=params, v={}, v_i={}, step=jnp.asarray(0))
+        return FedLMState(s_hat=params, v={}, v_i={}, step=jnp.asarray(0),
+                          opt=opt)
     v = jax.tree.map(jnp.zeros_like, params)
     v_i = jax.tree.map(
         lambda x: jnp.zeros((spec.n_clients,) + x.shape, x.dtype), params)
-    return FedLMState(s_hat=params, v=v, v_i=v_i, step=jnp.asarray(0))
+    return FedLMState(s_hat=params, v=v, v_i=v_i, step=jnp.asarray(0),
+                      opt=opt)
 
 
 def make_problem(model: Model, cfg: FedLMConfig) -> "api.MMProblem":
@@ -200,7 +209,7 @@ def make_train_step(model: Model, cfg: FedLMConfig, mesh=None,
 
     def train_step(state: FedLMState, batch, key, gamma):
         dstate = api.DriverState(x=state.s_hat, v=state.v, v_i=state.v_i,
-                                 aux=(), opt=(), step=state.step)
+                                 aux=(), opt=state.opt, step=state.step)
         new, m = api.step(problem, spec, dstate, batch, gamma, key,
                           mesh=mesh, client_axis=client_axis,
                           client_mode=driver_mode, uplink=uplink,
@@ -217,7 +226,7 @@ def make_train_step(model: Model, cfg: FedLMConfig, mesh=None,
             s_hat=new.x,
             v=new.v if use_cv else state.v,
             v_i=new.v_i if use_cv else state.v_i,
-            step=new.step), metrics
+            step=new.step, opt=new.opt), metrics
 
     return train_step
 

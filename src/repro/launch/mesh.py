@@ -37,6 +37,22 @@ def client_axes(multi_pod: bool):
     return ("pod", "data") if multi_pod else ("data",)
 
 
+def cohort_capacity(mesh, client_axis: str = "clients",
+                    per_device: int = 1) -> int:
+    """The cohort size a ``repro.sched.CohortScheduler`` should stream
+    through ``mesh``: one client slot per device on the client axis times
+    ``per_device`` (raise it when a single client's oracle underfills a
+    device). This is the C that makes the shard_mapped client stage run
+    with zero idle devices and device memory independent of the population
+    size — the scheduler pads the last ragged cohort up to it."""
+    if client_axis not in mesh.shape:
+        raise ValueError(f"client_axis={client_axis!r} not an axis of "
+                         f"the mesh (axes: {tuple(mesh.shape)})")
+    if per_device < 1:
+        raise ValueError(f"per_device must be >= 1, got {per_device}")
+    return int(mesh.shape[client_axis]) * per_device
+
+
 def axis_rules(multi_pod: bool) -> dict:
     """Logical-axis -> mesh-axis rules installed for activations."""
     fsdp = client_axes(multi_pod)

@@ -1,0 +1,14 @@
+"""repro.sched — population / cohort scheduling, decoupled from the mesh.
+
+``ClientPopulation`` holds per-client persistent state (control-variate
+arena, fold_in key streams, participation counters) on HOST;
+``CohortScheduler`` streams cohorts of mesh-capacity size through the
+driver's ``step(..., cohort=...)`` client stage, synchronously (barrier
+per round, bit-identical to ``api.run`` for a single full cohort) or
+asynchronously with a bounded-staleness surrogate buffer
+(``FederationSpec.max_staleness`` / ``staleness_weight``). See
+api/README.md "Populations, cohorts & staleness".
+"""
+from .population import ClientPopulation  # noqa: F401
+from .scheduler import CohortScheduler, cohort_ids  # noqa: F401
+from . import staleness  # noqa: F401

@@ -1,0 +1,168 @@
+"""ClientPopulation — per-client persistent state, decoupled from the mesh.
+
+Everything through the sharded driver assumes the whole population lives
+in one stacked device axis (the ``(n, ...)`` ``v_i`` pytree in
+``DriverState``), so n is capped by device memory. The population arena
+breaks that: per-client control variates live in a packed HOST arena
+(one ``(n_total, *leaf.shape)`` numpy array per model leaf), and only the
+current cohort's ``(C, ...)`` slice is ever gathered onto the device —
+device memory is O(C * model), independent of n_total.
+
+Per-client PRNG streams are derived by ``fold_in(base_key, client_id)``,
+so a client's stream depends only on its GLOBAL id — stable under any
+cohort assignment (the same client sampled into different cohorts across
+rounds draws the same stream). Note the distinction from the per-round
+A4 quantization keys: those follow the driver's shared key fold
+(``participation_draw``: ``split(k_quant, n_total)`` indexed by the
+cohort's ids) so a single-cohort sync round stays bit-identical to
+``api.run`` — see api/README.md "Populations, cohorts & staleness".
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..api.spec import FederationSpec
+
+
+class ClientPopulation:
+    """Host arena for a population of ``spec.n_clients`` clients: control
+    variates (when the spec uses them), participation counters, and the
+    ``fold_in``-derived per-client key streams.
+
+    ``x0`` fixes the per-client variate leaf shapes/dtypes (one arena row
+    per client per leaf). The arena starts at the ``variates='zero'``
+    initialization; use ``warm_start_variates`` for the streaming
+    ``'at-init'`` warm start."""
+
+    def __init__(self, spec: FederationSpec, x0, *, base_key=None):
+        self.spec = spec
+        self.n_total = spec.n_clients
+        if base_key is None:
+            base_key = jax.random.PRNGKey(0)
+        self.base_key = base_key
+        # the global client weights, pulled to host ONCE: cohort slices are
+        # cut from this numpy copy so no (n_total,) device array stays live
+        mu_dev = spec.client_weights()
+        # copy=True: a zero-copy numpy view would pin the (n_total,)
+        # device buffer alive behind this host copy
+        self.mu = np.array(mu_dev, np.float32, copy=True)
+        del mu_dev
+        self.participation_counts = np.zeros((self.n_total,), np.int64)
+        self.rounds_seen = 0
+        if spec.use_variates:
+            leaves, treedef = jax.tree.flatten(x0)
+            self._treedef = treedef
+            self._arena = [np.zeros((self.n_total,) + tuple(leaf.shape),
+                                    np.asarray(leaf).dtype)
+                           for leaf in leaves]
+        else:
+            self._treedef = None
+            self._arena = None
+
+    # -- per-client PRNG ----------------------------------------------------
+    def client_keys(self, ids):
+        """Persistent per-client streams: ``fold_in(base_key, id)`` per
+        GLOBAL id — stable under cohorting (data sampling, local-epoch
+        shuffling). NOT the per-round quantization keys, which come off
+        the driver's shared ``participation_draw`` fold."""
+        ids = jnp.asarray(np.asarray(ids), jnp.uint32)
+        return jax.vmap(lambda i: jax.random.fold_in(self.base_key, i))(ids)
+
+    # -- variate arena ------------------------------------------------------
+    @property
+    def has_variates(self) -> bool:
+        return self._arena is not None
+
+    def gather_variates(self, ids):
+        """The cohort's ``(C, ...)`` control-variate slice, as device
+        arrays. Rows for padded (duplicate) ids are real copies — the
+        cohort mask zeroes their contribution downstream."""
+        if self._arena is None:
+            return ()
+        ids = np.asarray(ids)
+        return jax.tree.unflatten(
+            self._treedef, [jnp.asarray(leaf[ids]) for leaf in self._arena])
+
+    def scatter_variates(self, ids, v_new, valid: Optional[np.ndarray] = None):
+        """Write a cohort's updated variate rows back into the arena.
+        ``valid`` masks out padded slots (their rows duplicate a real
+        client and must not clobber it)."""
+        if self._arena is None:
+            return
+        ids = np.asarray(ids)
+        if valid is not None:
+            keep = np.asarray(valid) > 0.5
+            ids = ids[keep]
+        new_leaves = jax.tree.leaves(v_new)
+        if len(new_leaves) != len(self._arena):
+            raise ValueError(
+                f"scatter_variates got {len(new_leaves)} leaves for an "
+                f"arena of {len(self._arena)} — cohort slice and arena "
+                f"must share the model tree structure")
+        for arena_leaf, new_leaf in zip(self._arena, new_leaves):
+            rows = np.asarray(new_leaf)
+            if valid is not None:
+                rows = rows[keep]
+            arena_leaf[ids] = rows
+
+    def variates(self):
+        """The full ``(n_total, ...)`` arena as a HOST pytree (tests /
+        checkpointing; never pushed to device by the scheduler)."""
+        if self._arena is None:
+            return ()
+        return jax.tree.unflatten(self._treedef, list(self._arena))
+
+    def weighted_variate_sum(self):
+        """V = sum_i mu_i V_i, computed ON HOST leaf by leaf (the server
+        variate for a scheduler's initial ``DriverState``). Exact zeros
+        for the 'zero' initialization; reassociation-close to the
+        driver's device tensordot after a warm start."""
+        if self._arena is None:
+            return ()
+        mu = self.mu
+        return jax.tree.unflatten(
+            self._treedef,
+            [jnp.asarray(np.tensordot(mu, leaf, axes=1).astype(leaf.dtype))
+             for leaf in self._arena])
+
+    # -- bookkeeping --------------------------------------------------------
+    def record_participation(self, ids, active,
+                             valid: Optional[np.ndarray] = None):
+        """Count realized participations per client (padded slots skipped)."""
+        ids = np.asarray(ids)
+        hit = np.asarray(active) > 0.5
+        if valid is not None:
+            hit = hit & (np.asarray(valid) > 0.5)
+        np.add.at(self.participation_counts, ids[hit], 1)
+
+    # -- 'at-init' warm start ----------------------------------------------
+    def warm_start_variates(self, problem, x0, init_batch_fn, *,
+                            cohort_size: int):
+        """Streaming ``variates='at-init'`` (Theorem 1's warm start):
+        V_{0,i} = h_i(Shat_0), computed one cohort at a time so no
+        ``(n_total, ...)`` stack ever exists on device.
+        ``init_batch_fn(ids) -> (len(ids), ...)`` client batch pytree."""
+        if self._arena is None:
+            raise ValueError("warm_start_variates needs a spec with "
+                             "variates enabled")
+        from ..api.problem import as_problem
+        problem = as_problem(problem)
+        param_space = self.spec.aggregation == "parameter"
+        theta0 = x0 if param_space else problem.T(x0)
+
+        def one(batch):
+            s_i = problem.s_bar(batch, theta0)
+            out = problem.T(s_i) if param_space else s_i
+            return jax.tree.map(lambda o, x: o - x, out, x0)
+
+        rows_j = jax.jit(jax.vmap(one))
+        for lo in range(0, self.n_total, cohort_size):
+            ids = np.arange(lo, min(lo + cohort_size, self.n_total))
+            rows = rows_j(init_batch_fn(ids))
+            self.scatter_variates(ids, rows)
+            del rows

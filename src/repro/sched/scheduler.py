@@ -1,0 +1,417 @@
+"""CohortScheduler — stream a population through the mesh, cohort by cohort.
+
+The driver's ``step`` runs ALL n clients as one stacked stage; the
+scheduler runs the same round as ceil(n / C) cohort slices of size C (the
+mesh's client capacity — ``launch.mesh.cohort_capacity``) through
+``step(..., cohort=...)``, accumulates the returned ``CohortPartial``s in
+a surrogate buffer, and lands the buffered aggregate with
+``api.apply_partial``. Device memory is O(C * model + C * payload) —
+independent of the population size; the O(n_total) state (the variate
+arena, participation counters, the round's participation/key draw) lives
+on host in the ``ClientPopulation``.
+
+Two aggregation modes:
+
+* ``mode="sync"`` — barrier per round. The key chain, per-client key
+  fold, cohort arithmetic and server update replicate ``api.run``'s
+  operation for operation: with ONE full-participation cohort (C >= n)
+  the trajectory and metrics are BIT-IDENTICAL to ``api.run`` (pinned in
+  tests/test_scheduler.py, both uplink modes); with multiple cohorts the
+  weighted reduce is re-associated cohort-by-cohort, so trajectories
+  match to allclose.
+
+* ``mode="async"`` — bounded-staleness, FedBuff-style. Cohorts are
+  launched into an in-flight window of ``max_inflight`` and computed
+  EAGERLY against the iterate at launch time; a landing order (FIFO,
+  reordered by ``delay_fn``) drains them into the buffer with weight
+  ``spec.staleness_weight(tau)`` where tau = server updates since
+  launch; after ``buffer_cohorts`` landings the buffer applies one
+  server update. ``spec.max_staleness`` forces every over-bound in-flight
+  cohort to land before the next update (the bounded-staleness drain).
+  With the defaults (window = one population pass, ``delay_fn=None``,
+  ``staleness_weight(0) == 1``) every cohort lands fresh and the
+  trajectory is bit-identical to ``mode="sync"`` — the property pinned
+  in tests/test_scheduler.py.
+
+Incremental-MM reading (Mairal 2014): each client's surrogate block is
+updated when its cohort lands while the other blocks stay frozen —
+bounded staleness bounds how frozen, and ``staleness_weight`` shrinks a
+stale block's move toward its fresh value.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..api.driver import (CohortSlice, DriverState, _stack_metrics,
+                          apply_partial, step)
+from ..api.problem import as_problem
+from ..api.schedule import resolve_schedule, schedule_length
+from ..api.spec import FederationSpec, participation_draw
+from .population import ClientPopulation
+
+
+def cohort_ids(n_total: int, cohort_size: int):
+    """Static cohort assignment: contiguous slices of the population,
+    the last one PADDED up to ``cohort_size`` by repeating its first id
+    (every jitted cohort step sees the same (C, ...) shapes — one
+    compilation). Returns a list of ``(ids, valid)`` numpy pairs; padded
+    slots have valid == 0.0 and are masked out of the aggregate, the
+    byte accounting and the metric sums."""
+    if cohort_size < 1:
+        raise ValueError(f"cohort_size must be >= 1, got {cohort_size}")
+    out = []
+    for lo in range(0, n_total, cohort_size):
+        real = np.arange(lo, min(lo + cohort_size, n_total))
+        pad = cohort_size - real.size
+        ids = np.concatenate([real, np.full((pad,), real[0])]) if pad \
+            else real
+        valid = np.concatenate(
+            [np.ones((real.size,), np.float32), np.zeros((pad,), np.float32)])
+        out.append((ids.astype(np.int64), valid))
+    return out
+
+
+class _PartialBuffer:
+    """Accumulates staleness-weighted ``CohortPartial``s between server
+    updates. The first partial is adopted WITHOUT an add (and a weight of
+    exactly 1.0 skips the multiply), so a single-cohort sync round feeds
+    ``apply_partial`` the cohort's own ``agg`` buffers bit-for-bit."""
+
+    def __init__(self):
+        self.agg = None
+        self.n_active = jnp.float32(0.0)
+        self.comm_bytes = jnp.float32(0.0)
+        self.collective_payload_bytes = None
+        self.metric_sums = None
+        self.staleness = []
+
+    def add(self, partial, weight: float, tau: int = 0):
+        if weight == 1.0:
+            agg = partial.agg
+        else:
+            w = float(weight)
+            agg = jax.tree.map(lambda x: (w * x).astype(x.dtype),
+                               partial.agg)
+        self.agg = agg if self.agg is None else jax.tree.map(
+            lambda a, b: a + b, self.agg, agg)
+        # accounting is unweighted: these cohorts really did participate
+        # and really did send those bytes, however downweighted they land
+        self.n_active = self.n_active + partial.n_active
+        self.comm_bytes = self.comm_bytes + partial.comm_bytes
+        if partial.collective_payload_bytes is not None:
+            prev = self.collective_payload_bytes
+            self.collective_payload_bytes = (
+                partial.collective_payload_bytes if prev is None
+                else prev + partial.collective_payload_bytes)
+        if self.metric_sums is None:
+            self.metric_sums = dict(partial.metric_sums)
+        else:
+            self.metric_sums = {
+                k: self.metric_sums[k] + v
+                for k, v in partial.metric_sums.items()}
+        self.staleness.append(int(tau))
+
+
+class _Inflight(NamedTuple):
+    launch_updates: int     # server-update count when the cohort computed
+    order: int              # global launch order (FIFO tiebreak)
+    partial: object         # the CohortPartial
+    wave: int               # which population pass launched it
+
+
+class CohortScheduler:
+    """Streams cohorts of ``cohort_size`` clients through the driver's
+    client stage on ``mesh`` (or single-device). ``cohort_size`` should
+    divide over the mesh's client axis — ``launch.mesh.cohort_capacity``
+    gives the natural choice."""
+
+    def __init__(self, problem, spec: FederationSpec, *, cohort_size: int,
+                 mesh=None, client_axis: str = "clients",
+                 client_mode: str = "vmap", uplink: str = "gather",
+                 drift_metric: bool = True):
+        self.problem = as_problem(problem)
+        self.spec = spec
+        self.cohort_size = int(cohort_size)
+        self.mesh = mesh
+        self.client_axis = client_axis
+        self.client_mode = client_mode
+        self.uplink = uplink
+        self.drift_metric = drift_metric
+        self.n_cohorts = math.ceil(spec.n_clients / self.cohort_size)
+        problem_ = self.problem
+        spec_ = self.spec
+
+        def _cohort(state, batch, mask, mu_s, qkeys, v_i, valid):
+            cohort = CohortSlice(mask=mask, mu=mu_s, quant_keys=qkeys,
+                                 v_i=v_i, valid=valid)
+            return step(problem_, spec_, state, batch, 0.0, None,
+                        mesh=mesh, client_axis=client_axis,
+                        client_mode=client_mode, uplink=uplink,
+                        cohort=cohort)
+
+        def _apply(state, agg, n_active, gamma):
+            return apply_partial(problem_, spec_, state, agg, n_active,
+                                 gamma, drift_metric=drift_metric)
+
+        self._cohort_j = jax.jit(_cohort)
+        self._apply_j = jax.jit(_apply)
+        if self.problem.loss is not None:
+            param_space = spec.aggregation == "parameter"
+
+            def _eval(x, batch):
+                theta = x if param_space else problem_.T(x)
+                return jnp.asarray(problem_.loss(batch, theta), jnp.float32)
+
+            self._eval_j = jax.jit(_eval)
+        else:
+            self._eval_j = None
+
+    # -- state --------------------------------------------------------------
+    def init_state(self, x0, population: ClientPopulation) -> DriverState:
+        """The scheduler's ``DriverState``: like ``api.init`` but the
+        per-client variates stay in the population arena — ``v_i`` is
+        ``()`` and never O(n_total) on device."""
+        problem, spec = self.problem, self.spec
+        v = population.weighted_variate_sum() if spec.use_variates else ()
+        aux = problem.init_aux() if problem.init_aux is not None else ()
+        if spec.server_momentum > 0.0:
+            if problem.server_opt is not None or problem.init_opt is not None:
+                raise ValueError(
+                    "server_momentum and a custom MMProblem.server_opt/"
+                    "init_opt both claim the server update — fold the "
+                    "momentum into your server_opt instead")
+            opt = jax.tree.map(jnp.zeros_like, x0)
+        else:
+            opt = problem.init_opt(x0) if problem.init_opt is not None else ()
+        return DriverState(x=x0, v=v, v_i=(), aux=aux, opt=opt,
+                           step=jnp.asarray(0))
+
+    # -- one cohort through the client stage --------------------------------
+    def _run_cohort(self, state, t_wave, k_batch, ids, valid, active, qkeys,
+                    pop: ClientPopulation, data_fn):
+        mask = active[ids].astype(np.float32) * valid
+        mu_s = pop.mu[ids] * valid
+        batch = data_fn(t_wave, k_batch, ids)
+        v_i = pop.gather_variates(ids) if self.spec.use_variates else ()
+        partial = self._cohort_j(state, batch, jnp.asarray(mask),
+                                 jnp.asarray(mu_s), jnp.asarray(qkeys[ids]),
+                                 v_i, jnp.asarray(valid))
+        if self.spec.use_variates:
+            # client-local state updates at COMPUTE time (the client did
+            # its round then), even if the partial lands stale later
+            pop.scatter_variates(ids, partial.v_i, valid)
+        pop.record_participation(ids, mask, valid)
+        del v_i, batch
+        return partial
+
+    def _draw_wave(self, k_round):
+        """One population pass's participation + quantization draw, pulled
+        to HOST immediately: the (n_total,) active mask and (n_total, 2)
+        key table are numpy, so no O(n_total) device array outlives the
+        draw — cohorts push back only (C,)-shaped slices."""
+        active_d, qkeys_d = participation_draw(k_round, self.spec)
+        # np.array with copy=True: np.asarray of a CPU jax array can be a
+        # zero-copy VIEW whose base keeps the device buffer alive — the
+        # copy lets the (n_total,) draw free immediately
+        active = np.array(active_d, copy=True)
+        qkeys = np.array(qkeys_d, copy=True)
+        del active_d, qkeys_d
+        return active, qkeys
+
+    def _land(self, state, buffer: _PartialBuffer, gamma, t_idx, n_rounds,
+              eval_batch, eval_every):
+        """Apply the buffered aggregate and assemble the round's metrics
+        row (matching ``api.run``'s keys and arithmetic)."""
+        n_total = self.spec.n_clients
+        state, m = self._apply_j(state, buffer.agg, buffer.n_active,
+                                 jnp.float32(gamma))
+        m = dict(m)
+        m["comm_bytes"] = buffer.comm_bytes
+        if buffer.collective_payload_bytes is not None:
+            m["collective_payload_bytes"] = jnp.asarray(
+                buffer.collective_payload_bytes, jnp.float32)
+        sums = buffer.metric_sums or {}
+        dup = set(sums) & set(m)
+        if dup:
+            raise ValueError(f"s_bar_metrics keys {sorted(dup)} collide "
+                             f"with driver metrics — rename them in the "
+                             f"problem")
+        # sum / n_total == the driver's jnp.mean over the client axis
+        m.update({k: v / n_total for k, v in sums.items()})
+        if self._eval_j is not None and eval_batch is not None:
+            if "loss" in m:
+                raise ValueError(
+                    "metric key collision: the problem's s_bar_metrics "
+                    "already reports a per-client 'loss' and the eval hook "
+                    "would overwrite it — drop eval_batch or rename the "
+                    "client metric")
+            if (t_idx + 1) % eval_every == 0 or t_idx == n_rounds - 1:
+                m["loss"] = self._eval_j(state.x, eval_batch)
+            else:
+                m["loss"] = jnp.float32(jnp.nan)
+        if buffer.staleness:
+            stale = np.asarray(buffer.staleness, np.float32)
+            m["staleness_mean"] = jnp.float32(stale.mean())
+            m["staleness_max"] = jnp.float32(stale.max())
+        return state, m
+
+    # -- driving loops -------------------------------------------------------
+    def run(self, x0, data_fn, schedule, *, key, n_rounds: Optional[int] = None,
+            population: Optional[ClientPopulation] = None,
+            mode: str = "sync", eval_batch=None, eval_every: int = 1,
+            max_inflight: Optional[int] = None,
+            buffer_cohorts: Optional[int] = None,
+            delay_fn: Optional[Callable[[int], int]] = None,
+            state0: Optional[DriverState] = None):
+        """Drive ``n_rounds`` server updates.
+
+        data_fn: ``(t, key, ids) -> (len(ids), ...)`` client batch pytree
+        for the GLOBAL client ids ``ids`` (padded slots repeat a real id;
+        their rows are computed and discarded). ``t`` is the round index
+        in sync mode and the population-pass (wave) index in async mode;
+        ``key`` is the wave's ``k_batch`` off the same host chain as
+        ``api.run`` — slicing the rows of ``api.run``'s per-round batch
+        reproduces its data exactly.
+
+        Async knobs (``mode="async"`` only): ``max_inflight`` cohorts in
+        flight (default one population pass), ``buffer_cohorts`` landings
+        per server update (default one population pass), ``delay_fn(i) ->
+        int`` reorders landings (entry i becomes eligible at virtual time
+        ``i + delay_fn(i)``; None/0 = FIFO = sync-equivalent).
+
+        Returns ``(DriverState, ClientPopulation, metrics)`` with metrics
+        a stacked-pytree dict, one leading row per server update."""
+        if mode not in ("sync", "async"):
+            raise ValueError(f"mode={mode!r} (want 'sync' or 'async')")
+        if n_rounds is None:
+            n_rounds = schedule_length(schedule)
+            if n_rounds is None:
+                raise ValueError("n_rounds required with a callable "
+                                 "schedule")
+        gammas = np.asarray(resolve_schedule(schedule, n_rounds), np.float32)
+        if population is None:
+            population = ClientPopulation(self.spec, x0)
+        if population.n_total != self.spec.n_clients:
+            raise ValueError(
+                f"population holds {population.n_total} clients but the "
+                f"spec says {self.spec.n_clients}")
+        state = state0 if state0 is not None else \
+            self.init_state(x0, population)
+        cohorts = cohort_ids(self.spec.n_clients, self.cohort_size)
+        if mode == "sync":
+            return self._run_sync(state, data_fn, gammas, key, n_rounds,
+                                  population, cohorts, eval_batch,
+                                  eval_every)
+        return self._run_async(state, data_fn, gammas, key, n_rounds,
+                               population, cohorts, eval_batch, eval_every,
+                               max_inflight, buffer_cohorts, delay_fn)
+
+    def _run_sync(self, state, data_fn, gammas, key, n_rounds, pop, cohorts,
+                  eval_batch, eval_every):
+        rows = []
+        for t in range(n_rounds):
+            # the EXACT api.run host key chain: (k_round, k_batch) per round
+            key, k_round, k_batch = jax.random.split(key, 3)
+            active, qkeys = self._draw_wave(k_round)
+            buf = _PartialBuffer()
+            for ids, valid in cohorts:
+                partial = self._run_cohort(state, t, k_batch, ids, valid,
+                                           active, qkeys, pop, data_fn)
+                buf.add(partial, 1.0)
+            pop.rounds_seen += 1
+            state, m = self._land(state, buf, gammas[t], t, n_rounds,
+                                  eval_batch, eval_every)
+            rows.append(m)
+        return state, pop, _stack_metrics(rows)
+
+    def _run_async(self, state, data_fn, gammas, key, n_rounds, pop, cohorts,
+                   eval_batch, eval_every, max_inflight, buffer_cohorts,
+                   delay_fn):
+        spec = self.spec
+        k_cohorts = len(cohorts)
+        if max_inflight is None:
+            max_inflight = k_cohorts
+        if buffer_cohorts is None:
+            buffer_cohorts = k_cohorts
+        if max_inflight < 1 or buffer_cohorts < 1:
+            raise ValueError("max_inflight and buffer_cohorts must be >= 1")
+        if buffer_cohorts > max_inflight:
+            raise ValueError(
+                f"buffer_cohorts={buffer_cohorts} > max_inflight="
+                f"{max_inflight} can never fill the buffer — the window "
+                f"admits at most max_inflight unapplied cohorts")
+        weight_fn = spec.staleness_weight or (lambda tau: 1.0)
+        inflight: list[_Inflight] = []
+        pending_wave = []       # cohorts of the current wave not yet launched
+        wave = -1
+        wave_ctx = None         # (k_batch, active, qkeys) of the current wave
+        order = 0
+        updates = 0
+        landed = 0
+        buf = _PartialBuffer()
+        rows = []
+
+        def prio(e: _Inflight) -> int:
+            return e.order + (delay_fn(e.order) if delay_fn else 0)
+
+        while updates < n_rounds:
+            # 1. keep the in-flight window full: compute cohorts EAGERLY
+            #    against the CURRENT iterate (their staleness accrues as
+            #    later updates land before they do). The window counts
+            #    every cohort computed since the last APPLIED update
+            #    (launched + buffered), so max_inflight = one population
+            #    pass means no cross-update pipelining (the sync-exact
+            #    default) and 2x a pass keeps one wave pre-computing
+            #    against the stale iterate while the current wave lands.
+            while len(inflight) + landed < max_inflight:
+                if not pending_wave:
+                    key, k_round, k_batch = jax.random.split(key, 3)
+                    wave += 1
+                    wave_ctx = (k_batch,) + self._draw_wave(k_round)
+                    pending_wave = list(cohorts)
+                ids, valid = pending_wave.pop(0)
+                k_batch, active, qkeys = wave_ctx
+                partial = self._run_cohort(state, wave, k_batch, ids, valid,
+                                           active, qkeys, pop, data_fn)
+                inflight.append(_Inflight(updates, order, partial, wave))
+                order += 1
+            # 2. land one cohort: anything over the staleness bound first
+            #    (forced drain), else the delay-ordered head of the window
+            if spec.max_staleness is not None:
+                forced = [e for e in inflight
+                          if updates - e.launch_updates >= spec.max_staleness]
+            else:
+                forced = []
+            e = (min(forced, key=lambda e: e.order) if forced
+                 else min(inflight, key=prio))
+            inflight.remove(e)
+            tau = updates - e.launch_updates
+            buf.add(e.partial, weight_fn(tau), tau)
+            landed += 1
+            # 3. a full buffer triggers the server update — after draining
+            #    every remaining over-bound cohort (bounded staleness: no
+            #    in-flight cohort may outlive max_staleness updates)
+            if landed >= buffer_cohorts:
+                if spec.max_staleness is not None:
+                    over = sorted(
+                        (e2 for e2 in inflight
+                         if updates - e2.launch_updates >= spec.max_staleness),
+                        key=lambda e2: e2.order)
+                    for e2 in over:
+                        inflight.remove(e2)
+                        tau2 = updates - e2.launch_updates
+                        buf.add(e2.partial, weight_fn(tau2), tau2)
+                state, m = self._land(state, buf, gammas[updates], updates,
+                                      n_rounds, eval_batch, eval_every)
+                rows.append(m)
+                updates += 1
+                pop.rounds_seen += 1
+                landed = 0
+                buf = _PartialBuffer()
+        return state, pop, _stack_metrics(rows)

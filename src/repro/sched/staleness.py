@@ -1,0 +1,47 @@
+"""Staleness weight functions for bounded-staleness surrogate aggregation.
+
+A cohort partial that lands tau server updates after it was computed is a
+STALE block of the incremental-MM surrogate sum (Mairal 2014: update one
+client's surrogate block, keep the rest frozen) — downweighting it by
+``w(tau)`` trades variance against staleness bias. Every weight function
+here satisfies the driver contract ``w(0) == 1`` EXACTLY (validated again
+by ``FederationSpec.__post_init__``), so a cohort landing fresh
+contributes exactly what the synchronous algorithm would give it and
+async-with-no-delay degenerates to sync bit-for-bit.
+
+The functions return plain Python floats: weights are applied host-side
+by the scheduler's buffer (a weight of exactly 1.0 skips the multiply
+entirely to preserve sync bit-identity).
+"""
+from __future__ import annotations
+
+
+def constant():
+    """w(tau) = 1 — pure FedBuff-style unweighted buffering."""
+    def weight(tau: int) -> float:
+        del tau
+        return 1.0
+    return weight
+
+
+def polynomial(a: float = 0.5):
+    """w(tau) = (1 + tau)^-a — the polynomial decay of staleness-aware
+    async SGD; a = 0.5 is the usual default."""
+    if a < 0.0:
+        raise ValueError(f"polynomial decay needs a >= 0, got {a}")
+
+    def weight(tau: int) -> float:
+        return float((1.0 + tau) ** (-a))
+    return weight
+
+
+def exponential(base: float = 0.5):
+    """w(tau) = base^tau — aggressive decay for workloads where stale
+    surrogates mostly add noise."""
+    if not (0.0 < base <= 1.0):
+        raise ValueError(f"exponential decay needs base in (0, 1], got "
+                         f"{base}")
+
+    def weight(tau: int) -> float:
+        return float(base ** tau)
+    return weight

@@ -1,0 +1,42 @@
+"""RPL002/RPL003 non-firing: the PR-7 cohort-scheduler orchestration
+idiom — host numpy population state and eager python driving loops
+AROUND a jitted cohort step, keys threaded in from the caller's chain.
+The linter must not mistake host-side orchestration for traced code."""
+import jax
+import numpy as np
+
+
+class Population:
+    def __init__(self, n_total, dim):
+        # host arena + counters: eager numpy state is fine
+        self.arena = np.zeros((n_total, dim), np.float32)
+        self.counts = np.zeros((n_total,), np.int64)
+
+    def record(self, ids, active):
+        # in-place host accounting outside any trace: fine
+        np.add.at(self.counts, np.asarray(ids)[np.asarray(active) > 0.5], 1)
+
+
+@jax.jit
+def cohort_step(x, batch, mask, keys):
+    # per-client keys come IN from the host chain, fold_in on traced ids
+    # would also be fine — no constant PRNGKey inside the trace
+    noise = jax.vmap(lambda k, b: b + jax.random.normal(k, b.shape))(
+        keys, batch)
+    return x + (mask[:, None] * noise).sum(0)
+
+
+def drive(pop, x, data, rounds):
+    key = jax.random.PRNGKey(0)     # host root of the chain: the idiom
+    for t in range(rounds):         # eager python loop over rounds: fine
+        key, k_round = jax.random.split(key)
+        ids = np.arange(t % 2, pop.counts.shape[0], 2)
+        keys = jax.random.split(k_round, ids.size)
+        mask = np.ones((ids.size,), np.float32)
+        x = cohort_step(x, data[ids], mask, keys)
+        # explicit host copy of a device result (np.asarray could alias)
+        pop.arena[ids] = np.array(x, copy=True)[None]
+        pop.record(ids, mask)
+        if float(pop.counts.sum()) > 1e9:   # eager host float(): fine
+            break
+    return x

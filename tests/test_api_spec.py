@@ -247,6 +247,43 @@ def test_resolve_schedule_forms():
         api.resolve_schedule([0.1], 5)
 
 
+def test_resolve_schedule_rejects_non_scalar_gammas():
+    """PR 7 regression: ``gammas[t]`` under jit clamps and broadcasts, so
+    a 2-D schedule or a callable returning vectors would silently feed a
+    VECTOR gamma into the server update — both now fail at resolution."""
+    with pytest.raises(ValueError, match="1-D array of per-round scalar"):
+        api.resolve_schedule(np.full((4, 3), 0.1, np.float32), 4)
+    with pytest.raises(ValueError, match="1-D array"):
+        api.resolve_schedule(np.full((4, 1), 0.1, np.float32), 4)
+    with pytest.raises(ValueError, match="scalar gamma per round"):
+        api.resolve_schedule(lambda t: jnp.full((3,), 0.1), 4)
+    # (1,)-shaped returns are arrays too, not scalars
+    with pytest.raises(ValueError, match="scalar gamma per round"):
+        api.resolve_schedule(lambda t: jnp.full((1,), 0.1), 4)
+    # 0-d arrays and python floats stay fine
+    arr = api.resolve_schedule(lambda t: jnp.float32(0.1) * t, 3)
+    assert arr.shape == (3,)
+
+
+def test_spec_staleness_and_momentum_validation():
+    """The PR 7 FederationSpec axes fail loudly at construction."""
+    with pytest.raises(ValueError, match="server_momentum"):
+        api.FederationSpec(n_clients=2, server_momentum=1.0)
+    with pytest.raises(ValueError, match="server_momentum"):
+        api.FederationSpec(n_clients=2, server_momentum=-0.1)
+    with pytest.raises(ValueError, match="max_staleness"):
+        api.FederationSpec(n_clients=2, max_staleness=-1)
+    with pytest.raises(ValueError, match="callable"):
+        api.FederationSpec(n_clients=2, staleness_weight=0.5)
+    with pytest.raises(ValueError, match=r"staleness_weight\(0\) must be"):
+        api.FederationSpec(n_clients=2, staleness_weight=lambda t: 0.9 ** (t + 1))
+    # the contract boundary: w(0) == 1 exactly is fine
+    spec = api.FederationSpec(n_clients=2, max_staleness=0,
+                              staleness_weight=lambda t: 0.9 ** t,
+                              server_momentum=0.99)
+    assert spec.max_staleness == 0 and spec.server_momentum == 0.99
+
+
 def test_naive_is_one_flag_not_a_fork():
     """dataclasses.replace(spec, aggregation='parameter') turns FedMM into
     the Section 3.1 baseline — same driver, same everything else."""
