@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
-from ..core.compression import _tree_bytes
+from ..core.compression import _tree_bytes, verify_payload, zero_invalid_rows
 from ..core.surrogate import (tree_lerp, tree_scale, tree_sub, tree_sq_norm,
                               tree_sq_norm_ew)
 from .problem import MMProblem, as_problem
@@ -81,12 +81,16 @@ class CohortSlice(NamedTuple):
     driver's shared key fold; ``v_i`` the cohort's control-variate slice
     (``()`` when variates are off); ``valid`` an optional real-client
     indicator (1.0 real / 0.0 padded) so per-client metric sums exclude
-    padding — None means every slot is real."""
+    padding — None means every slot is real; ``corrupt`` an optional bool
+    vector flagging clients whose uplink payload is damaged in flight
+    (the ``FaultSpec.corrupt`` draw) — requires a checksummed wire-format
+    compressor, which detects the damage and drops the client."""
     mask: jnp.ndarray
     mu: jnp.ndarray
     quant_keys: jnp.ndarray
     v_i: Pytree = ()
     valid: Optional[jnp.ndarray] = None
+    corrupt: Optional[jnp.ndarray] = None
 
 
 class CohortPartial(NamedTuple):
@@ -184,7 +188,7 @@ def _weighted_reduce(w, q):
 
 def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
                   client_batches, v_i, quant_keys, mask, mu, *,
-                  mesh, client_axis, client_mode, uplink):
+                  mesh, client_axis, client_mode, uplink, corrupt=None):
     """The client half of Algorithm 2, shared by the full-population
     ``step`` and the cohort path: oracles (+ optional per-client metrics),
     drift/A4 compression, the uplink (vmap stack, sequential scan, or one
@@ -195,15 +199,32 @@ def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
     the LOCAL count, not the population.
 
     Returns ``(agg, v_i_new, cmetrics, wire_bytes_client,
-    collective_bytes)``: the masked mu-weighted aggregate (iterate dtype),
-    the updated variate slice, stacked per-client oracle metrics, the
-    measured per-client uplink bytes (None for analytic compressors), and
-    the actual cross-mesh collective bytes (None off-mesh)."""
+    collective_bytes, n_survive)``: the masked mu-weighted aggregate
+    (iterate dtype), the updated variate slice, stacked per-client oracle
+    metrics, the measured per-client uplink bytes (None for analytic
+    compressors), the actual cross-mesh collective bytes (None off-mesh),
+    and the count of active clients whose payload SURVIVED wire
+    verification (== ``sum(mask)`` without a checksummed compressor).
+
+    Wire integrity: when the compressor was built with ``checksum=True``
+    every decode path first recomputes each client's payload digest
+    (``verify_payload``), ZEROES the failing clients' buffers before
+    dequantize (corrupted scale bits can decode to NaN — a NaN times a
+    zero weight would survive any masked reduction), and excludes them
+    from ``n_survive`` — the round degrades exactly as if those clients
+    had not been in the participation draw. ``corrupt`` optionally
+    injects deterministic damage (the ``FaultSpec.corrupt`` draw) into
+    the flagged clients' payloads between encode and verify."""
     p, alpha = spec.participation, spec.alpha
     param_space = spec.aggregation == "parameter"
     use_v = spec.use_variates
     comp = spec.compressor
     use_wire = comp.encode is not None
+    verify = use_wire and comp.checksum
+    if corrupt is not None and not verify:
+        raise ValueError("corrupt flags need a checksummed wire-format "
+                         "compressor (block_quant(..., checksum=True)) — "
+                         "undetected damage would poison the aggregate")
     n_local = mask.shape[0]
     if mesh is not None and n_local % mesh.shape[client_axis] != 0:
         raise ValueError(
@@ -236,23 +257,58 @@ def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
         # dtype-preserving: never let an f32 mask upcast a bf16 payload
         return x * m.astype(x.dtype)
 
+    kind = spec.faults.corrupt_kind if spec.faults is not None else "flip"
+
+    def _checked(payload_s, cflags):
+        """Damage (optional) then verify a stacked/unbatched payload:
+        returns the buffer-zeroed payload and the per-client ok flags.
+        Zeroing BEFORE decode is load-bearing — corrupted scale bits
+        dequantize to NaN, and NaN times a zero weight is still NaN."""
+        if cflags is not None:
+            from ..faults.injector import corrupt_payload
+            payload_s = corrupt_payload(payload_s, cflags, kind)
+        ok = verify_payload(payload_s)
+        return zero_invalid_rows(payload_s, ok), ok
+
     collective_bytes = None
     if client_mode == "scan":
         # sequential clients: one oracle/quantize transient live at a time;
         # the mu_i-weighted aggregate accumulates in the iterate's dtype
-        def body(agg_sum, xs):
-            cb, v_c, qk, mu_c, m_c = xs
+        def body_core(agg_sum, cb, v_c, qk, mu_c, m_c, cf):
             payload_c, cm = upd(cb, v_c, qk)
+            surv_c = m_c
+            if verify:
+                payload_c, ok = _checked(
+                    payload_c, cf if corrupt is not None else None)
+                surv_c = m_c * ok.astype(m_c.dtype)
             q_c = comp.decode(payload_c) if use_wire else payload_c
             q_c = jax.tree.map(lambda x: _mask_q(x, m_c), q_c)
             v_c_new = (_variate_update(v_c, q_c, alpha / p)
                        if use_v else ())
             agg_sum = jax.tree.map(
                 lambda a, x: a + (mu_c * x).astype(a.dtype), agg_sum, q_c)
-            return agg_sum, (v_c_new, cm)
+            return agg_sum, v_c_new, cm, surv_c
         zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), x_ref)
-        agg, (v_i_new, cmetrics) = jax.lax.scan(
-            body, zeros, (client_batches, v_i, quant_keys, mu, mask))
+        if verify:
+            cflags = (corrupt if corrupt is not None
+                      else jnp.zeros((n_local,), jnp.bool_))
+
+            def body(carry, xs):
+                agg_sum, surv = carry
+                agg_sum, v_c_new, cm, surv_c = body_core(agg_sum, *xs)
+                return (agg_sum, surv + surv_c), (v_c_new, cm)
+            (agg, n_survive), (v_i_new, cmetrics) = jax.lax.scan(
+                body, (zeros, jnp.float32(0.0)),
+                (client_batches, v_i, quant_keys, mu, mask, cflags))
+        else:
+            def body(agg_sum, xs):
+                cb, v_c, qk, mu_c, m_c = xs
+                agg_sum, v_c_new, cm, _ = body_core(
+                    agg_sum, cb, v_c, qk, mu_c, m_c, None)
+                return agg_sum, (v_c_new, cm)
+            agg, (v_i_new, cmetrics) = jax.lax.scan(
+                body, zeros, (client_batches, v_i, quant_keys, mu, mask))
+            n_survive = jnp.sum(mask)
         # static per-client wire bytes via eval_shape (no stacked payload
         # exists on this path)
         wire_bytes_client = comp.wire_bytes(x_ref) if use_wire else None
@@ -265,9 +321,17 @@ def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
         cspec = PartitionSpec(client_axis)
         measured = {}
 
-        def client_stage(cb, vi, qk, mu_l, m_l):
+        def stage_local(cb, vi, qk, mu_l, m_l, cf_l):
             payload_l, cm = jax.vmap(upd, in_axes=(0, 0, 0))(cb, vi, qk)
             n_l = m_l.shape[0]
+            m_eff = m_l
+            if verify:
+                # shard-local verification: each device vets only its own
+                # clients' payloads; zeroed rows reduce to exact zeros on
+                # every path below, so only the survivor COUNT needs an
+                # extra collective
+                payload_l, ok_l = _checked(payload_l, cf_l)
+                m_eff = m_l * ok_l.astype(m_l.dtype)
 
             def msk(x):
                 return _mask_q(x, m_l.reshape((n_l,) + (1,) * (x.ndim - 1)))
@@ -308,15 +372,40 @@ def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
             # model-shaped partial aggregate — what really crosses the
             # mesh, measured here rather than modeled
             measured["psum_operand_bytes"] = _tree_bytes(part)
-            agg_l = jax.tree.map(
-                lambda x: jax.lax.psum(x, client_axis), part)
-            return agg_l, vi_new, cm
+            return part, vi_new, cm, jnp.sum(m_eff)
 
-        agg, v_i_new, cmetrics = shard_map(
-            client_stage, mesh=mesh,
-            in_specs=(cspec, cspec, cspec, cspec, cspec),
-            out_specs=(PartitionSpec(), cspec, cspec),
-            check_rep=False)(client_batches, v_i, quant_keys, mu, mask)
+        if verify:
+            cflags = (corrupt if corrupt is not None
+                      else jnp.zeros((n_local,), jnp.bool_))
+
+            def client_stage(cb, vi, qk, mu_l, m_l, cf_l):
+                part, vi_new, cm, ns_l = stage_local(
+                    cb, vi, qk, mu_l, m_l,
+                    cf_l if corrupt is not None else None)
+                agg_l = jax.tree.map(
+                    lambda x: jax.lax.psum(x, client_axis), part)
+                return agg_l, vi_new, cm, jax.lax.psum(ns_l, client_axis)
+
+            agg, v_i_new, cmetrics, n_survive = shard_map(
+                client_stage, mesh=mesh,
+                in_specs=(cspec, cspec, cspec, cspec, cspec, cspec),
+                out_specs=(PartitionSpec(), cspec, cspec, PartitionSpec()),
+                check_rep=False)(client_batches, v_i, quant_keys, mu, mask,
+                                 cflags)
+        else:
+            def client_stage(cb, vi, qk, mu_l, m_l):
+                part, vi_new, cm, _ = stage_local(cb, vi, qk, mu_l, m_l,
+                                                  None)
+                agg_l = jax.tree.map(
+                    lambda x: jax.lax.psum(x, client_axis), part)
+                return agg_l, vi_new, cm
+
+            agg, v_i_new, cmetrics = shard_map(
+                client_stage, mesh=mesh,
+                in_specs=(cspec, cspec, cspec, cspec, cspec),
+                out_specs=(PartitionSpec(), cspec, cspec),
+                check_rep=False)(client_batches, v_i, quant_keys, mu, mask)
+            n_survive = jnp.sum(mask)
         # the ONE downcast back to the iterate dtype, AFTER the collective
         agg = jax.tree.map(lambda a, x: a.astype(x.dtype), agg, x_ref)
         collective_bytes = float(measured["psum_operand_bytes"])
@@ -349,10 +438,17 @@ def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
         else:
             payload, cmetrics = jax.vmap(upd, in_axes=(0, 0, 0))(
                 client_batches, v_i, quant_keys)
+        n_survive = jnp.sum(mask)
         if use_wire:
             # actual uplink bytes of ONE client's payload, read off the
             # stacked encoded buffers (shapes are static under jit)
             wire_bytes_client = comp.encoded_bytes(payload) / n_local
+            if verify:
+                # server-side verification of the (gathered) stack; a
+                # failing client degrades the round exactly like an
+                # equivalent participation draw that excluded it
+                payload, ok = _checked(payload, corrupt)
+                n_survive = jnp.sum(mask * ok.astype(mask.dtype))
             q = comp.decode(payload)   # batched; fuses into the aggregation
         else:
             wire_bytes_client = None
@@ -366,7 +462,8 @@ def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
         # client control variates (lines 8/11) + server aggregation (13)
         v_i_new = _variate_update(v_i, q, alpha / p) if use_v else ()
         agg = _weighted_reduce(mu, q)
-    return agg, v_i_new, cmetrics, wire_bytes_client, collective_bytes
+    return (agg, v_i_new, cmetrics, wire_bytes_client, collective_bytes,
+            n_survive)
 
 
 def _server_apply(problem: MMProblem, spec: FederationSpec,
@@ -554,10 +651,21 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
     path (the scheduler owns the key chain and the step size)."""
     if cohort is not None:
         if sanitize:
-            raise ValueError(
-                "sanitize=True is not threaded through the cohort partial "
-                "path — checkify the scheduler's jitted cohort step "
-                "yourself via analysis.runtime.checkified")
+            # checkify the cohort stage and throw EAGERLY (same contract
+            # as the full-round sanitize path below: not for use inside
+            # jax.jit — the scheduler wraps its own jitted closures via
+            # analysis.runtime.checkified instead)
+            from ..analysis.runtime import checkified
+
+            def _plain_cohort(state, client_batches, cohort):
+                return _cohort_partial(
+                    problem, spec, state, client_batches, cohort,
+                    mesh=mesh, client_axis=client_axis,
+                    client_mode=client_mode, uplink=uplink)
+            err, out = checkified(_plain_cohort)(state, client_batches,
+                                                 cohort)
+            err.throw()
+            return out
         return _cohort_partial(problem, spec, state, client_batches, cohort,
                                mesh=mesh, client_axis=client_axis,
                                client_mode=client_mode, uplink=uplink)
@@ -585,15 +693,26 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
     drawn, quant_keys = participation_draw(key, spec)      # A5
     if active is None:
         active = drawn
+    corrupt = None
+    if spec.faults is not None and spec.faults.any_injection:
+        # fault-private fold_in lanes off the round key — the A5/A4 draws
+        # above are untouched, so a zero-probability FaultSpec leaves the
+        # trajectory bit-identical to faults=None
+        drop, corr = spec.faults.client_draw(key, n)
+        # a dropped client's uplink never arrives: fold it into the A5
+        # mask so mu renormalizes per spec.normalization (no bytes billed)
+        active = jnp.logical_and(jnp.asarray(active).astype(jnp.bool_),
+                                 jnp.logical_not(drop))
+        corrupt = corr if spec.faults.corrupt > 0.0 else None
     mask = active.astype(jnp.float32)
 
-    agg, v_i_new, cmetrics, wire_bytes_client, collective_bytes = \
-        _client_stage(problem, spec, view, state.x, client_batches,
-                      state.v_i, quant_keys, mask, mu, mesh=mesh,
-                      client_axis=client_axis, client_mode=client_mode,
-                      uplink=uplink)
+    agg, v_i_new, cmetrics, wire_bytes_client, collective_bytes, n_survive \
+        = _client_stage(problem, spec, view, state.x, client_batches,
+                        state.v_i, quant_keys, mask, mu, mesh=mesh,
+                        client_axis=client_axis, client_mode=client_mode,
+                        uplink=uplink, corrupt=corrupt)
     new_state, h, aux_metrics = _server_apply(
-        problem, spec, state, agg, v_i_new, jnp.sum(mask), gamma)
+        problem, spec, state, agg, v_i_new, n_survive, gamma)
     x_new = new_state.x
 
     comm = comp.round_metrics(state.x, p=p)
@@ -608,8 +727,12 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
             comp, state.x, per_client,
             where=f"step(client_mode={client_mode!r}, uplink={uplink!r})")
     metrics = {
-        "n_active": jnp.sum(mask),
-        # actual encoded-buffer bytes on the wire path, analytic otherwise
+        # clients whose payload survived wire verification (== the A5
+        # count without a checksummed compressor)
+        "n_active": n_survive,
+        # actual encoded-buffer bytes on the wire path, analytic
+        # otherwise; billed for every client that SENT — a corrupt
+        # payload used the wire even though verification dropped it
         "comm_bytes": per_client * jnp.sum(mask),
         "omega_eff": jnp.asarray(comm["omega_eff"], jnp.float32),
     }
@@ -683,11 +806,12 @@ def _cohort_partial(problem: MMProblem, spec: FederationSpec,
                 f"{jnp.shape(arr)[0]} != cohort size {c}")
 
     view = _broadcast_view(problem, spec, state)           # line 4
-    agg, v_i_new, cmetrics, wire_bytes_client, collective_bytes = \
-        _client_stage(problem, spec, view, state.x, client_batches,
-                      cohort.v_i, cohort.quant_keys, mask, cohort.mu,
-                      mesh=mesh, client_axis=client_axis,
-                      client_mode=client_mode, uplink=uplink)
+    agg, v_i_new, cmetrics, wire_bytes_client, collective_bytes, n_survive \
+        = _client_stage(problem, spec, view, state.x, client_batches,
+                        cohort.v_i, cohort.quant_keys, mask, cohort.mu,
+                        mesh=mesh, client_axis=client_axis,
+                        client_mode=client_mode, uplink=uplink,
+                        corrupt=cohort.corrupt)
     comm = comp.round_metrics(state.x, p=spec.participation)
     per_client = (wire_bytes_client if use_wire
                   else comm["payload_bytes_per_client"])
@@ -702,9 +826,12 @@ def _cohort_partial(problem: MMProblem, spec: FederationSpec,
                        axis=0)
             for k, v in cmetrics.items()}
     return CohortPartial(
-        agg=agg, v_i=v_i_new, n_active=jnp.sum(mask),
-        # the mask is already 0.0 on padded slots, so ragged cohorts bill
-        # exactly the real active clients' uplink bytes
+        # wire-verification survivors (== sum(mask) without checksums):
+        # a corrupt client is excluded from the normalization count...
+        agg=agg, v_i=v_i_new, n_active=n_survive,
+        # ...but BILLED — it used the wire. The mask is already 0.0 on
+        # padded slots, so ragged cohorts bill exactly the real active
+        # clients' uplink bytes
         comm_bytes=per_client * jnp.sum(mask),
         metric_sums=metric_sums,
         collective_payload_bytes=collective_bytes)
@@ -712,7 +839,7 @@ def _cohort_partial(problem: MMProblem, spec: FederationSpec,
 
 def apply_partial(problem: MMProblem, spec: FederationSpec,
                   state: DriverState, agg, n_active, gamma, *,
-                  drift_metric: bool = True):
+                  drift_metric: bool = True, sanitize: bool = False):
     """Land an accumulated surrogate partial: the server half of ``step``
     for a scheduler that built ``agg`` by summing (possibly
     staleness-weighted) ``CohortPartial.agg`` terms over the population.
@@ -721,9 +848,23 @@ def apply_partial(problem: MMProblem, spec: FederationSpec,
     ``state.v_i`` passes through untouched — cohort variate slices live
     in the scheduler's population arena, not in the ``DriverState``.
 
+    ``sanitize=True`` checkifies the server update (NaN / div-by-zero /
+    OOB) and throws EAGERLY — same contract as ``step(sanitize=True)``:
+    don't wrap it in ``jax.jit`` yourself; the scheduler checkifies its
+    jitted landing closure via ``analysis.runtime.checkified``.
+
     Returns ``(new_state, metrics)`` with the server-side metrics
     (``n_active``, ``omega_eff``, ``e_s``/``e_p``, ``h_norm_sq``, aux);
     the scheduler merges in the cohorts' comm accounting."""
+    if sanitize:
+        from ..analysis.runtime import checkified
+
+        def _plain(state, agg, n_active, gamma):
+            return apply_partial(problem, spec, state, agg, n_active,
+                                 gamma, drift_metric=drift_metric)
+        err, out = checkified(_plain)(state, agg, n_active, gamma)
+        err.throw()
+        return out
     problem = as_problem(problem)
     param_space = spec.aggregation == "parameter"
     n_active = jnp.asarray(n_active, jnp.float32)

@@ -44,16 +44,29 @@ max_staleness / staleness_weight: bounded-staleness async semantics for
                 update. ``staleness_weight(0)`` MUST be 1 so a fresh
                 (synchronous) cohort recovers the sync algorithm exactly.
                 Ignored by the synchronous ``api.run`` loop.
+faults:         a ``repro.faults.FaultSpec`` — seeded per-round schedules
+                for client dropout, payload corruption, stragglers,
+                cohort failure/retry, and a server kill point. Dropout
+                and detected corruption fold into the A5 participation
+                mask, so the surviving ``mu`` mass renormalizes per
+                ``normalization`` and the aggregate stays unbiased.
+                ``corrupt > 0`` requires a checksummed wire-format
+                compressor (``block_quant(..., checksum=True)``) —
+                without verification the quantizer's ``amax > 0`` guard
+                would launder damaged payloads into silent zeros/NaN.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import TYPE_CHECKING, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..core.compression import Compressor, identity
+
+if TYPE_CHECKING:  # pragma: no cover — annotation-only import
+    from ..faults.spec import FaultSpec
 
 PARTICIPATION_FULL = 1.0
 VARIATES = ("zero", "at-init", "off")
@@ -77,6 +90,7 @@ class FederationSpec:
     server_momentum: float = 0.0                # FedAvgM heavy-ball beta
     max_staleness: Optional[int] = None         # async drain bound (sched)
     staleness_weight: Optional[Callable[[int], float]] = None  # w(tau)
+    faults: Optional["FaultSpec"] = None        # repro.faults fault axis
 
     def __post_init__(self):
         if not (0.0 < self.participation <= 1.0):
@@ -136,6 +150,23 @@ class FederationSpec:
                 raise ValueError(
                     f"staleness_weight(0) must be 1.0 so a fresh cohort "
                     f"recovers the synchronous update exactly, got {w0:.6g}")
+        if self.faults is not None:
+            from ..faults.spec import FaultSpec
+            if not isinstance(self.faults, FaultSpec):
+                raise ValueError(f"faults must be a repro.faults.FaultSpec, "
+                                 f"got {type(self.faults).__name__}")
+            if self.faults.corrupt > 0.0 and not (
+                    self.compressor.encode is not None
+                    and self.compressor.checksum):
+                # corruption without verification is exactly the failure
+                # this axis exists to prevent: the quantizer's amax > 0
+                # guard (or worse, NaN scale bits) silently poisons the
+                # aggregate instead of dropping the client
+                raise ValueError(
+                    "faults.corrupt > 0 requires a checksummed wire-format "
+                    "compressor (e.g. block_quant(..., checksum=True)) so "
+                    "damage is detected rather than laundered into the "
+                    "aggregate")
 
     # -- derived ------------------------------------------------------------
     def client_weights(self) -> jnp.ndarray:

@@ -1,40 +1,114 @@
 """Minimal dependency-free pytree checkpointing (.npz + structure spec).
 
 Save/restore arbitrary pytrees of arrays (params, FedMM server state,
-optimizer state). Array leaves are stored flat in an .npz; the treedef is
-stored as a repr'd structure file alongside for structural verification.
+optimizer state). Array leaves are stored flat in an .npz together with
+the repr'd treedef and per-leaf dtypes (self-describing: one file is
+enough to verify a restore); a ``.spec.json`` sidecar mirrors the
+metadata for human inspection.
+
+Crash consistency: ``save`` writes to a temp file in the target
+directory and publishes it with ``os.replace`` (atomic on POSIX), so a
+crash mid-save can never leave a torn ``.npz`` — readers see either the
+old complete checkpoint or the new complete one. The sidecar is written
+the same way, AFTER the npz; because the npz is self-describing, a crash
+between the two replaces still restores and verifies correctly.
+
+``restore`` VERIFIES structure, not just shapes: the stored treedef repr
+must match ``like``'s, and every leaf's stored dtype must match the
+reference leaf's dtype (the old behavior silently ``asarray``-cast, so
+an f32 checkpoint restored into a bf16 tree — or vice versa — corrupted
+precision without a trace).
 """
 from __future__ import annotations
 
 import json
 import os
+import tempfile
 from typing import Any
 
 import jax
 import numpy as np
 
 
+def _atomic_write_bytes(path: str, write_fn) -> None:
+    """Write via ``write_fn(file_object)`` to a temp file in ``path``'s
+    directory, fsync, then ``os.replace`` into place."""
+    d = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
 def save(path: str, tree: Any) -> None:
     leaves, treedef = jax.tree.flatten(tree)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path if path.endswith(".npz") else path + ".npz",
-             **{f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)})
-    with open(_spec_path(path), "w") as f:
-        json.dump({"treedef": str(treedef), "n_leaves": len(leaves)}, f)
+    arrs = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    meta = {"treedef": str(treedef), "n_leaves": len(leaves),
+            "dtypes": [str(a.dtype) for a in arrs.values()]}
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    # the npz is SELF-describing (treedef + dtypes ride inside it) and is
+    # published atomically — a crash can't leave a torn or mismatched pair
+    _atomic_write_bytes(
+        npz_path,
+        lambda f: np.savez(f, __meta__=np.asarray(json.dumps(meta)), **arrs))
+    _atomic_write_bytes(
+        _spec_path(path),
+        lambda f: f.write(json.dumps(meta).encode("utf-8")))
+
+
+def _load_meta(path: str, npz) -> dict:
+    if "__meta__" in npz.files:
+        return json.loads(str(npz["__meta__"]))
+    # pre-atomic checkpoints: fall back to the sidecar (which was always
+    # written, just never compared)
+    spec = _spec_path(path)
+    if os.path.exists(spec):
+        with open(spec) as f:
+            return json.load(f)
+    return {}
 
 
 def restore(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shapes are validated)."""
+    """Restore into the structure of ``like``. The stored treedef repr,
+    leaf count, per-leaf shapes AND per-leaf dtypes are all verified —
+    a mismatch raises instead of silently casting/restructuring."""
     npz = np.load(path if path.endswith(".npz") else path + ".npz")
     leaves, treedef = jax.tree.flatten(like)
-    if len(leaves) != len(npz.files):
-        raise ValueError(f"checkpoint has {len(npz.files)} leaves, "
+    meta = _load_meta(path, npz)
+    data_keys = [k for k in npz.files if k.startswith("leaf_")]
+    if len(leaves) != len(data_keys):
+        raise ValueError(f"checkpoint has {len(data_keys)} leaves, "
                          f"expected {len(leaves)}")
+    stored_treedef = meta.get("treedef")
+    if stored_treedef is not None and stored_treedef != str(treedef):
+        raise ValueError(
+            f"checkpoint treedef does not match the restore target:\n"
+            f"  stored:   {stored_treedef}\n"
+            f"  restore:  {treedef}\n"
+            f"(restoring across structures silently rebinds leaves — "
+            f"rebuild `like` with the saved structure instead)")
+    stored_dtypes = meta.get("dtypes")
     new_leaves = []
     for i, ref in enumerate(leaves):
         arr = npz[f"leaf_{i}"]
         if hasattr(ref, "shape") and tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(f"leaf {i}: shape {arr.shape} != {ref.shape}")
+        ref_dt = np.dtype(getattr(ref, "dtype", arr.dtype))
+        stored_dt = np.dtype(stored_dtypes[i]) if stored_dtypes else arr.dtype
+        if stored_dt != ref_dt:
+            raise ValueError(
+                f"leaf {i}: checkpoint dtype {stored_dt} != restore target "
+                f"dtype {ref_dt} — restore used to silently asarray-cast "
+                f"here; convert explicitly if the cast is intended")
         new_leaves.append(jax.numpy.asarray(arr))
     return jax.tree.unflatten(treedef, new_leaves)
 

@@ -128,10 +128,15 @@ class PackedLeaf:
 
     codes: int8 ``(..., D)`` (shard mode) / ``(padded,)`` (flat mode), or
     uint8 with half the last dim when bit-packed (bits <= 4). scales: one
-    per group — ``(..., D // g)`` shard / ``(n_blocks,)`` flat. The
-    remaining fields are static pytree metadata (shape/dtype of the
-    original leaf, code width, group size, grouping mode), so ``vmap``
-    batches the buffers and leaves the layout alone."""
+    per group — ``(..., D // g)`` shard / ``(n_blocks,)`` flat. ``check``
+    is the optional wire-integrity checksum: one uint32 per payload (a
+    position-weighted murmur-mixed digest of the codes AND scales
+    buffers, ``leaf_checksum``), computed by the sender at encode time
+    and verified by ``verify_payload`` at decode — ``None`` for
+    compressors built without ``checksum=True``. The remaining fields
+    are static pytree metadata (shape/dtype of the original leaf, code
+    width, group size, grouping mode), so ``vmap`` batches the buffers
+    and leaves the layout alone."""
     codes: Pytree
     scales: Pytree
     shape: tuple
@@ -139,10 +144,11 @@ class PackedLeaf:
     bits: int
     group: int
     mode: str  # "shard" | "flat"
+    check: Pytree = None  # uint32 digest (stacked under vmap) | None
 
 
 jax.tree_util.register_dataclass(
-    PackedLeaf, data_fields=("codes", "scales"),
+    PackedLeaf, data_fields=("codes", "scales", "check"),
     meta_fields=("shape", "dtype", "bits", "group", "mode"))
 
 
@@ -178,6 +184,119 @@ def _tree_bytes(tree) -> int:
     return total
 
 
+# ---------------------------------------------------------------------------
+# wire integrity: per-leaf checksums on the packed payload
+# ---------------------------------------------------------------------------
+
+# one uint32 digest per PackedLeaf on the wire
+CHECKSUM_BYTES = 4
+
+_CKSUM_GOLDEN = 0x9E3779B9   # position salt (golden-ratio odd constant)
+_CKSUM_SCALE_SALT = 0x85EBCA6B  # domain separation: scales vs codes stream
+
+
+def _mix32(u):
+    """murmur3 finalizer on uint32 — the same mixer ``hash_dither`` uses,
+    applied per element so ANY single-element change flips the digest
+    term (modular-sum collisions are the 2^-32 birthday bound, not a
+    structured weakness like a plain sum's swap-invariance)."""
+    u = (u ^ (u >> 16)) * jnp.uint32(0x7FEB352D)
+    u = (u ^ (u >> 15)) * jnp.uint32(0x846CA68B)
+    return u ^ (u >> 16)
+
+
+def _as_u32_stream(buf, n_batch: int):
+    """Bitcast any codes/scales buffer to a ``batch + (m,)`` uint32 view
+    (value-preserving per element: int8/uint8 widen, f32 bitcasts, bf16
+    bitcasts to u16 then widens)."""
+    dt = jnp.dtype(buf.dtype)
+    if dt == jnp.float32:
+        u = jax.lax.bitcast_convert_type(buf, jnp.uint32)
+    elif dt.kind == "f":
+        # sub-f32 floats (bf16/f16): bitcast to the same-width uint, widen
+        u = jax.lax.bitcast_convert_type(
+            buf, jnp.dtype(f"uint{dt.itemsize * 8}")).astype(jnp.uint32)
+    else:
+        # int8 codes widen through int32 (sign-extended, deterministic)
+        u = buf.astype(jnp.int32).astype(jnp.uint32)
+    batch = buf.shape[:n_batch]
+    return u.reshape(batch + (-1,))
+
+
+def _digest(buf, n_batch: int, salt: int):
+    u = _as_u32_stream(buf, n_batch)
+    pos = jax.lax.broadcasted_iota(jnp.uint32, u.shape, u.ndim - 1)
+    terms = _mix32(u + pos * jnp.uint32(_CKSUM_GOLDEN) + jnp.uint32(salt))
+    # uint32 sum wraps mod 2^32 — order-independent, so the stacked
+    # (batched) recompute at verify time matches the per-client encode
+    return jnp.sum(terms, axis=-1, dtype=jnp.uint32)
+
+
+def leaf_checksum(codes, scales, n_batch: int = 0):
+    """The wire digest of one payload leaf's buffers: position-weighted
+    murmur-mixed uint32 sum over the codes stream and the (domain-
+    separated) scales stream. ``n_batch`` leading axes are treated as
+    batch dims — one digest per batch row — so the same function computes
+    the sender digest (``n_batch=0``, inside the per-client vmap) and the
+    receiver recompute on a stacked n-client payload (``n_batch=1``)."""
+    return (_digest(codes, n_batch, 0)
+            + _digest(scales, n_batch, _CKSUM_SCALE_SALT))
+
+
+def payload_batch_dims(p: "PackedLeaf") -> int:
+    """How many leading axes of ``p.codes`` are client/batch stacking on
+    top of the recorded wire layout (the convention ``decode_leaf`` uses:
+    shard mode keeps the leaf's rank, flat mode is a 1-D stream)."""
+    base = len(p.shape) if p.mode == "shard" else 1
+    return p.codes.ndim - base
+
+
+def verify_leaf(p):
+    """Recompute one leaf's digest and compare to the wire checksum.
+    Returns a bool array over the leaf's batch dims (scalar True for
+    unbatched / unchecksummed / raw leaves)."""
+    if not isinstance(p, PackedLeaf) or p.check is None:
+        return jnp.bool_(True)
+    nb = payload_batch_dims(p)
+    return jnp.equal(leaf_checksum(p.codes, p.scales, nb), p.check)
+
+
+def verify_payload(payload):
+    """Per-client wire verification of a (possibly stacked) payload:
+    AND of every checksummed leaf's digest match, broadcast over the
+    batch dims — ``ok[c] == True`` iff EVERY leaf of client c's payload
+    arrived intact. Scalar True when nothing carries a checksum."""
+    ok = jnp.bool_(True)
+    for leaf in jax.tree.leaves(
+            payload, is_leaf=_is_payload_leaf):
+        ok = jnp.logical_and(ok, verify_leaf(leaf))
+    return ok
+
+
+def zero_invalid_rows(payload, ok):
+    """Null out every buffer row of clients that failed verification
+    (``ok`` broadcastable over each buffer's leading batch axes), BEFORE
+    decode: corrupted scale bits can decode to NaN/inf, and a NaN times a
+    zero weight is NaN — the poison would survive any masked reduction.
+    Zero codes x zero scales decode to exact zeros, so a dropped client
+    contributes nothing on every downstream path (decode, decode_reduce,
+    variate updates)."""
+    okb = jnp.asarray(ok, jnp.bool_)
+
+    def _zero(buf):
+        sel = okb.reshape(okb.shape + (1,) * (buf.ndim - okb.ndim))
+        return jnp.where(sel, buf, jnp.zeros((), buf.dtype))
+
+    def leaf(p):
+        if not isinstance(p, PackedLeaf):
+            return p
+        return dataclasses.replace(
+            p, codes=_zero(p.codes), scales=_zero(p.scales),
+            check=None if p.check is None else _zero(p.check))
+
+    return jax.tree.map(leaf, payload, is_leaf=_is_payload_leaf)
+
+
 @dataclasses.dataclass(frozen=True)
 class Compressor:
     """An unbiased compressor satisfying A4(omega), with communication
@@ -205,6 +324,9 @@ class Compressor:
     # ``uplink="reduce"`` stage, carrying this compressor's OWN kernel
     # dispatch policy (threshold, alignment) — see ``decode_reduce_tree``
     decode_reduce: Optional[Callable] = None
+    # encode stamps each PackedLeaf with its wire digest (CHECKSUM_BYTES
+    # per leaf, billed in payload_fn) and the server verifies at decode
+    checksum: bool = False
 
     def __call__(self, key, s):
         return self.apply(key, s)
@@ -514,12 +636,15 @@ def quantize_leaf(key, x, bits: int = 8, block: int = 256,
 def encode_leaf(key, x, bits: int = 8, block: int = 256,
                 dither: str = "uniform", shard_safe: bool = False,
                 kernel_threshold: int = KERNEL_DISPATCH_MIN,
-                compute: str = "f32"):
+                compute: str = "f32", checksum: bool = False):
     """Encode ONE leaf to the wire format (``PackedLeaf``), or pass it
     through raw when ``quantize_leaf`` would (bits == 0 / scalar / empty /
     shard-safe g == 1). Draw-for-draw and dispatch-for-dispatch identical
     to ``quantize_leaf`` — ``decode_leaf(encode_leaf(key, x)) ==
-    quantize_leaf(key, x)`` bit-exactly (tests/test_wire_format.py)."""
+    quantize_leaf(key, x)`` bit-exactly (tests/test_wire_format.py).
+    ``checksum=True`` stamps the leaf with its wire digest
+    (``leaf_checksum`` over the final packed buffers); ``decode`` ignores
+    it, so the roundtrip identity is unchanged."""
     if compute not in ("f32", "native"):
         raise ValueError(f"compute={compute!r} (want 'f32'|'native')")
     if dither not in DITHERS:
@@ -567,11 +692,14 @@ def encode_leaf(key, x, bits: int = 8, block: int = 256,
             xg = x.astype(jnp.float32).reshape(x.shape[:-1] + (D // g, g))
             codes, scales = kernel_ref.encode_groups_ref(
                 xg, u.reshape(xg.shape), bits=bits)
+        wire_codes = _maybe_pack(codes.reshape(x.shape), bits)
+        wire_scales = scales.reshape(x.shape[:-1] + (D // g,))
         return PackedLeaf(
-            codes=_maybe_pack(codes.reshape(x.shape), bits),
-            scales=scales.reshape(x.shape[:-1] + (D // g,)),
+            codes=wire_codes, scales=wire_scales,
             shape=tuple(x.shape), dtype=str(orig_dtype), bits=bits,
-            group=g, mode="shard")
+            group=g, mode="shard",
+            check=leaf_checksum(wire_codes, wire_scales) if checksum
+            else None)
 
     n = x.size
     pad = (-n) % block
@@ -600,11 +728,13 @@ def encode_leaf(key, x, bits: int = 8, block: int = 256,
             u = _make_dither(_stream_dither(dither), key, (n + pad,))
             codes, scales = kernel_ref.encode_groups_ref(
                 flat.reshape(-1, block), u.reshape(-1, block), bits=bits)
+    wire_codes = _maybe_pack(codes.reshape(-1), bits)
+    wire_scales = scales.reshape(-1)
     return PackedLeaf(
-        codes=_maybe_pack(codes.reshape(-1), bits),
-        scales=scales.reshape(-1),
+        codes=wire_codes, scales=wire_scales,
         shape=tuple(x.shape), dtype=str(orig_dtype), bits=bits,
-        group=block, mode="flat")
+        group=block, mode="flat",
+        check=leaf_checksum(wire_codes, wire_scales) if checksum else None)
 
 
 def decode_leaf(p):
@@ -739,7 +869,7 @@ def decode_reduce_tree(payload, w,
 def block_quant(bits: int = 8, block: int = 256, dither: str = "uniform",
                 shard_safe: bool = False,
                 kernel_threshold: int = KERNEL_DISPATCH_MIN,
-                compute: str = "f32") -> Compressor:
+                compute: str = "f32", checksum: bool = False) -> Compressor:
     levels = 2.0 ** (bits - 1) - 1.0
     omega = block / (4.0 * levels * levels)
 
@@ -756,7 +886,7 @@ def block_quant(bits: int = 8, block: int = 256, dither: str = "uniform",
             lambda k, x: encode_leaf(k, x, bits=bits, block=block,
                                      dither=dither, shard_safe=shard_safe,
                                      kernel_threshold=kernel_threshold,
-                                     compute=compute),
+                                     compute=compute, checksum=checksum),
             key, s)
 
     def decode_reduce(payload, w, fused=None):
@@ -770,35 +900,41 @@ def block_quant(bits: int = 8, block: int = 256, dither: str = "uniform",
     def payload(shape, itemsize):
         # EXACT wire bytes (mirrors encode_leaf): packed codes (1 byte per
         # coordinate, 0.5 when bits <= 4) + one scale per group (f32 under
-        # the oracle semantics, input dtype under compute='native'); leaves
-        # encode() passes through raw (ndim-0 always; in shard-safe mode
-        # also g == 1 last dims) travel uncompressed at their dtype
+        # the oracle semantics, input dtype under compute='native') + the
+        # wire digest when checksum is on (billed honestly — integrity is
+        # not free bytes); leaves encode() passes through raw (ndim-0
+        # always; in shard-safe mode also g == 1 last dims) travel
+        # uncompressed at their dtype and carry no digest
         n = float(math.prod(shape)) if shape else 1.0
         if not shape:
             return n * itemsize
         scale_sz = itemsize if compute == "native" and itemsize != 4.0 \
             else 4.0
+        ck = float(CHECKSUM_BYTES) if (checksum and bits <= 8) else 0.0
         if not shard_safe:
             n_blocks = math.ceil(n / block)
             padded = n_blocks * block
             code_b = padded / 2.0 if (bits <= PACK_BITS and padded % 2 == 0) \
                 else float(padded)
-            return code_b + n_blocks * scale_sz
+            return code_b + n_blocks * scale_sz + ck
         g = group_size(shape[-1], block)
         if g < 2:
             return n * itemsize
         code_b = n / 2.0 if bits <= PACK_BITS else n
-        return code_b + (n / g) * scale_sz
+        return code_b + (n / g) * scale_sz + ck
 
     tag = f"{dither},shard" if shard_safe else dither
     if compute == "native":
         tag += ",native"
+    if checksum:
+        tag += ",ck"
     return Compressor(apply=apply, omega=float(omega), bits=float(bits),
                       name=f"block_quant{bits}b{block}[{tag}]",
                       payload_fn=payload,
                       encode=encode if bits <= 8 else None,
                       decode=decode_tree if bits <= 8 else None,
-                      decode_reduce=decode_reduce if bits <= 8 else None)
+                      decode_reduce=decode_reduce if bits <= 8 else None,
+                      checksum=checksum and bits <= 8)
 
 
 # ---------------------------------------------------------------------------

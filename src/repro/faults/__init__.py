@@ -1,0 +1,29 @@
+"""Deterministic fault injection, wire integrity, and crash recovery.
+
+The failure-handling layer of the federated stack:
+
+* ``FaultSpec`` — seeded per-round fault schedules (dropout, corruption,
+  stragglers, cohort failure, a server kill point), a ``FederationSpec``
+  axis drawn off fault-private ``fold_in`` lanes of the host key chain.
+* ``corrupt_payload`` — deterministic wire damage for drills and tests.
+* ``save_snapshot``/``load_snapshot`` — atomic, self-describing host
+  structure snapshots backing the scheduler's crash-consistent
+  ``checkpoint_dir`` / ``resume()``.
+
+Wire verification itself lives with the wire format
+(``core.compression``: ``leaf_checksum`` / ``verify_payload`` /
+``zero_invalid_rows``); the driver calls it on both uplinks whenever the
+compressor was built with ``checksum=True``.
+"""
+from .spec import CORRUPT_KINDS, FaultSpec, ServerKilled
+from .injector import corrupt_payload
+from .snapshot import load_snapshot, save_snapshot
+
+__all__ = [
+    "CORRUPT_KINDS",
+    "FaultSpec",
+    "ServerKilled",
+    "corrupt_payload",
+    "load_snapshot",
+    "save_snapshot",
+]

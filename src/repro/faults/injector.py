@@ -1,0 +1,91 @@
+"""Deterministic payload damage for wire-integrity tests and drills.
+
+``corrupt_payload`` damages the rows of a STACKED payload (leading client
+axis on every ``PackedLeaf`` buffer) selected by a boolean flag vector,
+modeling three link failures:
+
+* ``"flip"``     — every code byte XORed with 0x55 (alternating bit flips
+                   across the whole stream);
+* ``"truncate"`` — the tail half of the code stream replaced with garbage
+                   (a message cut mid-transfer and padded by the
+                   transport);
+* ``"scales"``   — the per-group scale words overwritten with quiet-NaN
+                   bit patterns (the nastiest case: without verification
+                   the dequantize launders these into NaN, and a NaN
+                   survives any masked reduction).
+
+The ``check`` field is deliberately left UNCHANGED — the digest describes
+the payload the sender put on the wire, so any damage is a guaranteed
+mismatch at ``verify_payload``. Raw (non-``PackedLeaf``) leaves pass
+through untouched: they carry no checksum, so damaging them could never
+be detected — the fault model only damages what the wire format protects.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core.compression import (PackedLeaf, _is_payload_leaf,
+                                payload_batch_dims)
+
+_QNAN_BITS = 0x7FC00000  # float32 quiet NaN
+
+
+def _select(flag, damaged, original):
+    """Row-select ``damaged`` where ``flag`` (broadcast over trailing
+    dims), keeping ``original`` elsewhere."""
+    sel = flag.reshape(flag.shape + (1,) * (original.ndim - flag.ndim))
+    return jnp.where(sel, damaged, original)
+
+
+def _damage_codes_flip(codes):
+    if codes.dtype == jnp.uint8:
+        return codes ^ jnp.uint8(0x55)
+    return (codes.astype(jnp.uint8) ^ jnp.uint8(0x55)).astype(codes.dtype)
+
+
+def _damage_codes_truncate(codes, n_batch: int):
+    flat = codes.reshape(codes.shape[:n_batch] + (-1,))
+    m = flat.shape[-1]
+    cut = m // 2
+    pos = jax.lax.broadcasted_iota(jnp.int32, flat.shape, flat.ndim - 1)
+    garbage = _damage_codes_flip(flat)
+    return jnp.where(pos >= cut, garbage, flat).reshape(codes.shape)
+
+
+def _damage_scales(scales):
+    if scales.dtype == jnp.float32:
+        return jnp.full(scales.shape,
+                        jax.lax.bitcast_convert_type(
+                            jnp.uint32(_QNAN_BITS), jnp.float32),
+                        scales.dtype)
+    return jnp.full(scales.shape, jnp.nan, scales.dtype)
+
+
+def corrupt_payload(payload, flag, kind: str = "flip"):
+    """Damage the flagged clients' rows of a stacked payload pytree.
+
+    ``flag`` is a bool vector broadcastable over each buffer's leading
+    batch axes (the driver passes the per-round ``corrupt`` draw masked
+    to the active cohort). Checksums ride along unmodified."""
+    flag = jnp.asarray(flag, jnp.bool_)
+
+    def leaf(p):
+        if not isinstance(p, PackedLeaf):
+            return p
+        nb = payload_batch_dims(p)
+        if kind == "flip":
+            codes = _select(flag, _damage_codes_flip(p.codes), p.codes)
+            return dataclasses.replace(p, codes=codes)
+        if kind == "truncate":
+            codes = _select(flag, _damage_codes_truncate(p.codes, nb),
+                            p.codes)
+            return dataclasses.replace(p, codes=codes)
+        if kind == "scales":
+            scales = _select(flag, _damage_scales(p.scales), p.scales)
+            return dataclasses.replace(p, scales=scales)
+        raise ValueError(f"corrupt kind {kind!r}")
+
+    return jax.tree.map(leaf, payload, is_leaf=_is_payload_leaf)

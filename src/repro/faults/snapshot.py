@@ -1,0 +1,131 @@
+"""Crash-consistent round snapshots: one atomic, self-describing file.
+
+``save_snapshot`` serializes an arbitrary HOST structure — nested dicts
+(string keys), lists, tuples, ``None``, python scalars, and numpy/jax
+arrays — into a single file published with temp-file + ``os.replace``
+(the ``repro.checkpoint`` atomic write). A JSON skeleton records the
+structure with references into the array entries, so one file round-trips
+with no sidecar and no caller-supplied template; a crash mid-save leaves
+the previous complete snapshot in place.
+
+The container is a raw stream, NOT a zip: a magic line, the
+length-prefixed JSON skeleton, then each referenced array in
+``np.lib.format`` (.npy) encoding, in reference order. Two reasons over
+``np.savez``: (a) no per-member CRC32 pass, so a snapshot write is one
+memcpy-speed pass over the arrays, and (b) the large writes release the
+GIL, so the scheduler's background ``_SnapshotWriter`` thread does not
+stall the round loop (the zipfile path chunks through Python and cost
+~15% round throughput under concurrency).
+
+This deliberately does NOT serialize pytree registrations (dataclasses
+like ``DriverState``/``CohortPartial``): the scheduler flattens those to
+``(leaves, treedef-repr)`` pairs before snapshotting and unflattens
+against a freshly built template at ``resume()`` — the treedef repr is
+stored purely to VERIFY the template matches, the same contract
+``checkpoint.restore`` enforces.
+
+Round-trip fidelity notes: tuples and lists survive as themselves;
+jax arrays come back as numpy (the resume path re-devices them); scalar
+ints/floats/bools/strings survive exactly; numpy scalars come back as 0-d
+arrays.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any
+
+import numpy as np
+
+from ..checkpoint.checkpoint import _atomic_write_bytes
+
+_MAGIC = b"REPRO-SNAP-v1\n"
+
+
+def save_snapshot(path: str, obj: Any) -> None:
+    arrays = []
+
+    def enc(o):
+        if o is None:
+            return ["none"]
+        if isinstance(o, bool):           # before int: bool is an int
+            return ["bool", o]
+        if isinstance(o, int):
+            return ["int", o]
+        if isinstance(o, float):
+            return ["float", o]
+        if isinstance(o, str):
+            return ["str", o]
+        if isinstance(o, dict):
+            for k in o:
+                if not isinstance(k, str):
+                    raise TypeError(
+                        f"snapshot dict keys must be str, got {k!r}")
+            return ["dict", [[k, enc(v)] for k, v in o.items()]]
+        if isinstance(o, tuple):
+            return ["tuple", [enc(v) for v in o]]
+        if isinstance(o, list):
+            return ["list", [enc(v) for v in o]]
+        arr = np.asarray(o)
+        if arr.dtype == object:
+            raise TypeError(f"cannot snapshot object of type {type(o)}")
+        arrays.append(arr)
+        return ["array", len(arrays) - 1]
+
+    tree = enc(obj)
+    blob = json.dumps(tree).encode("utf-8")
+
+    def write(f):
+        f.write(_MAGIC)
+        f.write(len(blob).to_bytes(8, "little"))
+        f.write(blob)
+        for arr in arrays:
+            # one .npy-encoded member per array: a single large write
+            # (GIL-releasing, no CRC pass — cf. module docstring)
+            np.lib.format.write_array(f, arr, allow_pickle=False)
+
+    _atomic_write_bytes(path, write)
+
+
+def load_snapshot(path: str) -> Any:
+    with open(path, "rb") as f:
+        magic = f.read(len(_MAGIC))
+        if magic != _MAGIC:
+            raise ValueError(
+                f"{path!r} is not a repro snapshot (bad magic {magic!r})")
+        n = int.from_bytes(f.read(8), "little")
+        tree = json.loads(f.read(n).decode("utf-8"))
+
+        arrays = {}
+
+        def count(node):
+            if node[0] == "array":
+                arrays[node[1]] = None
+            elif node[0] == "dict":
+                for _, v in node[1]:
+                    count(v)
+            elif node[0] in ("tuple", "list"):
+                for v in node[1]:
+                    count(v)
+
+        count(tree)
+        # members were written in reference order: read them back in order
+        for i in sorted(arrays):
+            arrays[i] = np.lib.format.read_array(f, allow_pickle=False)
+
+    def dec(node):
+        kind = node[0]
+        if kind == "none":
+            return None
+        if kind in ("bool", "int", "float", "str"):
+            return node[1]
+        if kind == "dict":
+            return {k: dec(v) for k, v in node[1]}
+        if kind == "tuple":
+            return tuple(dec(v) for v in node[1])
+        if kind == "list":
+            return [dec(v) for v in node[1]]
+        if kind == "array":
+            return arrays[node[1]]
+        raise ValueError(f"unknown snapshot node kind {kind!r}")
+
+    return dec(tree)

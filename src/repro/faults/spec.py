@@ -1,0 +1,132 @@
+"""FaultSpec — deterministic, seeded fault schedules for federated rounds.
+
+Faults are a ``FederationSpec`` axis (``faults=FaultSpec(...)``), validated
+at construction like ``staleness_weight``, and DRAWN off the existing host
+key chain: every per-round fault draw is ``fold_in(k_round, SALT)`` with a
+fault-private salt, so (a) a fault trajectory is replayable bit-for-bit
+from the run key alone, and (b) the draws never consume splits from the
+participation/quantization chain — a ``FaultSpec`` whose probabilities are
+all zero produces a trajectory bit-identical to ``faults=None``.
+
+The fault model (all independent per round):
+
+* ``dropout`` — a client finishes its local computation but its uplink
+  never arrives (device went offline mid-cohort). Paper-native handling:
+  the drop folds into the A5 participation mask, so the surviving ``mu``
+  mass renormalizes exactly per the spec's ``normalization`` mode and the
+  aggregate stays unbiased. Dropped clients bill no uplink bytes.
+* ``corrupt`` — the payload arrives, but damaged (``corrupt_kind``:
+  bit-flipped codes, a truncated tail, or garbage scale bits). Requires a
+  checksummed wire format (``block_quant(..., checksum=True)``); the
+  server detects the damage at decode, zeroes the client's buffers BEFORE
+  dequantize (corrupted scale bits can decode to NaN — a NaN times a zero
+  weight is still NaN), and degrades the round exactly like a dropout.
+  Corrupt clients DO bill uplink bytes: the wire was used.
+* ``straggle`` — an async cohort is slow: ``straggle_delay`` extra
+  virtual-time priority on top of the scheduler's ``delay_fn``, composing
+  with ``max_staleness`` force-drain.
+* ``cohort_fail`` — a cohort's round trip fails entirely (launch lost /
+  timeout); the scheduler retries up to ``max_retries`` times with
+  ``retry_backoff`` extra delay per attempt, keeping the cohort's
+  staleness clock (async) intact. Each failed attempt bills its bytes.
+* ``kill_round`` — raise ``ServerKilled`` immediately before landing that
+  round's update: the crash point for kill-and-resume tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+CORRUPT_KINDS = ("flip", "truncate", "scales")
+
+# fold_in salts — fault-private lanes off k_round, disjoint from every
+# split the participation/quantization chain performs
+_SALT_DROP = 0x0FA7D09
+_SALT_CORRUPT = 0x0FA7C02
+_SALT_FAIL = 0x0FA7FA1
+_SALT_STRAGGLE = 0x0FA7517
+
+
+class ServerKilled(RuntimeError):
+    """Raised at the ``kill_round`` kill point (before the round lands).
+
+    Carries the round index so harnesses can assert WHERE the crash
+    happened; the last published snapshot is from an earlier round."""
+
+    def __init__(self, round_index: int):
+        super().__init__(f"server killed before landing round {round_index}")
+        self.round_index = round_index
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    dropout: float = 0.0            # P(client uplink lost) per round
+    corrupt: float = 0.0            # P(client payload damaged) per round
+    corrupt_kind: str = "flip"      # flip | truncate | scales
+    straggle: float = 0.0           # P(cohort straggles) per round (async)
+    straggle_delay: int = 0         # extra virtual-time delay if straggling
+    cohort_fail: float = 0.0        # P(one cohort attempt fails) per attempt
+    max_retries: int = 2            # retries after the first failed attempt
+    retry_backoff: int = 1          # extra delay per retry attempt (async)
+    kill_round: Optional[int] = None  # crash before landing this round
+
+    def __post_init__(self):
+        for f in ("dropout", "corrupt", "straggle", "cohort_fail"):
+            v = getattr(self, f)
+            if not (0.0 <= v <= 1.0):
+                raise ValueError(f"{f} must be a probability in [0, 1], "
+                                 f"got {v}")
+        if self.corrupt_kind not in CORRUPT_KINDS:
+            raise ValueError(f"corrupt_kind={self.corrupt_kind!r} not in "
+                             f"{CORRUPT_KINDS}")
+        if self.straggle_delay < 0:
+            raise ValueError(f"straggle_delay must be >= 0, got "
+                             f"{self.straggle_delay}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got "
+                             f"{self.max_retries}")
+        if self.retry_backoff < 0:
+            raise ValueError(f"retry_backoff must be >= 0, got "
+                             f"{self.retry_backoff}")
+        if self.kill_round is not None and self.kill_round < 0:
+            raise ValueError(f"kill_round must be None or >= 0, got "
+                             f"{self.kill_round}")
+        if self.cohort_fail >= 1.0 and self.max_retries >= 0:
+            raise ValueError("cohort_fail=1.0 fails every attempt — no "
+                             "retry budget can deliver a cohort")
+
+    @property
+    def any_injection(self) -> bool:
+        """True when any probabilistic fault can fire (the scheduler only
+        builds fault-aware draws/closures when it must — a kill point
+        alone leaves every jitted closure untouched)."""
+        return (self.dropout > 0.0 or self.corrupt > 0.0
+                or self.straggle > 0.0 or self.cohort_fail > 0.0)
+
+    # -- per-round draws (host side, off fold_in lanes) ---------------------
+    def client_draw(self, k_round, n: int):
+        """``(drop, corrupt)`` bool vectors of shape ``(n,)`` for one
+        round. A client drawn for BOTH drops (the uplink never arrived,
+        so there was nothing to corrupt)."""
+        drop = jax.random.bernoulli(
+            jax.random.fold_in(k_round, _SALT_DROP), self.dropout, (n,))
+        corr = jax.random.bernoulli(
+            jax.random.fold_in(k_round, _SALT_CORRUPT), self.corrupt, (n,))
+        return drop, jnp.logical_and(corr, jnp.logical_not(drop))
+
+    def cohort_draw(self, k_round, k_cohorts: int):
+        """Per-cohort draws for one round: ``fail_u`` uniforms of shape
+        ``(k_cohorts, max_retries + 1)`` — attempt ``a`` of cohort ``c``
+        fails iff ``fail_u[c, a] < cohort_fail`` (pre-drawing the whole
+        retry ladder keeps the trajectory independent of how many
+        attempts actually run) — and a ``(k_cohorts,)`` straggle mask."""
+        fail_u = jax.random.uniform(
+            jax.random.fold_in(k_round, _SALT_FAIL),
+            (k_cohorts, self.max_retries + 1))
+        straggle = jax.random.bernoulli(
+            jax.random.fold_in(k_round, _SALT_STRAGGLE), self.straggle,
+            (k_cohorts,))
+        return fail_u, straggle

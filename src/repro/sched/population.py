@@ -130,6 +130,50 @@ class ClientPopulation:
             [jnp.asarray(np.tensordot(mu, leaf, axes=1).astype(leaf.dtype))
              for leaf in self._arena])
 
+    # -- crash-consistent snapshots ------------------------------------------
+    def snapshot(self) -> dict:
+        """The population's full host state as a plain numpy structure —
+        what the scheduler embeds in its atomic round snapshots. Every
+        array is a COPY: the snapshot must not alias the live arena (the
+        next round mutates it in place)."""
+        return {
+            "n_total": int(self.n_total),
+            "base_key": np.array(self.base_key, copy=True),
+            "mu": self.mu.copy(),
+            "participation_counts": self.participation_counts.copy(),
+            "rounds_seen": int(self.rounds_seen),
+            "arena": ([leaf.copy() for leaf in self._arena]
+                      if self._arena is not None else None),
+        }
+
+    def load_snapshot(self, snap: dict) -> None:
+        """Restore from a ``snapshot()`` structure, verifying layout
+        (client count, arena leaf count/shape/dtype) — a mismatched
+        snapshot raises instead of silently rebinding rows."""
+        if int(snap["n_total"]) != self.n_total:
+            raise ValueError(f"snapshot holds {snap['n_total']} clients, "
+                             f"population holds {self.n_total}")
+        self.base_key = jnp.asarray(snap["base_key"])
+        self.mu = np.asarray(snap["mu"], np.float32).copy()
+        self.participation_counts = np.asarray(
+            snap["participation_counts"], np.int64).copy()
+        self.rounds_seen = int(snap["rounds_seen"])
+        arena = snap["arena"]
+        if (arena is None) != (self._arena is None):
+            raise ValueError("snapshot and population disagree on whether "
+                             "control variates exist")
+        if arena is not None:
+            if len(arena) != len(self._arena):
+                raise ValueError(f"snapshot arena has {len(arena)} leaves, "
+                                 f"population has {len(self._arena)}")
+            for i, (cur, new) in enumerate(zip(self._arena, arena)):
+                new = np.asarray(new)
+                if new.shape != cur.shape or new.dtype != cur.dtype:
+                    raise ValueError(
+                        f"arena leaf {i}: snapshot {new.shape}/{new.dtype} "
+                        f"!= population {cur.shape}/{cur.dtype}")
+                cur[...] = new
+
     # -- bookkeeping --------------------------------------------------------
     def record_participation(self, ids, active,
                              valid: Optional[np.ndarray] = None):

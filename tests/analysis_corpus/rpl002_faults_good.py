@@ -1,0 +1,58 @@
+"""RPL002/RPL003 non-firing: the PR-8 fault-tolerance orchestration
+idiom — host-side retry ladders over pre-drawn numpy uniforms, salted
+``fold_in`` fault draws off the round key, eager checkpoint encode
+loops, and kill-point checks on host ints. All of it runs OUTSIDE any
+trace (the jitted cohort step only ever sees the resulting masks/keys),
+so the linter must not flag the eager control flow or the host float()
+comparisons against numpy fault draws."""
+import os
+
+import jax
+import numpy as np
+
+_SALT_FAIL = 0x666C
+
+
+def fault_draws(k_round, k_cohorts, max_retries):
+    # salted fold_in off the ROUND key: private stream, never consumes a
+    # chain split — a zero-probability spec stays bit-identical
+    k = jax.random.fold_in(k_round, _SALT_FAIL)
+    u = jax.random.uniform(k, (k_cohorts, max_retries + 1))
+    return np.array(u, copy=True)   # host copy: the ladder is walked eagerly
+
+
+def walk_ladder(fail_u, cohort_fail, billed, per_cohort_bytes):
+    # eager retry ladder on HOST numpy uniforms: python if on np floats
+    # is fine — nothing here is a tracer
+    for attempt in range(fail_u.shape[0]):
+        if float(fail_u[attempt]) >= cohort_fail:
+            return attempt, billed
+        billed += per_cohort_bytes      # failed attempts still bill bytes
+    return None, billed                 # ladder exhausted: abandoned
+
+
+def checkpoint_round(path, cursor, key, leaves, counts):
+    # eager encode loop + atomic publish: host I/O around the trace
+    blob = {"cursor": int(cursor), "key": np.array(key, copy=True)}
+    for i, leaf in enumerate(leaves):
+        blob[f"a{i}"] = np.asarray(leaf)
+    tmp = f"{path}.tmp.{cursor}"
+    np.savez(tmp, **blob)
+    os.replace(tmp, path)               # crash-consistent: all-or-nothing
+
+
+def drive(x, data, rounds, kill_round=None):
+    key = jax.random.PRNGKey(0)         # host root of the chain: the idiom
+    billed = 0
+    for t in range(rounds):             # eager python round loop: fine
+        key, k_round = jax.random.split(key)
+        fail_u = fault_draws(k_round, 2, max_retries=2)
+        for ci in range(fail_u.shape[0]):
+            attempt, billed = walk_ladder(fail_u[ci], 0.3, billed, 128)
+            if attempt is None:         # host int/None check: fine
+                continue
+        if kill_round is not None and t == kill_round:
+            raise RuntimeError(f"killed at round {t}")
+        checkpoint_round("/tmp/ck.npz", t, key, [np.asarray(x)],
+                         np.zeros(4, np.int64))
+    return x, billed

@@ -98,3 +98,47 @@ class TestCheckpoint:
             ckpt.save(path, tree)
             with pytest.raises(ValueError):
                 ckpt.restore(path, {"w": jnp.ones((2, 2))})
+
+    def test_treedef_mismatch_raises(self):
+        """Same leaf count and shapes, different structure: restore used
+        to silently rebind leaves across the structures."""
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "ck.npz")
+            ckpt.save(path, {"a": jnp.ones(3), "b": jnp.zeros(3)})
+            with pytest.raises(ValueError, match="treedef"):
+                ckpt.restore(path, (jnp.ones(3), jnp.zeros(3)))
+            with pytest.raises(ValueError, match="treedef"):
+                ckpt.restore(path, {"a": jnp.ones(3), "c": jnp.zeros(3)})
+
+    def test_dtype_mismatch_raises(self):
+        """An f32 checkpoint must not restore into an i32 (or f16) tree:
+        the old behavior silently asarray-cast."""
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "ck.npz")
+            ckpt.save(path, {"w": jnp.ones(4, jnp.float32)})
+            with pytest.raises(ValueError, match="dtype"):
+                ckpt.restore(path, {"w": jnp.ones(4, jnp.int32)})
+            with pytest.raises(ValueError, match="dtype"):
+                ckpt.restore(path, {"w": jnp.ones(4, jnp.float16)})
+            out = ckpt.restore(path, {"w": jnp.zeros(4, jnp.float32)})
+            assert out["w"].dtype == jnp.float32
+
+    def test_save_is_atomic(self):
+        """A crash mid-save leaves the previous complete checkpoint in
+        place and no temp litter; a successful save leaves exactly the
+        npz + sidecar."""
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "ck.npz")
+            ckpt.save(path, {"w": jnp.ones(4)})
+
+            def boom(f):
+                f.write(b"partial")
+                raise RuntimeError("disk died")
+
+            with pytest.raises(RuntimeError, match="disk died"):
+                ckpt._atomic_write_bytes(path, boom)
+            # the published file is still the OLD complete checkpoint
+            out = ckpt.restore(path, {"w": jnp.zeros(4)})
+            assert bool(jnp.all(out["w"] == 1.0))
+            # and the failed write left no temp file behind
+            assert sorted(os.listdir(d)) == ["ck.npz", "ck.spec.json"]

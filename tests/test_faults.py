@@ -1,0 +1,664 @@
+"""repro.faults (PR 8): deterministic fault injection, wire integrity,
+and crash-consistent resume.
+
+Contracts pinned here:
+  * a zero-probability ``FaultSpec`` is BIT-IDENTICAL to ``faults=None``
+    (fault draws ride fold_in lanes and never consume key-chain splits);
+  * a corrupted round IS an equivalent participation draw: detected
+    corruption degrades the round exactly like excluding those clients
+    from the A5 mask — state bit-identical under BOTH normalization
+    modes on BOTH uplinks — while the corrupt clients still BILL their
+    uplink bytes (the wire was used);
+  * detection has probability 1: every corrupted surviving client is
+    excluded from ``n_active`` every round, and NaN scale bits never
+    reach the aggregate;
+  * cohort failure walks a pre-drawn retry ladder: failed attempts bill
+    bytes and count in ``fault_retries``; an exhausted ladder abandons
+    the cohort (billed, never aggregated) — equivalent to dropping its
+    clients;
+  * the failure x staleness corner (satellite c): a straggling cohort
+    that fails an attempt and crosses ``max_staleness`` is force-drained
+    EXACTLY once, landing with the right ``staleness_weight(tau)`` and
+    in the pinned order;
+  * ``run(..., checkpoint_dir=...)`` + ``resume()`` reproduce the
+    uninterrupted trajectory bit-for-bit after a ``kill_round`` crash
+    (both modes), and after a real SIGKILL in a subprocess (slow tier);
+  * snapshot codec and population snapshots round-trip exactly; layout
+    mismatches raise instead of silently rebinding.
+"""
+import dataclasses
+import glob
+import os
+import signal
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro import api
+from repro.core import compression as C
+from repro.core.quadratic import quadratic_for_objective
+from repro.faults import (CORRUPT_KINDS, FaultSpec, ServerKilled,
+                          load_snapshot, save_snapshot)
+from repro.sched import ClientPopulation, CohortScheduler
+import repro.sched.scheduler as sched_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _bit_equal(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=msg)
+
+
+def _quad_problem(n_clients=8, dim=16, batch=8):
+    ks = jax.random.split(KEY, n_clients)
+    Xs = jnp.stack([jax.random.normal(k, (batch, dim)) for k in ks])
+    w_i = jnp.stack([jnp.linspace(-1, 1, dim) + 2.0 * i
+                     for i in range(n_clients)])
+    ys = jnp.einsum("nbp,np->nb", Xs, w_i)
+
+    def loss(b, theta):
+        xb, yb = b
+        return 0.5 * jnp.mean((xb @ theta - yb) ** 2)
+
+    return (Xs, ys), api.as_problem(quadratic_for_objective(loss, rho=0.05))
+
+
+def _client_mesh():
+    return Mesh(np.asarray(jax.devices()), ("clients",))
+
+
+def _slicing_data_fn(full_data):
+    def data_fn(t, k, ids):
+        return jax.tree.map(lambda x: x[np.asarray(ids)], full_data(t, k))
+    return data_fn
+
+
+def _metrics_bit_equal(m_ref, m):
+    assert set(m_ref) == set(m), (sorted(m_ref), sorted(m))
+    for k in m_ref:
+        np.testing.assert_array_equal(np.asarray(m_ref[k]),
+                                      np.asarray(m[k]), err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec / FederationSpec validation
+# ---------------------------------------------------------------------------
+
+def test_faultspec_validation():
+    for f in ("dropout", "corrupt", "straggle", "cohort_fail"):
+        with pytest.raises(ValueError, match="probability"):
+            FaultSpec(**{f: 1.5})
+    with pytest.raises(ValueError, match="corrupt_kind"):
+        FaultSpec(corrupt_kind="nope")
+    with pytest.raises(ValueError, match="max_retries"):
+        FaultSpec(max_retries=-1)
+    with pytest.raises(ValueError, match="straggle_delay"):
+        FaultSpec(straggle_delay=-1)
+    with pytest.raises(ValueError, match="retry_backoff"):
+        FaultSpec(retry_backoff=-1)
+    with pytest.raises(ValueError, match="kill_round"):
+        FaultSpec(kill_round=-2)
+    # a ladder that fails every attempt can never deliver
+    with pytest.raises(ValueError, match="cohort_fail"):
+        FaultSpec(cohort_fail=1.0)
+    assert not FaultSpec().any_injection
+    assert not FaultSpec(kill_round=3).any_injection
+    assert FaultSpec(dropout=0.1).any_injection
+    assert set(CORRUPT_KINDS) == {"flip", "truncate", "scales"}
+
+
+def test_spec_rejects_corrupt_without_checksummed_wire():
+    # corruption without verification would be laundered by the
+    # quantizer's amax > 0 guard — the spec refuses the combination
+    with pytest.raises(ValueError, match="checksum"):
+        api.FederationSpec(n_clients=4, faults=FaultSpec(corrupt=0.5),
+                           compressor=C.block_quant(8, 16))
+    with pytest.raises(ValueError, match="checksum"):
+        api.FederationSpec(n_clients=4, faults=FaultSpec(corrupt=0.5))
+    with pytest.raises(ValueError, match="FaultSpec"):
+        api.FederationSpec(n_clients=4, faults="dropout")
+    # checksummed wire format: accepted
+    api.FederationSpec(n_clients=4, faults=FaultSpec(corrupt=0.5),
+                       compressor=C.block_quant(8, 16, checksum=True))
+
+
+# ---------------------------------------------------------------------------
+# zero-probability FaultSpec == faults=None, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_zero_prob_faultspec_bit_identical(mode):
+    n, dim = 8, 16
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 16, checksum=True)
+    x0 = jnp.zeros(dim)
+
+    def one(faults):
+        spec = api.FederationSpec(n_clients=n, participation=0.6, alpha=0.1,
+                                  compressor=comp, faults=faults)
+        sched = CohortScheduler(problem, spec, cohort_size=4)
+        return sched.run(x0, _slicing_data_fn(lambda t, k: (Xs, ys)), 0.3,
+                         key=KEY, n_rounds=4, mode=mode)
+
+    st_ref, pop_ref, m_ref = one(None)
+    st, pop, m = one(FaultSpec(kill_round=None))
+    _bit_equal(st_ref.x, st.x)
+    _bit_equal(st_ref.v, st.v)
+    _bit_equal(pop_ref.variates(), pop.variates())
+    _bit_equal(pop_ref.participation_counts, pop.participation_counts)
+    _metrics_bit_equal(m_ref, m)
+
+
+# ---------------------------------------------------------------------------
+# wire integrity: a corrupted round IS an equivalent participation draw
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("normalization", ["expected", "realized"])
+@pytest.mark.parametrize("mesh_uplink", ["none", "gather", "reduce"])
+def test_corrupt_round_equals_equivalent_draw(normalization, mesh_uplink):
+    """Detected corruption degrades the round EXACTLY like a
+    participation draw that excluded those clients — state bit-identical
+    — while the corrupt clients still bill their uplink bytes."""
+    n, dim = 8, 16
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 16, checksum=True)
+    fs = FaultSpec(dropout=0.25, corrupt=0.5, corrupt_kind="flip")
+    spec_f = api.FederationSpec(n_clients=n, participation=0.8, alpha=0.1,
+                                compressor=comp,
+                                normalization=normalization, faults=fs)
+    spec_p = dataclasses.replace(spec_f, faults=None)
+    mesh = None if mesh_uplink == "none" else _client_mesh()
+    uplink = "gather" if mesh_uplink == "none" else mesh_uplink
+    x0 = jnp.zeros(dim)
+    st_f = api.init(problem, x0, spec_f)
+    st_p = api.init(problem, x0, spec_p)
+    key = KEY
+    saw_corruption = False
+    for _ in range(3):
+        key, k = jax.random.split(key)
+        st_f, m_f = api.step(problem, spec_f, st_f, (Xs, ys), 0.3, k,
+                             mesh=mesh, uplink=uplink)
+        act, _ = api.participation_draw(k, spec_p)
+        drop, corr = fs.client_draw(k, n)
+        act, drop, corr = (np.asarray(act), np.asarray(drop),
+                           np.asarray(corr))
+        act_eff = act & ~drop & ~corr
+        st_p, m_p = api.step(problem, spec_p, st_p, (Xs, ys), 0.3, k,
+                             jnp.asarray(act_eff), mesh=mesh, uplink=uplink)
+        _bit_equal(st_f.x, st_p.x, msg="iterate diverged")
+        _bit_equal(st_f.v, st_p.v, msg="server variate diverged")
+        _bit_equal(st_f.v_i, st_p.v_i, msg="client variates diverged")
+        _bit_equal(m_f["n_active"], m_p["n_active"])
+        # corrupt survivors used the wire: billed in the fault run only
+        n_sent = int(np.sum(act & ~drop))
+        n_corr = int(np.sum(act_eff != (act & ~drop)))
+        if n_corr:
+            saw_corruption = True
+        n_eff = int(np.sum(act_eff))
+        assert float(np.asarray(m_f["n_active"])) == float(n_eff)
+        per_client = comp.payload_bytes(x0)
+        assert float(np.asarray(m_f["comm_bytes"])) == pytest.approx(
+            per_client * n_sent)
+        assert float(np.asarray(m_p["comm_bytes"])) == pytest.approx(
+            per_client * n_eff)
+    assert saw_corruption, "draws never corrupted a survivor — re-seed"
+
+
+@pytest.mark.parametrize("kind", ["flip", "truncate", "scales"])
+def test_corruption_detected_with_probability_one(kind):
+    """Every corrupted surviving client is excluded from n_active on
+    every round (checksum detection probability 1 in practice), and even
+    NaN scale bits never leak into the aggregate — over a ragged, padded
+    cohort layout."""
+    n, dim, csize = 10, 16, 4
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 16, checksum=True)
+    fs = FaultSpec(dropout=0.15, corrupt=0.6, corrupt_kind=kind)
+    spec = api.FederationSpec(n_clients=n, participation=0.9, alpha=0.1,
+                              compressor=comp, faults=fs)
+    x0 = jnp.zeros(dim)
+    sched = CohortScheduler(problem, spec, cohort_size=csize)
+    st, pop, m = sched.run(x0, _slicing_data_fn(lambda t, k: (Xs, ys)),
+                           0.3, key=KEY, n_rounds=5)
+    assert np.all(np.isfinite(np.asarray(st.x))), "corruption leaked NaN"
+    assert np.all(np.isfinite(np.asarray(st.v)))
+    # replay the host key chain to predict the surviving count per round
+    key = KEY
+    expected = []
+    for _ in range(5):
+        key, k_round, _ = jax.random.split(key, 3)
+        act, _ = api.participation_draw(k_round, spec)
+        drop, corr = fs.client_draw(k_round, n)
+        expected.append(float(np.sum(np.asarray(act) & ~np.asarray(drop)
+                                     & ~np.asarray(corr))))
+    _bit_equal(np.asarray(m["n_active"], np.float32),
+               np.asarray(expected, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# cohort failure: retry ladder accounting (sync)
+# ---------------------------------------------------------------------------
+
+def _fixed_draws(monkeypatch, fail_rows, straggle):
+    """Pin the per-wave cohort draws (every wave identical) so retry
+    scenarios are deterministic instead of seed-mined."""
+    fail_rows = np.asarray(fail_rows, np.float32)
+    straggle = np.asarray(straggle, bool)
+
+    def cohort_draw(self, k_round, k_cohorts):
+        assert k_cohorts == fail_rows.shape[0]
+        return fail_rows.copy(), straggle.copy()
+
+    def client_draw(self, k_round, n):
+        z = np.zeros((n,), bool)
+        return z, z.copy()
+
+    monkeypatch.setattr(FaultSpec, "cohort_draw", cohort_draw)
+    monkeypatch.setattr(FaultSpec, "client_draw", client_draw)
+
+
+def test_sync_retry_billing_and_abandonment(monkeypatch):
+    """Cohort 0's ladder fails all 3 attempts (abandoned); cohort 1
+    fails once then lands. Every failed attempt bills its bytes; the
+    abandoned cohort's clients contribute nothing — bit-identical to a
+    run where they were dropped."""
+    n, dim, csize = 8, 16, 4
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 16, checksum=True)
+    fs = FaultSpec(cohort_fail=0.5, max_retries=2)
+    spec = api.FederationSpec(n_clients=n, participation=1.0, alpha=0.1,
+                              compressor=comp, faults=fs)
+    x0 = jnp.zeros(dim)
+    # fail iff u < 0.5: cohort 0 = [f, f, f] (abandoned), cohort 1 =
+    # [f, ok, -]
+    _fixed_draws(monkeypatch, [[0.0, 0.0, 0.0], [0.0, 1.0, 1.0]],
+                 [False, False])
+    sched = CohortScheduler(problem, spec, cohort_size=csize)
+    st, pop, m = sched.run(x0, _slicing_data_fn(lambda t, k: (Xs, ys)),
+                           0.3, key=KEY, n_rounds=3)
+    _bit_equal(m["fault_retries"], np.full((3,), 4.0, np.float32))
+    _bit_equal(m["fault_abandoned"], np.ones((3,), np.float32))
+    _bit_equal(m["n_active"], np.full((3,), 4.0, np.float32))
+    # bytes: cohort 0 billed 3 failed attempts, cohort 1 billed 1 failed
+    # attempt + its delivered payload = 5 cohort-payloads of 4 clients
+    per_client = comp.payload_bytes(x0)
+    _bit_equal(m["comm_bytes"],
+               np.full((3,), 5 * 4 * per_client, np.float32))
+    # abandoned cohort == its clients dropped: bit-identical server state
+    fs_drop = FaultSpec(dropout=0.5)  # any_injection; draw monkeypatched
+
+    def client_draw_drop(self, k_round, n_):
+        drop = np.zeros((n_,), bool)
+        drop[:csize] = True    # cohort 0's clients never arrive
+        return drop, np.zeros((n_,), bool)
+
+    monkeypatch.setattr(FaultSpec, "client_draw", client_draw_drop)
+    monkeypatch.setattr(
+        FaultSpec, "cohort_draw",
+        lambda self, k, kc: (np.ones((kc, self.max_retries + 1),
+                                     np.float32), np.zeros((kc,), bool)))
+    spec_d = dataclasses.replace(spec, faults=fs_drop)
+    sched_d = CohortScheduler(problem, spec_d, cohort_size=csize)
+    st_d, pop_d, m_d = sched_d.run(
+        x0, _slicing_data_fn(lambda t, k: (Xs, ys)), 0.3, key=KEY,
+        n_rounds=3)
+    _bit_equal(st.x, st_d.x)
+    _bit_equal(st.v, st_d.v)
+    _bit_equal(m["n_active"], m_d["n_active"])
+    _bit_equal(pop.participation_counts, pop_d.participation_counts)
+
+
+# ---------------------------------------------------------------------------
+# satellite (c): the failure x staleness corner, pinned move by move
+# ---------------------------------------------------------------------------
+
+def test_async_straggler_failure_force_drained_exactly_once(monkeypatch):
+    """A straggling cohort whose first uplink attempt fails: it re-enters
+    the window with backoff, crosses ``max_staleness``, and the force
+    drain walks its remaining ladder IN PLACE — it lands exactly once,
+    with ``staleness_weight(tau=1)``, in the pinned order."""
+    n, dim, csize = 8, 16, 4
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 16, checksum=True)
+    fs = FaultSpec(straggle=1.0, straggle_delay=5, cohort_fail=0.5,
+                   max_retries=2, retry_backoff=1)
+    spec = api.FederationSpec(
+        n_clients=n, participation=1.0, alpha=0.1, compressor=comp,
+        faults=fs, max_staleness=1,
+        staleness_weight=lambda tau: 1.0 / (1.0 + tau))
+    # every wave: cohort 0 straggles and fails attempt 0 (then ok),
+    # cohort 1 is clean
+    _fixed_draws(monkeypatch, [[0.0, 1.0, 1.0], [1.0, 1.0, 1.0]],
+                 [True, False])
+    x0 = jnp.zeros(dim)
+    sched = CohortScheduler(problem, spec, cohort_size=csize)
+    # spies: map partials to (cohort, wave) at launch, record every
+    # buffer add as (cohort, wave, weight, tau)
+    launched = {}
+    orig_rc = CohortScheduler._run_cohort
+
+    def spy_rc(self, state, t_wave, k_batch, ids, valid, active, qkeys,
+               pop, data_fn, fctx=None, cohort_idx=0):
+        partial, mask = orig_rc(self, state, t_wave, k_batch, ids, valid,
+                                active, qkeys, pop, data_fn, fctx,
+                                cohort_idx)
+        launched[id(partial)] = (cohort_idx, t_wave)
+        return partial, mask
+
+    adds = []
+    orig_add = sched_mod._PartialBuffer.add
+
+    def spy_add(self, partial, weight, tau=0):
+        adds.append(launched[id(partial)] + (float(weight), int(tau)))
+        return orig_add(self, partial, weight, tau)
+
+    monkeypatch.setattr(CohortScheduler, "_run_cohort", spy_rc)
+    monkeypatch.setattr(sched_mod._PartialBuffer, "add", spy_add)
+    st, pop, m = sched.run(x0, _slicing_data_fn(lambda t, k: (Xs, ys)),
+                           0.3, key=KEY, n_rounds=2, mode="async",
+                           max_inflight=3, buffer_cohorts=2)
+    # pinned trace — update 0: clean c1/wave0 lands first (the straggler
+    # is delayed), then c0/wave0 retries once and lands fresh; update 1:
+    # c0/wave1 has crossed max_staleness=1, fails its first drain
+    # attempt and is force-drained IN PLACE with w(1) = 1/2 — exactly
+    # once — then clean c1/wave1 fills the buffer
+    assert adds == [
+        (1, 0, 1.0, 0),     # c1 wave0: prio 1 beats straggler's 0+5
+        (0, 0, 1.0, 0),     # c0 wave0: failed once, retried, landed fresh
+        (0, 1, 0.5, 1),     # c0 wave1: forced drain at tau=1, w=1/2
+        (1, 1, 1.0, 0),     # c1 wave1
+    ], adds
+    _bit_equal(m["staleness_max"], np.asarray([0.0, 1.0], np.float32))
+    _bit_equal(m["staleness_mean"], np.asarray([0.0, 0.5], np.float32))
+    _bit_equal(m["fault_retries"], np.asarray([1.0, 1.0], np.float32))
+    _bit_equal(m["fault_abandoned"], np.zeros((2,), np.float32))
+    _bit_equal(m["n_active"], np.full((2,), 8.0, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# crash-consistent checkpointing + resume
+# ---------------------------------------------------------------------------
+
+def _fault_run_setup(n=8, dim=16):
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 16, checksum=True)
+    data_fn = _slicing_data_fn(lambda t, k: (Xs, ys))
+    eval_batch = (Xs[0], ys[0])
+    return problem, comp, data_fn, eval_batch
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_kill_and_resume_bit_identical(mode, tmp_path):
+    """ServerKilled fires at the kill point; resume() from the last
+    atomic snapshot reproduces the uninterrupted trajectory, metrics and
+    population bit-for-bit (kill point disabled on resume)."""
+    n, dim = 8, 16
+    problem, comp, data_fn, eval_batch = _fault_run_setup(n, dim)
+    x0 = jnp.zeros(dim)
+    kw = dict(max_inflight=4, buffer_cohorts=2) if mode == "async" else {}
+    base = dict(dropout=0.2, corrupt=0.3, corrupt_kind="scales",
+                cohort_fail=0.3, max_retries=2)
+    sw = dict(max_staleness=2,
+              staleness_weight=lambda t: 1.0 / (1.0 + t)) \
+        if mode == "async" else {}
+
+    def mkspec(**faults):
+        return api.FederationSpec(n_clients=n, participation=0.9,
+                                  alpha=0.1, compressor=comp,
+                                  faults=FaultSpec(**faults), **sw)
+
+    ref_sched = CohortScheduler(problem, mkspec(**base), cohort_size=4)
+    st_ref, pop_ref, m_ref = ref_sched.run(
+        x0, data_fn, 0.3, key=KEY, n_rounds=6, mode=mode,
+        eval_batch=eval_batch, eval_every=2, **kw)
+
+    ck = str(tmp_path / "ck")
+    spec_k = mkspec(**base, kill_round=4)
+    sched = CohortScheduler(problem, spec_k, cohort_size=4)
+    with pytest.raises(ServerKilled) as ei:
+        sched.run(x0, data_fn, 0.3, key=KEY, n_rounds=6, mode=mode,
+                  eval_batch=eval_batch, eval_every=2,
+                  checkpoint_dir=ck, **kw)
+    assert ei.value.round_index == 4
+    assert glob.glob(os.path.join(ck, "round_*.snap"))
+    st, pop, m = sched.resume(x0, data_fn, 0.3, checkpoint_dir=ck,
+                              n_rounds=6, mode=mode,
+                              eval_batch=eval_batch, eval_every=2, **kw)
+    _bit_equal(st_ref.x, st.x)
+    _bit_equal(st_ref.v, st.v)
+    _bit_equal(pop_ref.variates(), pop.variates())
+    _bit_equal(pop_ref.participation_counts, pop.participation_counts)
+    assert pop_ref.rounds_seen == pop.rounds_seen
+    _metrics_bit_equal(m_ref, m)
+
+
+def test_checkpoint_pruning_and_resume_errors(tmp_path):
+    n, dim = 8, 16
+    problem, comp, data_fn, _ = _fault_run_setup(n, dim)
+    x0 = jnp.zeros(dim)
+    spec = api.FederationSpec(n_clients=n, participation=0.8, alpha=0.1,
+                              compressor=comp)
+    sched = CohortScheduler(problem, spec, cohort_size=4)
+    ck = str(tmp_path / "ck")
+    with pytest.raises(FileNotFoundError, match="nothing to resume"):
+        sched.resume(x0, data_fn, 0.3, checkpoint_dir=ck, n_rounds=3)
+    st_ref, _, m_ref = sched.run(x0, data_fn, 0.3, key=KEY, n_rounds=6)
+    st, _, m = sched.run(x0, data_fn, 0.3, key=KEY, n_rounds=6,
+                         checkpoint_dir=ck)
+    # old snapshots pruned down to the keep-window
+    snaps = sorted(glob.glob(os.path.join(ck, "round_*.snap")))
+    assert len(snaps) == sched_mod._CKPT_KEEP
+    assert snaps[-1].endswith("round_000006.snap")
+    with pytest.raises(ValueError, match="mode"):
+        sched.resume(x0, data_fn, 0.3, checkpoint_dir=ck, n_rounds=6,
+                     mode="async")
+    # a finished run resumes to itself (no extra rounds)
+    st2, _, m2 = sched.resume(x0, data_fn, 0.3, checkpoint_dir=ck,
+                              n_rounds=6)
+    _bit_equal(st.x, st2.x)
+    _metrics_bit_equal(m_ref, m2)
+    # resume against a different model shape fails loudly
+    with pytest.raises(ValueError, match="treedef|leaf"):
+        CohortScheduler(problem, spec, cohort_size=4).resume(
+            jnp.zeros(dim + 1), lambda t, k, ids: None, 0.3,
+            checkpoint_dir=ck, n_rounds=6)
+
+
+def test_resume_midway_without_kill(tmp_path):
+    """checkpoint_every > 1 and a resume from a mid-trajectory snapshot
+    (no crash involved) still reproduce the full run bit-for-bit."""
+    n, dim = 8, 16
+    problem, comp, data_fn, _ = _fault_run_setup(n, dim)
+    x0 = jnp.zeros(dim)
+    spec = api.FederationSpec(
+        n_clients=n, participation=0.8, alpha=0.1, compressor=comp,
+        faults=FaultSpec(dropout=0.2, cohort_fail=0.3))
+    sched = CohortScheduler(problem, spec, cohort_size=4)
+    st_ref, _, m_ref = sched.run(x0, data_fn, 0.3, key=KEY, n_rounds=5)
+    ck = str(tmp_path / "ck")
+    sched.run(x0, data_fn, 0.3, key=KEY, n_rounds=3, checkpoint_dir=ck,
+              checkpoint_every=3)
+    assert [os.path.basename(p) for p in
+            sorted(glob.glob(os.path.join(ck, "round_*.snap")))] == \
+        ["round_000003.snap"]
+    st, _, m = sched.resume(x0, data_fn, 0.3, checkpoint_dir=ck,
+                            n_rounds=5)
+    _bit_equal(st_ref.x, st.x)
+    _metrics_bit_equal(m_ref, m)
+
+
+@pytest.mark.slow
+def test_sigkill_and_resume_subprocess(tmp_path):
+    """A real SIGKILL (no cleanup, no atexit) mid-run: the atomic
+    snapshots survive, and resume() in a fresh process state reproduces
+    the uninterrupted trajectory bit-for-bit."""
+    ck = str(tmp_path / "ck")
+    out = str(tmp_path / "resumed.npz")
+    script = r"""
+import os, signal, sys
+import numpy as np
+import jax, jax.numpy as jnp
+from repro import api
+from repro.core import compression as C
+from repro.core.quadratic import quadratic_for_objective
+from repro.faults import FaultSpec
+from repro.sched import CohortScheduler
+
+KEY = jax.random.PRNGKey(0)
+n, dim = 8, 16
+ks = jax.random.split(KEY, n)
+Xs = jnp.stack([jax.random.normal(k, (8, dim)) for k in ks])
+w_i = jnp.stack([jnp.linspace(-1, 1, dim) + 2.0 * i for i in range(n)])
+ys = jnp.einsum("nbp,np->nb", Xs, w_i)
+
+def loss(b, theta):
+    xb, yb = b
+    return 0.5 * jnp.mean((xb @ theta - yb) ** 2)
+
+problem = api.as_problem(quadratic_for_objective(loss, rho=0.05))
+spec = api.FederationSpec(
+    n_clients=n, participation=0.9, alpha=0.1,
+    compressor=C.block_quant(8, 16, checksum=True),
+    faults=FaultSpec(dropout=0.2, corrupt=0.3, cohort_fail=0.3))
+ck, phase = sys.argv[1], sys.argv[2]
+kill_at = 4 if phase == "kill" else -1
+
+def data_fn(t, k, ids):
+    if t == kill_at:
+        os.kill(os.getpid(), signal.SIGKILL)   # a REAL crash: no cleanup
+    ids = np.asarray(ids)
+    return (Xs[ids], ys[ids])
+
+sched = CohortScheduler(problem, spec, cohort_size=4)
+if phase == "kill":         # phase 1: run until the crash
+    sched.run(jnp.zeros(dim), data_fn, 0.3, key=KEY, n_rounds=6,
+              checkpoint_dir=ck)
+    raise SystemExit("survived a SIGKILL?")
+# phase 2: resume (fresh process state), or the uninterrupted reference
+if phase == "resume":
+    st, pop, m = sched.resume(jnp.zeros(dim), data_fn, 0.3,
+                              checkpoint_dir=ck, n_rounds=6)
+else:
+    st, pop, m = sched.run(jnp.zeros(dim), data_fn, 0.3, key=KEY,
+                           n_rounds=6)
+np.savez(sys.argv[3], x=np.asarray(st.x), v=np.asarray(st.v),
+         counts=pop.participation_counts,
+         **{f"m_{k}": np.asarray(v) for k, v in m.items()})
+"""
+    script_path = str(tmp_path / "driver.py")
+    with open(script_path, "w") as f:
+        f.write(script)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    r = subprocess.run([sys.executable, script_path, ck, "kill", "-"],
+                       env=env, capture_output=True, text=True,
+                       timeout=600)
+    assert r.returncode == -signal.SIGKILL, (r.returncode, r.stderr)
+    assert glob.glob(os.path.join(ck, "round_*.snap")), "no snapshot"
+    ref = str(tmp_path / "ref.npz")
+    for phase, path in (("full", ref), ("resume", out)):
+        r = subprocess.run([sys.executable, script_path, ck, phase, path],
+                           env=env, capture_output=True, text=True,
+                           timeout=600)
+        assert r.returncode == 0, r.stderr
+    a, b = np.load(ref), np.load(out)
+    assert set(a.files) == set(b.files)
+    for k in a.files:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# snapshot codec + population snapshots
+# ---------------------------------------------------------------------------
+
+def test_snapshot_codec_roundtrip(tmp_path):
+    obj = {
+        "mode": "async",
+        "cursor": 7,
+        "flag": True,
+        "nothing": None,
+        "gamma": 0.25,
+        "key": np.arange(2, dtype=np.uint32),
+        "rows": [{"a": np.float32(1.5)}, {"a": np.float32(2.5)}],
+        "pair": (np.ones((2, 3), np.float32), [1, 2, 3]),
+        "nested": {"deep": ({"x": np.zeros(4)},)},
+    }
+    path = str(tmp_path / "snap.npz")
+    save_snapshot(path, obj)
+    back = load_snapshot(path)
+    assert back["mode"] == "async" and back["cursor"] == 7
+    assert back["flag"] is True and back["nothing"] is None
+    assert back["gamma"] == 0.25
+    assert isinstance(back["pair"], tuple) and isinstance(back["rows"], list)
+    np.testing.assert_array_equal(back["key"], obj["key"])
+    np.testing.assert_array_equal(back["pair"][0], obj["pair"][0])
+    assert back["pair"][1] == [1, 2, 3]
+    np.testing.assert_array_equal(back["nested"]["deep"][0]["x"],
+                                  np.zeros(4))
+    with pytest.raises(TypeError, match="object"):
+        save_snapshot(str(tmp_path / "bad.npz"), {"f": lambda: None})
+    with pytest.raises(TypeError, match="keys"):
+        save_snapshot(str(tmp_path / "bad.npz"), {1: "x"})
+
+
+def test_population_snapshot_roundtrip_and_mismatch():
+    n, dim = 6, 8
+    spec = api.FederationSpec(n_clients=n, alpha=0.1)
+    pop = ClientPopulation(spec, jnp.zeros(dim))
+    pop.scatter_variates(np.arange(3), jnp.ones((3, dim)))
+    pop.record_participation(np.arange(n), np.ones(n))
+    pop.rounds_seen = 4
+    snap = pop.snapshot()
+    # the snapshot must not alias the live arena
+    pop.scatter_variates(np.arange(3), jnp.full((3, dim), 9.0))
+    assert float(np.asarray(snap["arena"][0]).max()) == 1.0
+    pop2 = ClientPopulation(spec, jnp.zeros(dim))
+    pop2.load_snapshot(snap)
+    _bit_equal(pop2.variates(), snap["arena"][0].reshape(n, dim))
+    _bit_equal(pop2.participation_counts, pop.participation_counts)
+    assert pop2.rounds_seen == 4
+    wrong_n = ClientPopulation(
+        api.FederationSpec(n_clients=n + 1, alpha=0.1), jnp.zeros(dim))
+    with pytest.raises(ValueError, match="clients"):
+        wrong_n.load_snapshot(snap)
+    wrong_shape = ClientPopulation(spec, jnp.zeros(dim + 1))
+    with pytest.raises(ValueError, match="arena leaf"):
+        wrong_shape.load_snapshot(snap)
+    novar = ClientPopulation(
+        api.FederationSpec(n_clients=n, variates="off"), jnp.zeros(dim))
+    with pytest.raises(ValueError, match="variates"):
+        novar.load_snapshot(snap)
+
+
+# ---------------------------------------------------------------------------
+# sanitize threading through the scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_sanitize_bit_identical_and_faults():
+    """run(sanitize=True) checkifies the jitted cohort + landing closures
+    — trajectory bit-identical when no check trips, including with the
+    fault axis active (corrupt-aware closure checkified too)."""
+    n, dim = 8, 16
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 16, checksum=True)
+    for faults in (None, FaultSpec(dropout=0.2, corrupt=0.4,
+                                   corrupt_kind="scales")):
+        spec = api.FederationSpec(n_clients=n, participation=0.8,
+                                  alpha=0.1, compressor=comp,
+                                  faults=faults)
+        sched = CohortScheduler(problem, spec, cohort_size=4)
+        st_ref, _, m_ref = sched.run(
+            x0 := jnp.zeros(dim),
+            _slicing_data_fn(lambda t, k: (Xs, ys)), 0.3, key=KEY,
+            n_rounds=3)
+        st, _, m = sched.run(x0, _slicing_data_fn(lambda t, k: (Xs, ys)),
+                             0.3, key=KEY, n_rounds=3, sanitize=True)
+        _bit_equal(st_ref.x, st.x)
+        _metrics_bit_equal(m_ref, m)
