@@ -38,6 +38,19 @@ a CPU box:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m benchmarks.perf_iterations --collective
 
+``--hier`` A/Bs the PR-9 two-tier (edge -> root) topology against the
+flat driver on the same workload: client payloads terminate at the edge
+tier, and what crosses the backbone is ONE buffer per edge — the raw
+f32 model-shaped partial, or (``reencode=True``) the partial requantized
+through the compressor's tier-boundary hook so backbone bytes shrink to
+n_edges * wire bytes, below the n_clients * wire uplink. Records
+per-round uplink vs backbone bytes (both measured off the actual
+buffers) and rounds/sec as TWO ``pair="hier"`` rows (variants
+``two_tier_raw`` / ``two_tier_reencode``):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.perf_iterations --hier
+
 ``--scheduler`` times the PR-7 cohort scheduler (repro.sched) at a small
 vs an 8x population under the SAME cohort size, samples the peak of live
 device bytes for each (the memory-independence claim: the per-client
@@ -395,6 +408,132 @@ def bench_collective(rounds: int = 100,
     return [entry_g, entry_r]
 
 
+def bench_hier(rounds: int = 100,
+               log_path: str = "results/perf_log.json",
+               seed: int = 0):
+    """The PR-9 two-tier (edge -> root) topology vs the flat driver on
+    the fig-1 federated dictionary-learning workload. Flat pays the full
+    per-client uplink on every link; two-tier terminates client payloads
+    at the edge tier and ships ONE buffer per edge over the backbone —
+    raw f32 partials, or (``reencode=True``) requantized through the
+    compressor's own tier-boundary hook so the backbone carries wire
+    bytes, not accumulation bytes. Full participation so the uplink is
+    the n-client worst case. Records two ``pair="hier"`` rows (raw /
+    reencoded backbone); returns them."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro import api
+    from repro.core import compression as Cmp
+    from repro.core.variational import DictLearnSpec, make_dictlearn
+    from repro.data.synthetic import (balanced_kmeans_split,
+                                      client_minibatch_fn, dictlearn_data)
+    from repro.launch.mesh import make_edge_mesh
+
+    n_devices = jax.device_count()
+    if n_devices >= 2 and n_devices % 2 == 0:
+        n_edges, mesh = n_devices // 2, make_edge_mesh(n_devices // 2, 2)
+    else:
+        n_edges, mesh = 4, None      # off-mesh two-tier: same accounting
+    n_clients = 8 if 8 % n_devices == 0 else n_devices
+    key = jax.random.PRNGKey(seed)
+    spec = DictLearnSpec(p=30, K=8, lam=0.1, eta=0.2, ista_iters=30)
+    z, _ = dictlearn_data(key, 2000, spec.p, spec.K)
+    clients = balanced_kmeans_split(key, z, n_clients=n_clients, n_iters=5)
+    problem = api.as_problem(make_dictlearn(spec))
+    comp = Cmp.block_quant(8, 128)
+    batch_fn = client_minibatch_fn(clients, batch_size=50)
+    gamma = api.decaying_stepsize(0.05)
+    s0 = problem.s_bar(z[:64],
+                       jax.random.normal(key, (spec.p, spec.K)) * 0.1)
+    mesh_kw = ({"mesh": mesh, "client_axis": "client"}
+               if mesh is not None else {})
+
+    def timed(topo):
+        fed = api.FederationSpec(n_clients=n_clients, participation=1.0,
+                                 alpha=0.01, compressor=comp,
+                                 topology=topo)
+        common = dict(spec=fed, key=key, n_rounds=rounds, **mesh_kw)
+        state, hist = api.run(problem, s0, batch_fn, gamma, **common)
+        jax.block_until_ready(state.x)
+        t0 = time.time()
+        state, hist = api.run(problem, s0, batch_fn, gamma, **common)
+        jax.block_until_ready(state.x)
+        return rounds / (time.time() - t0), state, hist
+
+    rps_flat, st_f, hist_f = timed(api.Topology.flat())
+    rps_raw, st_r, hist_r = timed(api.Topology.two_tier(n_edges))
+    rps_re, st_e, hist_e = timed(
+        api.Topology.two_tier(n_edges, reencode=True))
+
+    def max_diff(a, b):
+        # both two-tier variants sit within ~one 8-bit quantization step
+        # of flat: the reassociated edge partial flips quant buckets in
+        # the NEXT round's encode, so the gap saturates at the wire
+        # granularity instead of growing with f32 reassociation alone
+        return max(float(jax.numpy.abs(x - y).max())
+                   for x, y in zip(jax.tree.leaves(a.x),
+                                   jax.tree.leaves(b.x)))
+
+    uplink = float(np.asarray(hist_f["uplink_bytes"])[0])
+    bb_raw = float(np.asarray(hist_r["backbone_bytes"])[0])
+    bb_re = float(np.asarray(hist_e["backbone_bytes"])[0])
+    common_r = {"status": "ok", "rounds": rounds, "n_devices": n_devices,
+                "n_clients": n_clients, "n_edges": n_edges,
+                "on_mesh": mesh is not None,
+                "rounds_per_sec_flat": rps_flat,
+                "uplink_bytes_per_round": uplink,
+                "flat_backbone_bytes": float(
+                    np.asarray(hist_f["backbone_bytes"])[0])}
+    entry_raw = {
+        "pair": "hier", "variant": "two_tier_raw",
+        "hypothesis": "terminating client payloads at the edge tier "
+        "leaves ONE f32 model-shaped buffer per edge on the backbone: "
+        "backbone bytes = n_edges * model f32, independent of n_clients "
+        "— trajectory within one 8-bit quant step of flat (edge-wise "
+        "reassociation flips encode buckets, bounded by the wire "
+        "granularity)",
+        "multi_pod": False,
+        "result": dict(common_r,
+                       rounds_per_sec_two_tier=rps_raw,
+                       backbone_bytes_per_round=bb_raw,
+                       max_abs_diff_vs_flat=max_diff(st_f, st_r),
+                       trajectory_within_quant_step=max_diff(st_f, st_r)
+                       < 0.05)}
+    entry_re = {
+        "pair": "hier", "variant": "two_tier_reencode",
+        "hypothesis": "the compressor's tier-boundary reencode hook "
+        "requantizes each edge partial back into wire format (fresh "
+        "digests re-stamped), so the backbone ships n_edges * wire "
+        "bytes < the n_clients * wire uplink — at the price of one "
+        "extra 8-bit quantization step per round on the trajectory",
+        "multi_pod": False,
+        "result": dict(common_r,
+                       rounds_per_sec_two_tier=rps_re,
+                       backbone_bytes_per_round=bb_re,
+                       backbone_vs_uplink_ratio=uplink / bb_re,
+                       backbone_below_uplink=bb_re < uplink,
+                       backbone_vs_raw_ratio=bb_raw / bb_re,
+                       max_abs_diff_vs_flat=max_diff(st_f, st_e),
+                       trajectory_within_quant_step=max_diff(st_f, st_e)
+                       < 0.05)}
+    print(f"[hier] devices={n_devices} clients={n_clients} "
+          f"edges={n_edges} mesh={'on' if mesh is not None else 'off'}: "
+          f"rounds/sec flat={rps_flat:.1f} two-tier={rps_raw:.1f} "
+          f"reencode={rps_re:.1f}")
+    print(f"[hier] per-round bytes: uplink {uplink:.0f}B, backbone raw "
+          f"{bb_raw:.0f}B, backbone reencoded {bb_re:.0f}B "
+          f"({uplink / bb_re:.2f}x below the uplink)")
+    log = json.load(open(log_path)) if os.path.exists(log_path) else []
+    log = [e for e in log if e.get("pair") != "hier"]
+    log += [entry_raw, entry_re]
+    os.makedirs(os.path.dirname(log_path) or ".", exist_ok=True)
+    json.dump(log, open(log_path, "w"), indent=1)
+    return [entry_raw, entry_re]
+
+
 def bench_scheduler(rounds: int = 20,
                     log_path: str = "results/perf_log.json",
                     seed: int = 0):
@@ -602,6 +741,11 @@ def main():
                     "uplinks against the single-device path + record the "
                     "measured collective bytes of each (two "
                     "pair='collective' rows)")
+    ap.add_argument("--hier", action="store_true",
+                    help="A/B the PR-9 two-tier (edge -> root) topology "
+                    "vs the flat driver: per-round uplink vs backbone "
+                    "bytes (raw + reencoded tier boundary) and rounds/sec "
+                    "(two pair='hier' rows)")
     ap.add_argument("--scheduler", action="store_true",
                     help="time the PR-7 cohort scheduler at a small vs 8x "
                     "population under the same cohort size + sample the "
@@ -628,6 +772,9 @@ def main():
     if args.collective:
         bench_collective(rounds=min(args.rounds, 200), log_path=args.log)
         return
+    if args.hier:
+        bench_hier(rounds=min(args.rounds, 200), log_path=args.log)
+        return
     if args.scheduler:
         bench_scheduler(rounds=min(args.rounds, 50), log_path=args.log)
         return
@@ -636,7 +783,7 @@ def main():
         return
     if args.pair is None:
         ap.error("--pair is required unless --driver/--wire/--collective/"
-                 "--scheduler/--faults is given")
+                 "--hier/--scheduler/--faults is given")
 
     from repro.launch.dryrun import compile_one
 

@@ -25,6 +25,14 @@ it ever runs:
    f32 weights, the fused reduce returns model-shaped leaves in a
    floating accumulation dtype (never integer codes; never a stacked
    axis left over).
+6. **reencode** (when the hook exists) — the tier-boundary re-entry
+   into the wire format: ``reencode(key, partial)`` on an f32
+   model-shaped partial yields a self-consistent packed payload whose
+   digests are RE-STAMPED (``check`` present whenever the compressor
+   is checksummed — each tier hop must be independently verifiable),
+   that ``decode`` restores to the f32 partial's structs, and whose
+   actual buffer bytes match the analytic ``payload_bytes`` model
+   (``backbone_bytes`` is billed off these buffers).
 
 Violations are collected (not raised) so a report can show everything
 wrong with a compressor at once; ``CompressorReport.raise_if_failed``
@@ -273,6 +281,51 @@ def check_compressor(comp, tree, *, n_clients: int = 4,
                         "decode-reduce", path,
                         f"reduced dtype {jnp.dtype(g.dtype).name} is not "
                         f"a floating accumulation dtype"))
+
+    # 6. reencode — the topology tier-boundary hook: re-enter the wire
+    # format from the f32 edge partial (model shapes, accumulation dtype)
+    if comp.reencode is not None:
+        report.checked.append("reencode")
+        partial = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(tuple(s.shape), jnp.float32),
+            structs)
+        try:
+            payload2 = jax.eval_shape(comp.reencode, key, partial)
+        except Exception as e:
+            report.violations.append(ContractViolation(
+                "reencode", "",
+                f"reencode failed abstract eval on the f32 partial: "
+                f"{type(e).__name__}: {e}"))
+            return report
+        for path, leaf in _leaf_paths(payload2):
+            if isinstance(leaf, PackedLeaf):
+                _check_packed_leaf(report, path, leaf)
+                if comp.checksum and leaf.check is None:
+                    report.violations.append(ContractViolation(
+                        "reencode", path,
+                        "checksummed compressor but the re-encoded "
+                        "payload carries no digest — each tier hop must "
+                        "re-stamp its own verifiable checksum"))
+        try:
+            decoded2 = jax.eval_shape(comp.decode, payload2)
+        except Exception as e:
+            report.violations.append(ContractViolation(
+                "reencode", "",
+                f"decode of the re-encoded payload failed abstract "
+                f"eval: {type(e).__name__}: {e}"))
+            return report
+        # the boundary must give back the f32 partial it was handed —
+        # the backbone psum runs on these structs
+        _check_same_structs(report, "reencode", partial, decoded2)
+        actual2 = float(_tree_bytes(payload2))
+        model2 = float(comp.payload_bytes(partial))
+        if abs(model2 - actual2) > bytes_tol:
+            report.violations.append(ContractViolation(
+                "reencode", "",
+                f"payload_bytes model says {model2:.1f} B but the "
+                f"re-encoded buffers hold {actual2:.1f} B (tol "
+                f"{bytes_tol}) — backbone_bytes would lie by "
+                f"{model2 - actual2:+.1f} B per edge"))
     return report
 
 

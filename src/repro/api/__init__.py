@@ -7,6 +7,7 @@ driver-knob map.
 """
 from .problem import MMProblem, as_problem  # noqa: F401
 from .spec import FederationSpec, participation_draw  # noqa: F401
+from .topology import Topology  # noqa: F401
 from .schedule import (decaying_stepsize, resolve_schedule,  # noqa: F401
                        schedule_length)
 from .driver import (CohortPartial, CohortSlice, DriverState,  # noqa: F401

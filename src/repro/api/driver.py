@@ -84,13 +84,17 @@ class CohortSlice(NamedTuple):
     padding — None means every slot is real; ``corrupt`` an optional bool
     vector flagging clients whose uplink payload is damaged in flight
     (the ``FaultSpec.corrupt`` draw) — requires a checksummed wire-format
-    compressor, which detects the damage and drops the client."""
+    compressor, which detects the damage and drops the client; ``edge_ids``
+    the cohort's slice of the population's STABLE client -> edge assignment
+    (``Topology.edge_ids`` indexed by global id) — required under a
+    two-tier topology, None otherwise."""
     mask: jnp.ndarray
     mu: jnp.ndarray
     quant_keys: jnp.ndarray
     v_i: Pytree = ()
     valid: Optional[jnp.ndarray] = None
     corrupt: Optional[jnp.ndarray] = None
+    edge_ids: Optional[jnp.ndarray] = None
 
 
 class CohortPartial(NamedTuple):
@@ -101,7 +105,14 @@ class CohortPartial(NamedTuple):
     the realized participation count, the measured uplink bytes, the
     per-client oracle-metric SUMS over the cohort's real clients (divide
     by n_total after summing cohorts to recover ``step``'s means), and
-    the actual cross-mesh collective bytes (None off-mesh)."""
+    the actual cross-mesh collective bytes (None off-mesh).
+
+    Under a TWO-TIER topology ``agg`` is the ``(n_edges,)``-stacked f32
+    per-edge partial instead (the tier boundary is NONLINEAR when the
+    compressor re-encodes, so cohorts must sum edge-wise BEFORE the
+    boundary) — the scheduler finalizes it at landing via
+    ``finalize_partial``; ``comm_bytes`` stays uplink-only, backbone
+    bytes are billed once per landing."""
     agg: Pytree
     v_i: Pytree
     n_active: jnp.ndarray
@@ -186,9 +197,68 @@ def _weighted_reduce(w, q):
         lambda x: jnp.tensordot(w, x, axes=1).astype(x.dtype), q)
 
 
+# a private fold_in lane for the per-round tier-boundary keys: deriving
+# them off the round key consumes NOTHING from the legacy split chain, so
+# flat trajectories stay bit-identical to the pre-topology driver
+_EDGE_KEY_SALT = 0x45444745  # "EDGE"
+
+
+def _edge_keys(key, n_edges):
+    return jax.random.split(jax.random.fold_in(key, _EDGE_KEY_SALT),
+                            n_edges)
+
+
+def _edge_partials(q, w, edge_ids, n_edges):
+    """Per-edge mu-weighted partial sums in the accumulation dtype (f32):
+    the within-edge half of the two-tier reduction, grouped by the STABLE
+    global client -> edge assignment. An explicit segment-sum, not a mesh
+    position: it stays correct under any cohorting of the population."""
+    def one(x):
+        wcol = w.astype(jnp.float32).reshape((-1,) + (1,) * (x.ndim - 1))
+        return jax.ops.segment_sum(x.astype(jnp.float32) * wcol, edge_ids,
+                                   num_segments=n_edges)
+    return jax.tree.map(one, q)
+
+
+def tier_boundary(spec: FederationSpec, edge_parts, edge_keys, x_ref):
+    """Cross the edge -> root tier: optionally re-enter the wire format
+    per edge (``Compressor.reencode`` with a fresh per-tier key — digests
+    are RE-STAMPED, so each hop is independently verifiable and billed),
+    measure the ACTUAL backbone buffers, sum over edges, and downcast
+    ONCE to the iterate dtype (the PR-5 discipline applied to tier two).
+
+    ``edge_parts`` is an ``(n_edges,)``-stacked f32 partial per leaf.
+    Returns ``(agg, backbone_bytes)``; ``backbone_bytes`` is a static
+    Python float (buffer shapes are static under jit)."""
+    comp = spec.compressor
+    if spec.topology.reencode:
+        payload = jax.vmap(comp.reencode)(edge_keys, edge_parts)
+        backbone_bytes = float(_tree_bytes(payload))
+        edge_parts = comp.decode(payload)
+    else:
+        backbone_bytes = float(_tree_bytes(edge_parts))
+    agg = jax.tree.map(lambda e, x: jnp.sum(e, axis=0).astype(x.dtype),
+                       edge_parts, x_ref)
+    return agg, backbone_bytes
+
+
+def finalize_partial(spec: FederationSpec, agg, key, x_ref):
+    """The scheduler's landing-time tier crossing: a two-tier cohort
+    partial accumulates as the ``(n_edges,)``-stacked f32 per-edge sums
+    (reencode is nonlinear — cohorts must sum BEFORE the boundary), and
+    this finalizes the accumulated partial with the landing round's edge
+    keys. Flat partials pass through with zero backbone bytes. Returns
+    ``(agg, backbone_bytes)``."""
+    topo = spec.topology
+    if not topo.is_two_tier:
+        return agg, 0.0
+    return tier_boundary(spec, agg, _edge_keys(key, topo.n_edges), x_ref)
+
+
 def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
                   client_batches, v_i, quant_keys, mask, mu, *,
-                  mesh, client_axis, client_mode, uplink, corrupt=None):
+                  mesh, client_axis, client_mode, uplink, corrupt=None,
+                  edge_ids=None, edge_keys=None, tier_finalize=True):
     """The client half of Algorithm 2, shared by the full-population
     ``step`` and the cohort path: oracles (+ optional per-client metrics),
     drift/A4 compression, the uplink (vmap stack, sequential scan, or one
@@ -199,12 +269,24 @@ def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
     the LOCAL count, not the population.
 
     Returns ``(agg, v_i_new, cmetrics, wire_bytes_client,
-    collective_bytes, n_survive)``: the masked mu-weighted aggregate
-    (iterate dtype), the updated variate slice, stacked per-client oracle
-    metrics, the measured per-client uplink bytes (None for analytic
-    compressors), the actual cross-mesh collective bytes (None off-mesh),
-    and the count of active clients whose payload SURVIVED wire
-    verification (== ``sum(mask)`` without a checksummed compressor).
+    collective_bytes, n_survive, backbone_bytes)``: the masked
+    mu-weighted aggregate (iterate dtype), the updated variate slice,
+    stacked per-client oracle metrics, the measured per-client uplink
+    bytes (None for analytic compressors), the actual cross-mesh
+    collective bytes (None off-mesh), the count of active clients whose
+    payload SURVIVED wire verification (== ``sum(mask)`` without a
+    checksummed compressor), and the measured edge -> root backbone
+    bytes (None for the flat topology).
+
+    Topology: under ``spec.topology.two_tier`` the mu-weighted reduction
+    happens in two tiers — per-edge f32 partials (grouped by the stable
+    ``edge_ids`` assignment, or by the ``(edge, client)`` mesh axes on
+    the fused reduce path), then the ``tier_boundary`` crossing
+    (optional ``Compressor.reencode`` requantization with ``edge_keys``,
+    ONE cross-edge reduction, ONE downcast). ``tier_finalize=False``
+    (the cohort path) returns the ``(n_edges,)``-stacked f32 per-edge
+    partial instead, to be accumulated across cohorts and finalized at
+    landing via ``finalize_partial``.
 
     Wire integrity: when the compressor was built with ``checksum=True``
     every decode path first recomputes each client's payload digest
@@ -225,12 +307,25 @@ def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
         raise ValueError("corrupt flags need a checksummed wire-format "
                          "compressor (block_quant(..., checksum=True)) — "
                          "undetected damage would poison the aggregate")
+    topo = spec.topology
+    two_tier = topo.is_two_tier
+    if two_tier and edge_ids is None:
+        raise ValueError("a two-tier topology needs the per-client edge "
+                         "assignment (edge_ids) for this client slice")
     n_local = mask.shape[0]
-    if mesh is not None and n_local % mesh.shape[client_axis] != 0:
-        raise ValueError(
-            f"the client-stage leading dim ({n_local} clients) must "
-            f"divide evenly over the '{client_axis}' mesh axis "
-            f"(size {mesh.shape[client_axis]})")
+    if mesh is not None:
+        if two_tier:
+            shard = mesh.shape[client_axis] * mesh.shape[topo.edge_axis]
+            if n_local % shard != 0:
+                raise ValueError(
+                    f"the client-stage leading dim ({n_local} clients) "
+                    f"must divide evenly over the ('{topo.edge_axis}', "
+                    f"'{client_axis}') mesh axes (total size {shard})")
+        elif n_local % mesh.shape[client_axis] != 0:
+            raise ValueError(
+                f"the client-stage leading dim ({n_local} clients) must "
+                f"divide evenly over the '{client_axis}' mesh axis "
+                f"(size {mesh.shape[client_axis]})")
 
     def client_update(batch, v_c, qkey):
         """One client's round: oracle (+ optional metrics), drift, wire
@@ -271,10 +366,13 @@ def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
         return zero_invalid_rows(payload_s, ok), ok
 
     collective_bytes = None
+    backbone_bytes = None
     if client_mode == "scan":
         # sequential clients: one oracle/quantize transient live at a time;
         # the mu_i-weighted aggregate accumulates in the iterate's dtype
-        def body_core(agg_sum, cb, v_c, qk, mu_c, m_c, cf):
+        # (flat), or edge-wise in the f32 accumulation dtype (two-tier —
+        # the tier boundary does the ONE downcast)
+        def body_core(agg_sum, cb, v_c, qk, mu_c, m_c, cf, e_c=None):
             payload_c, cm = upd(cb, v_c, qk)
             surv_c = m_c
             if verify:
@@ -285,10 +383,24 @@ def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
             q_c = jax.tree.map(lambda x: _mask_q(x, m_c), q_c)
             v_c_new = (_variate_update(v_c, q_c, alpha / p)
                        if use_v else ())
-            agg_sum = jax.tree.map(
-                lambda a, x: a + (mu_c * x).astype(a.dtype), agg_sum, q_c)
+            if two_tier:
+                agg_sum = jax.tree.map(
+                    lambda a, x: a.at[e_c].add(mu_c
+                                               * x.astype(jnp.float32)),
+                    agg_sum, q_c)
+            else:
+                agg_sum = jax.tree.map(
+                    lambda a, x: a + (mu_c * x).astype(a.dtype),
+                    agg_sum, q_c)
             return agg_sum, v_c_new, cm, surv_c
-        zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), x_ref)
+        if two_tier:
+            zeros = jax.tree.map(
+                lambda x: jnp.zeros((topo.n_edges,) + x.shape, jnp.float32),
+                x_ref)
+        else:
+            zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype),
+                                 x_ref)
+        eids = (jnp.asarray(edge_ids, jnp.int32),) if two_tier else ()
         if verify:
             cflags = (corrupt if corrupt is not None
                       else jnp.zeros((n_local,), jnp.bool_))
@@ -299,16 +411,19 @@ def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
                 return (agg_sum, surv + surv_c), (v_c_new, cm)
             (agg, n_survive), (v_i_new, cmetrics) = jax.lax.scan(
                 body, (zeros, jnp.float32(0.0)),
-                (client_batches, v_i, quant_keys, mu, mask, cflags))
+                (client_batches, v_i, quant_keys, mu, mask, cflags) + eids)
         else:
             def body(agg_sum, xs):
-                cb, v_c, qk, mu_c, m_c = xs
+                cb, v_c, qk, mu_c, m_c, *e_c = xs
                 agg_sum, v_c_new, cm, _ = body_core(
-                    agg_sum, cb, v_c, qk, mu_c, m_c, None)
+                    agg_sum, cb, v_c, qk, mu_c, m_c, None, *e_c)
                 return agg_sum, (v_c_new, cm)
             agg, (v_i_new, cmetrics) = jax.lax.scan(
-                body, zeros, (client_batches, v_i, quant_keys, mu, mask))
+                body, zeros,
+                (client_batches, v_i, quant_keys, mu, mask) + eids)
             n_survive = jnp.sum(mask)
+        if two_tier and tier_finalize:
+            agg, backbone_bytes = tier_boundary(spec, agg, edge_keys, x_ref)
         # static per-client wire bytes via eval_shape (no stacked payload
         # exists on this path)
         wire_bytes_client = comp.wire_bytes(x_ref) if use_wire else None
@@ -318,7 +433,20 @@ def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
         # v_i updates on the local slice, and a single psum of the
         # model-shaped partial aggregate crosses the mesh. The gathered
         # n-client payload stack of the "gather" path never exists.
-        cspec = PartitionSpec(client_axis)
+        # Two-tier: the partial-reduce psum is EDGE-SCOPED (psum over the
+        # client axis of the 2-D (edge, client) mesh reduces within each
+        # edge group), the tier boundary optionally re-encodes each
+        # edge's partial, and ONE cross-edge psum crosses the backbone.
+        if two_tier and not tier_finalize:
+            raise ValueError(
+                "two-tier uplink='reduce' groups clients by mesh position; "
+                "a streamed cohort's edge membership is data-dependent — "
+                "use uplink='gather' under the scheduler")
+        cspec = (PartitionSpec((topo.edge_axis, client_axis)) if two_tier
+                 else PartitionSpec(client_axis))
+        reenc = two_tier and topo.reencode
+        ek_args = (edge_keys,) if reenc else ()
+        ek_specs = (PartitionSpec(topo.edge_axis),) if reenc else ()
         measured = {}
 
         def stage_local(cb, vi, qk, mu_l, m_l, cf_l):
@@ -374,47 +502,70 @@ def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
             measured["psum_operand_bytes"] = _tree_bytes(part)
             return part, vi_new, cm, jnp.sum(m_eff)
 
-        if verify:
-            cflags = (corrupt if corrupt is not None
-                      else jnp.zeros((n_local,), jnp.bool_))
+        cflags = (corrupt if verify and corrupt is not None
+                  else jnp.zeros((n_local,), jnp.bool_))
 
-            def client_stage(cb, vi, qk, mu_l, m_l, cf_l):
-                part, vi_new, cm, ns_l = stage_local(
-                    cb, vi, qk, mu_l, m_l,
-                    cf_l if corrupt is not None else None)
+        # the survivor count crosses every mesh axis the clients are
+        # sharded over — a tuple axis name under the two-tier layout
+        ns_axes = ((client_axis, topo.edge_axis) if two_tier
+                   else client_axis)
+
+        def client_stage(cb, vi, qk, mu_l, m_l, cf_l, *ek):
+            part, vi_new, cm, ns_l = stage_local(
+                cb, vi, qk, mu_l, m_l,
+                cf_l if verify and corrupt is not None else None)
+            # the within-edge (flat: cross-mesh) reduce, in the
+            # accumulation dtype
+            agg_l = jax.tree.map(lambda x: jax.lax.psum(x, client_axis),
+                                 part)
+            if two_tier:
+                if reenc:
+                    # tier boundary: requantize THIS edge's partial with
+                    # its per-tier key (fresh digests re-stamped) and
+                    # measure what actually crosses the backbone — then
+                    # decode back to the f32 accumulation dtype for the
+                    # cross-edge psum
+                    pay_e = comp.reencode(ek[0][0], agg_l)
+                    measured["backbone_edge_bytes"] = _tree_bytes(pay_e)
+                    agg_l = comp.decode(pay_e)
+                else:
+                    measured["backbone_edge_bytes"] = _tree_bytes(agg_l)
+                # ONE cross-edge psum crosses the backbone
                 agg_l = jax.tree.map(
-                    lambda x: jax.lax.psum(x, client_axis), part)
-                return agg_l, vi_new, cm, jax.lax.psum(ns_l, client_axis)
+                    lambda x: jax.lax.psum(x, topo.edge_axis), agg_l)
+            ns = (jax.lax.psum(ns_l, ns_axes) if verify
+                  else jnp.float32(0.0))
+            return agg_l, vi_new, cm, ns
 
-            agg, v_i_new, cmetrics, n_survive = shard_map(
-                client_stage, mesh=mesh,
-                in_specs=(cspec, cspec, cspec, cspec, cspec, cspec),
-                out_specs=(PartitionSpec(), cspec, cspec, PartitionSpec()),
-                check_rep=False)(client_batches, v_i, quant_keys, mu, mask,
-                                 cflags)
-        else:
-            def client_stage(cb, vi, qk, mu_l, m_l):
-                part, vi_new, cm, _ = stage_local(cb, vi, qk, mu_l, m_l,
-                                                  None)
-                agg_l = jax.tree.map(
-                    lambda x: jax.lax.psum(x, client_axis), part)
-                return agg_l, vi_new, cm
-
-            agg, v_i_new, cmetrics = shard_map(
-                client_stage, mesh=mesh,
-                in_specs=(cspec, cspec, cspec, cspec, cspec),
-                out_specs=(PartitionSpec(), cspec, cspec),
-                check_rep=False)(client_batches, v_i, quant_keys, mu, mask)
+        agg, v_i_new, cmetrics, n_survive = shard_map(
+            client_stage, mesh=mesh,
+            in_specs=(cspec,) * 6 + ek_specs,
+            out_specs=(PartitionSpec(), cspec, cspec, PartitionSpec()),
+            check_rep=False)(client_batches, v_i, quant_keys, mu, mask,
+                             cflags, *ek_args)
+        if not verify:
             n_survive = jnp.sum(mask)
         # the ONE downcast back to the iterate dtype, AFTER the collective
         agg = jax.tree.map(lambda a, x: a.astype(x.dtype), agg, x_ref)
         collective_bytes = float(measured["psum_operand_bytes"])
+        if two_tier:
+            # total backbone traffic: every edge's tier-boundary buffer
+            # enters the cross-edge collective each round
+            backbone_bytes = (float(measured["backbone_edge_bytes"])
+                              * topo.n_edges)
         # static per-client wire bytes via eval_shape (no stacked payload
         # survives the shard_map on this path)
         wire_bytes_client = comp.wire_bytes(x_ref) if use_wire else None
     else:
         if mesh is not None:
-            cspec = PartitionSpec(client_axis)
+            # two-tier: the stacked client axis shards over BOTH mesh axes
+            # edge-major (device (e, c) owns block e*C + c), so the tiled
+            # gather over the tuple axis reconstructs global client order
+            # — the same contiguous edge-major order Topology.edge_ids
+            # assigns
+            gaxes = ((topo.edge_axis, client_axis) if two_tier
+                     else client_axis)
+            cspec = PartitionSpec(gaxes)
 
             def client_stage(cb, vi, qk):
                 # each device slice runs its local clients...
@@ -422,7 +573,7 @@ def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
                 # ...and the uplink collective moves the ENCODED buffers:
                 # packed codes + per-group scales cross the mesh boundary
                 return jax.tree.map(
-                    lambda x: jax.lax.all_gather(x, client_axis, axis=0,
+                    lambda x: jax.lax.all_gather(x, gaxes, axis=0,
                                                  tiled=True), local)
 
             # check_rep=False: all_gather's replication over client_axis is
@@ -461,9 +612,20 @@ def _client_stage(problem: MMProblem, spec: FederationSpec, view, x_ref,
 
         # client control variates (lines 8/11) + server aggregation (13)
         v_i_new = _variate_update(v_i, q, alpha / p) if use_v else ()
-        agg = _weighted_reduce(mu, q)
+        if two_tier:
+            # within-edge tier: per-edge f32 partials by the stable
+            # assignment (q is already masked; mu carries the weights)
+            parts = _edge_partials(q, mu, jnp.asarray(edge_ids, jnp.int32),
+                                   topo.n_edges)
+            if tier_finalize:
+                agg, backbone_bytes = tier_boundary(spec, parts, edge_keys,
+                                                    x_ref)
+            else:
+                agg = parts
+        else:
+            agg = _weighted_reduce(mu, q)
     return (agg, v_i_new, cmetrics, wire_bytes_client, collective_bytes,
-            n_survive)
+            n_survive, backbone_bytes)
 
 
 def _server_apply(problem: MMProblem, spec: FederationSpec,
@@ -686,7 +848,14 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
     param_space = spec.aggregation == "parameter"
     comp = spec.compressor
     use_wire = comp.encode is not None
-    _validate_topology(mesh, client_axis, client_mode, uplink)
+    _validate_topology(mesh, client_axis, client_mode, uplink,
+                       topology=spec.topology)
+    edge_ids = edge_keys = None
+    if spec.topology.is_two_tier:
+        # the stable global assignment + per-round tier-boundary keys (a
+        # private fold_in lane — the legacy key chain below is untouched)
+        edge_ids = jnp.asarray(spec.topology.edge_ids(n), jnp.int32)
+        edge_keys = _edge_keys(key, spec.topology.n_edges)
 
     view = _broadcast_view(problem, spec, state)           # line 4
 
@@ -706,11 +875,13 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
         corrupt = corr if spec.faults.corrupt > 0.0 else None
     mask = active.astype(jnp.float32)
 
-    agg, v_i_new, cmetrics, wire_bytes_client, collective_bytes, n_survive \
+    (agg, v_i_new, cmetrics, wire_bytes_client, collective_bytes,
+     n_survive, backbone_bytes) \
         = _client_stage(problem, spec, view, state.x, client_batches,
                         state.v_i, quant_keys, mask, mu, mesh=mesh,
                         client_axis=client_axis, client_mode=client_mode,
-                        uplink=uplink, corrupt=corrupt)
+                        uplink=uplink, corrupt=corrupt, edge_ids=edge_ids,
+                        edge_keys=edge_keys)
     new_state, h, aux_metrics = _server_apply(
         problem, spec, state, agg, v_i_new, n_survive, gamma)
     x_new = new_state.x
@@ -726,14 +897,22 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
         assert_comm_audit(
             comp, state.x, per_client,
             where=f"step(client_mode={client_mode!r}, uplink={uplink!r})")
+    uplink_bytes = per_client * jnp.sum(mask)
+    backbone = (jnp.float32(0.0) if backbone_bytes is None
+                else jnp.asarray(backbone_bytes, jnp.float32))
     metrics = {
         # clients whose payload survived wire verification (== the A5
         # count without a checksummed compressor)
         "n_active": n_survive,
-        # actual encoded-buffer bytes on the wire path, analytic
-        # otherwise; billed for every client that SENT — a corrupt
-        # payload used the wire even though verification dropped it
-        "comm_bytes": per_client * jnp.sum(mask),
+        # client -> edge uplink: actual encoded-buffer bytes on the wire
+        # path, analytic otherwise; billed for every client that SENT —
+        # a corrupt payload used the wire even though verification
+        # dropped it
+        "uplink_bytes": uplink_bytes,
+        # edge -> root tier: actual tier-boundary buffer bytes (0 for
+        # the flat topology — there is no second tier)
+        "backbone_bytes": backbone,
+        "comm_bytes": uplink_bytes + backbone,
         "omega_eff": jnp.asarray(comm["omega_eff"], jnp.float32),
     }
     if drift_metric:
@@ -762,7 +941,8 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
     return new_state, metrics
 
 
-def _validate_topology(mesh, client_axis, client_mode, uplink):
+def _validate_topology(mesh, client_axis, client_mode, uplink,
+                       topology=None):
     """The mesh/client-stage knob validation shared by ``step`` and the
     cohort path (the n-divisibility check lives in ``_client_stage``
     where the local client count is known)."""
@@ -782,6 +962,23 @@ def _validate_topology(mesh, client_axis, client_mode, uplink):
         if client_axis not in mesh.shape:
             raise ValueError(f"client_axis={client_axis!r} not an axis of "
                              f"the mesh (axes: {tuple(mesh.shape)})")
+        if topology is not None and topology.is_two_tier:
+            e_ax = topology.edge_axis
+            if e_ax == client_axis:
+                raise ValueError(
+                    f"topology.edge_axis={e_ax!r} collides with "
+                    f"client_axis — the two-tier mesh needs distinct "
+                    f"(edge, client) axes")
+            if e_ax not in mesh.shape:
+                raise ValueError(
+                    f"topology.edge_axis={e_ax!r} not an axis of the mesh "
+                    f"(axes: {tuple(mesh.shape)}) — build a 2-D "
+                    f"(edge, client) mesh (launch.mesh.make_edge_mesh)")
+            if mesh.shape[e_ax] != topology.n_edges:
+                raise ValueError(
+                    f"mesh axis {e_ax!r} has size {mesh.shape[e_ax]} but "
+                    f"the topology declares n_edges={topology.n_edges} — "
+                    f"one mesh row per edge aggregator")
 
 
 def _cohort_partial(problem: MMProblem, spec: FederationSpec,
@@ -794,24 +991,38 @@ def _cohort_partial(problem: MMProblem, spec: FederationSpec,
     full-population weighted reduce (bit-identical for a single
     full-participation cohort, reassociation-close otherwise)."""
     problem = as_problem(problem)
-    _validate_topology(mesh, client_axis, client_mode, uplink)
+    _validate_topology(mesh, client_axis, client_mode, uplink,
+                       topology=spec.topology)
     comp = spec.compressor
     use_wire = comp.encode is not None
+    if spec.topology.is_two_tier and cohort.edge_ids is None:
+        raise ValueError(
+            "a two-tier topology needs CohortSlice.edge_ids — the "
+            "cohort's slice of the population's stable client -> edge "
+            "assignment (ClientPopulation.edge_ids)")
     mask = cohort.mask.astype(jnp.float32)
     c = mask.shape[0]
-    for name, arr in (("mu", cohort.mu), ("quant_keys", cohort.quant_keys)):
+    checks = [("mu", cohort.mu), ("quant_keys", cohort.quant_keys)]
+    if cohort.edge_ids is not None:
+        checks.append(("edge_ids", cohort.edge_ids))
+    for name, arr in checks:
         if jnp.shape(arr)[0] != c:
             raise ValueError(
                 f"CohortSlice.{name} has leading dim "
                 f"{jnp.shape(arr)[0]} != cohort size {c}")
 
     view = _broadcast_view(problem, spec, state)           # line 4
-    agg, v_i_new, cmetrics, wire_bytes_client, collective_bytes, n_survive \
+    # tier_finalize=False: a two-tier cohort returns the (n_edges,)-stacked
+    # f32 per-edge partial — the tier boundary is nonlinear under reencode,
+    # so cohorts sum edge-wise first and the scheduler finalizes at landing
+    (agg, v_i_new, cmetrics, wire_bytes_client, collective_bytes,
+     n_survive, _) \
         = _client_stage(problem, spec, view, state.x, client_batches,
                         cohort.v_i, cohort.quant_keys, mask, cohort.mu,
                         mesh=mesh, client_axis=client_axis,
                         client_mode=client_mode, uplink=uplink,
-                        corrupt=cohort.corrupt)
+                        corrupt=cohort.corrupt, edge_ids=cohort.edge_ids,
+                        tier_finalize=False)
     comm = comp.round_metrics(state.x, p=spec.participation)
     per_client = (wire_bytes_client if use_wire
                   else comm["payload_bytes_per_client"])

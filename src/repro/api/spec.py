@@ -44,6 +44,18 @@ max_staleness / staleness_weight: bounded-staleness async semantics for
                 update. ``staleness_weight(0)`` MUST be 1 so a fresh
                 (synchronous) cohort recovers the sync algorithm exactly.
                 Ignored by the synchronous ``api.run`` loop.
+topology:       a ``Topology`` — where client statistics are reduced on
+                the way to the root. ``Topology.flat()`` (default) is
+                the single-tier layout, bit-identical to the
+                pre-topology driver. ``Topology.two_tier(n_edges)``
+                assigns clients to edge aggregators by a stable function
+                of global id, runs the fused decode+mask+mu-reduce
+                within each edge group, optionally re-encodes the edge
+                partial through ``Compressor.reencode`` at the tier
+                boundary (checksums re-stamped per tier), and crosses
+                the backbone with ONE cross-edge reduction. Comm
+                accounting splits into ``uplink_bytes`` +
+                ``backbone_bytes`` (``comm_bytes`` stays their sum).
 faults:         a ``repro.faults.FaultSpec`` — seeded per-round schedules
                 for client dropout, payload corruption, stragglers,
                 cohort failure/retry, and a server kill point. Dropout
@@ -64,6 +76,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.compression import Compressor, identity
+from .topology import Topology
 
 if TYPE_CHECKING:  # pragma: no cover — annotation-only import
     from ..faults.spec import FaultSpec
@@ -91,6 +104,7 @@ class FederationSpec:
     max_staleness: Optional[int] = None         # async drain bound (sched)
     staleness_weight: Optional[Callable[[int], float]] = None  # w(tau)
     faults: Optional["FaultSpec"] = None        # repro.faults fault axis
+    topology: Topology = dataclasses.field(default_factory=Topology)
 
     def __post_init__(self):
         if not (0.0 < self.participation <= 1.0):
@@ -150,6 +164,24 @@ class FederationSpec:
                 raise ValueError(
                     f"staleness_weight(0) must be 1.0 so a fresh cohort "
                     f"recovers the synchronous update exactly, got {w0:.6g}")
+        if not isinstance(self.topology, Topology):
+            raise ValueError(f"topology must be a repro.api.Topology, got "
+                             f"{type(self.topology).__name__}")
+        if self.topology.is_two_tier:
+            if self.topology.n_edges > self.n_clients:
+                raise ValueError(
+                    f"topology.n_edges={self.topology.n_edges} exceeds "
+                    f"n_clients={self.n_clients} — every edge aggregator "
+                    f"needs at least one client")
+            if self.topology.reencode and self.compressor.reencode is None:
+                # without the hook the tier boundary would have to ship
+                # the raw f32 edge partial anyway — reencode=True would
+                # silently bill backbone bytes it never saved
+                raise ValueError(
+                    "topology.reencode=True requires a compressor with a "
+                    "tier-boundary reencode hook (e.g. block_quant with "
+                    "bits <= 8); identity/no-wire compressors cannot "
+                    "requantize the edge partial")
         if self.faults is not None:
             from ..faults.spec import FaultSpec
             if not isinstance(self.faults, FaultSpec):

@@ -1,0 +1,120 @@
+"""Aggregation topology as a first-class, validated ``FederationSpec`` axis.
+
+The repo's implicit topology has always been FLAT: every client talks to
+one root, the uplink is one hop, and ``comm_bytes`` bills that single
+link. Real deployments are a tree — clients talk to edge aggregators
+that talk to the root — and the whole point of aggregating *surrogate
+statistics* (rather than parameters) is that partial sums can be
+re-reduced and re-compressed at every tier. ``Topology`` makes that
+structure explicit:
+
+- ``Topology.flat()`` — the default; one tier, bit-identical to the
+  pre-topology driver on every client branch and both uplinks.
+- ``Topology.two_tier(n_edges, reencode=...)`` — clients are assigned
+  to ``n_edges`` edge groups by a *stable* function of their global id
+  (contiguous balanced blocks, ``numpy.array_split`` semantics). The
+  PR-5 fused decode+mask+mu-reduce runs within each edge group, the
+  edge partial optionally re-enters the wire format via
+  ``Compressor.reencode`` (fresh per-tier keys, checksums re-stamped),
+  and ONE cross-edge reduction crosses the backbone. Comm accounting
+  splits into ``uplink_bytes`` (client -> edge) + ``backbone_bytes``
+  (edge -> root), with ``comm_bytes`` kept as their sum.
+
+The edge assignment is a pure function of ``(n_clients, n_edges)`` so
+cohort scheduling, checkpoint resume, and multi-process shards all see
+the same client -> edge map without coordination.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["Topology"]
+
+_KINDS = ("flat", "two_tier")
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Where client statistics are reduced on their way to the root.
+
+    Attributes:
+      kind: ``"flat"`` (single tier) or ``"two_tier"`` (edge -> root).
+      n_edges: number of edge aggregators (``1`` for flat).
+      reencode: if True, each edge partial is re-encoded through
+        ``Compressor.reencode`` at the tier boundary before crossing
+        the backbone (requires a compressor with a wire format that
+        provides the hook).
+      edge_axis: mesh axis name for the edge tier when running on a
+        2-D ``(edge, client)`` device mesh.
+    """
+
+    kind: str = "flat"
+    n_edges: int = 1
+    reencode: bool = False
+    edge_axis: str = "edge"
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(
+                f"topology kind={self.kind!r} is not one of {_KINDS}")
+        if not isinstance(self.n_edges, int) or self.n_edges < 1:
+            raise ValueError(
+                f"n_edges must be a positive int, got {self.n_edges!r}")
+        if self.kind == "flat":
+            if self.n_edges != 1:
+                raise ValueError(
+                    f"a flat topology has exactly one tier; n_edges="
+                    f"{self.n_edges} only makes sense with kind='two_tier'")
+            if self.reencode:
+                raise ValueError(
+                    "reencode=True is a tier-boundary transform; a flat "
+                    "topology has no tier boundary (use "
+                    "Topology.two_tier(..., reencode=True))")
+        if not self.edge_axis or not isinstance(self.edge_axis, str):
+            raise ValueError(
+                f"edge_axis must be a non-empty str, got {self.edge_axis!r}")
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def flat(cls) -> "Topology":
+        """The single-tier default: every client talks to the root."""
+        return cls()
+
+    @classmethod
+    def two_tier(cls, n_edges: int, *, reencode: bool = False,
+                 edge_axis: str = "edge") -> "Topology":
+        """Edge -> root: ``n_edges`` aggregators between clients and root."""
+        return cls(kind="two_tier", n_edges=n_edges, reencode=reencode,
+                   edge_axis=edge_axis)
+
+    # -- structure ----------------------------------------------------------
+
+    @property
+    def is_two_tier(self) -> bool:
+        return self.kind == "two_tier"
+
+    def edge_sizes(self, n_clients: int) -> tuple:
+        """Clients per edge, ``numpy.array_split`` semantics.
+
+        The first ``n_clients % n_edges`` edges take one extra client, so
+        ragged populations stay balanced to within one.
+        """
+        if n_clients < 1:
+            raise ValueError(f"n_clients must be >= 1, got {n_clients}")
+        e = self.n_edges
+        base, extra = divmod(n_clients, e)
+        return tuple(base + 1 if i < extra else base for i in range(e))
+
+    def edge_ids(self, n_clients: int) -> np.ndarray:
+        """Stable client -> edge assignment, ``int32`` of shape ``(n,)``.
+
+        A pure function of the GLOBAL client id (contiguous balanced
+        blocks), so cohort slices, resumed runs, and per-process shards
+        agree on the map with no coordination.
+        """
+        sizes = self.edge_sizes(n_clients)
+        return np.repeat(np.arange(self.n_edges, dtype=np.int32),
+                         np.asarray(sizes))

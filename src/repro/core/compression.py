@@ -327,6 +327,11 @@ class Compressor:
     # encode stamps each PackedLeaf with its wire digest (CHECKSUM_BYTES
     # per leaf, billed in payload_fn) and the server verifies at decode
     checksum: bool = False
+    # (key, partial pytree) -> payload pytree: re-enter the wire format at
+    # a topology tier boundary (requantize the f32 edge partial before it
+    # crosses the backbone). Stamps FRESH digests — each tier's hop is
+    # independently verifiable. None for compressors without a wire format.
+    reencode: Optional[Callable] = None
 
     def __call__(self, key, s):
         return self.apply(key, s)
@@ -934,7 +939,11 @@ def block_quant(bits: int = 8, block: int = 256, dither: str = "uniform",
                       encode=encode if bits <= 8 else None,
                       decode=decode_tree if bits <= 8 else None,
                       decode_reduce=decode_reduce if bits <= 8 else None,
-                      checksum=checksum and bits <= 8)
+                      checksum=checksum and bits <= 8,
+                      # the quantizer's tier-boundary reencode IS its
+                      # encode: an edge partial is just another f32 tree,
+                      # and encode stamps fresh per-tier digests
+                      reencode=encode if bits <= 8 else None)
 
 
 # ---------------------------------------------------------------------------

@@ -52,6 +52,10 @@ class ClientPopulation:
         # device buffer alive behind this host copy
         self.mu = np.array(mu_dev, np.float32, copy=True)
         del mu_dev
+        # the STABLE global client -> edge assignment (host numpy; all
+        # zeros under a flat topology). Cohorts slice it by global id,
+        # so a client keeps its edge across any cohorting.
+        self.edge_ids = spec.topology.edge_ids(self.n_total)
         self.participation_counts = np.zeros((self.n_total,), np.int64)
         self.rounds_seen = 0
         if spec.use_variates:

@@ -87,7 +87,8 @@ import jax
 import jax.numpy as jnp
 
 from ..api.driver import (CohortPartial, CohortSlice, DriverState,
-                          _stack_metrics, apply_partial, step)
+                          _stack_metrics, apply_partial, finalize_partial,
+                          step)
 from ..api.problem import as_problem
 from ..api.schedule import resolve_schedule, schedule_length
 from ..api.spec import FederationSpec, participation_draw
@@ -244,16 +245,45 @@ class CohortScheduler:
         self.uplink = uplink
         self.drift_metric = drift_metric
         self.n_cohorts = math.ceil(spec.n_clients / self.cohort_size)
+        self._two_tier = spec.topology.is_two_tier
+        if self._two_tier and uplink == "reduce":
+            # fail at construction, not rounds later inside the jitted
+            # cohort closure (the driver raises the same way)
+            raise ValueError(
+                "two-tier uplink='reduce' groups clients by mesh position; "
+                "a streamed cohort's edge membership is data-dependent — "
+                "use uplink='gather' under the scheduler")
         problem_ = self.problem
         spec_ = self.spec
 
-        def _cohort(state, batch, mask, mu_s, qkeys, v_i, valid):
-            cohort = CohortSlice(mask=mask, mu=mu_s, quant_keys=qkeys,
-                                 v_i=v_i, valid=valid)
-            return step(problem_, spec_, state, batch, 0.0, None,
-                        mesh=mesh, client_axis=client_axis,
-                        client_mode=client_mode, uplink=uplink,
-                        cohort=cohort)
+        if self._two_tier:
+            # the cohort closure grows ONE extra (C,) operand — the
+            # cohort's edge-assignment slice; the flat traced program is
+            # byte-for-byte the pre-topology one
+            def _cohort(state, batch, mask, mu_s, qkeys, v_i, valid,
+                        edge_ids):
+                cohort = CohortSlice(mask=mask, mu=mu_s, quant_keys=qkeys,
+                                     v_i=v_i, valid=valid,
+                                     edge_ids=edge_ids)
+                return step(problem_, spec_, state, batch, 0.0, None,
+                            mesh=mesh, client_axis=client_axis,
+                            client_mode=client_mode, uplink=uplink,
+                            cohort=cohort)
+
+            def _finalize(agg, key, x_ref):
+                return finalize_partial(spec_, agg, key, x_ref)
+
+            self._finalize_j = jax.jit(_finalize)
+        else:
+            def _cohort(state, batch, mask, mu_s, qkeys, v_i, valid):
+                cohort = CohortSlice(mask=mask, mu=mu_s, quant_keys=qkeys,
+                                     v_i=v_i, valid=valid)
+                return step(problem_, spec_, state, batch, 0.0, None,
+                            mesh=mesh, client_axis=client_axis,
+                            client_mode=client_mode, uplink=uplink,
+                            cohort=cohort)
+
+            self._finalize_j = None
 
         def _apply(state, agg, n_active, gamma):
             return apply_partial(problem_, spec_, state, agg, n_active,
@@ -276,14 +306,27 @@ class CohortScheduler:
         # the corrupt-aware closure exists ONLY when the fault axis can
         # flag corruption: the no-fault jitted program stays untouched
         if spec_.faults is not None and spec_.faults.corrupt > 0.0:
-            def _cohort_corrupt(state, batch, mask, mu_s, qkeys, v_i,
-                                valid, corrupt):
-                cohort = CohortSlice(mask=mask, mu=mu_s, quant_keys=qkeys,
-                                     v_i=v_i, valid=valid, corrupt=corrupt)
-                return step(problem_, spec_, state, batch, 0.0, None,
-                            mesh=mesh, client_axis=client_axis,
-                            client_mode=client_mode, uplink=uplink,
-                            cohort=cohort)
+            if self._two_tier:
+                def _cohort_corrupt(state, batch, mask, mu_s, qkeys, v_i,
+                                    valid, edge_ids, corrupt):
+                    cohort = CohortSlice(mask=mask, mu=mu_s,
+                                         quant_keys=qkeys, v_i=v_i,
+                                         valid=valid, corrupt=corrupt,
+                                         edge_ids=edge_ids)
+                    return step(problem_, spec_, state, batch, 0.0, None,
+                                mesh=mesh, client_axis=client_axis,
+                                client_mode=client_mode, uplink=uplink,
+                                cohort=cohort)
+            else:
+                def _cohort_corrupt(state, batch, mask, mu_s, qkeys, v_i,
+                                    valid, corrupt):
+                    cohort = CohortSlice(mask=mask, mu=mu_s,
+                                         quant_keys=qkeys, v_i=v_i,
+                                         valid=valid, corrupt=corrupt)
+                    return step(problem_, spec_, state, batch, 0.0, None,
+                                mesh=mesh, client_axis=client_axis,
+                                client_mode=client_mode, uplink=uplink,
+                                cohort=cohort)
 
             self._cohort_corrupt_fn = _cohort_corrupt
             self._cohort_corrupt_j = jax.jit(_cohort_corrupt)
@@ -346,6 +389,11 @@ class CohortScheduler:
         v_i = pop.gather_variates(ids) if self.spec.use_variates else ()
         args = (state, batch, jnp.asarray(mask), jnp.asarray(mu_s),
                 jnp.asarray(qkeys[ids]), v_i, jnp.asarray(valid))
+        if self._two_tier:
+            # the cohort's slice of the STABLE global edge assignment —
+            # indexed by global id, so padded (duplicate) slots carry
+            # their real client's edge and the mask zeroes them anyway
+            args = args + (jnp.asarray(pop.edge_ids[ids]),)
         use_corrupt = self._cohort_corrupt_j is not None
         if use_corrupt:
             # faults.corrupt > 0 implies any_injection, so fctx and its
@@ -411,27 +459,51 @@ class CohortScheduler:
         return active, qkeys, fctx
 
     def _land(self, state, buffer: _PartialBuffer, gamma, t_idx, n_rounds,
-              eval_batch, eval_every):
+              eval_batch, eval_every, k_round=None):
         """Apply the buffered aggregate and assemble the round's metrics
-        row (matching ``api.run``'s keys and arithmetic)."""
+        row (matching ``api.run``'s keys and arithmetic). Under a
+        two-tier topology the buffered ``(n_edges,)``-stacked partial
+        crosses the tier boundary HERE, with the landing round's
+        ``k_round`` deriving the per-edge reencode keys — cohorts sum
+        edge-wise before the (nonlinear) boundary, the backbone is
+        billed once per landing."""
         n_total = self.spec.n_clients
         if buffer.agg is None:
             # every cohort's retry ladder ran out this update: land a
             # zero aggregate with n_active = 0 so the round index, gamma
             # schedule and metric rows stay aligned (apply_partial's
             # realized normalization guards n_active=0 with max(., 1))
-            buffer.agg = jax.tree.map(jnp.zeros_like, state.x)
+            if self._two_tier:
+                n_edges = self.spec.topology.n_edges
+                buffer.agg = jax.tree.map(
+                    lambda x: jnp.zeros((n_edges,) + jnp.shape(x),
+                                        jnp.float32), state.x)
+            else:
+                buffer.agg = jax.tree.map(jnp.zeros_like, state.x)
+        agg = buffer.agg
+        backbone = jnp.float32(0.0)
+        if self._two_tier:
+            if k_round is None:
+                raise ValueError("a two-tier landing needs the round key "
+                                 "(k_round) to derive the tier-boundary "
+                                 "reencode keys")
+            agg, backbone_bytes = self._finalize_j(agg, k_round, state.x)
+            backbone = jnp.asarray(backbone_bytes, jnp.float32)
         if self._sanitize:
             self._ensure_sanitized()
-            err, (state, m) = self._apply_cj(state, buffer.agg,
+            err, (state, m) = self._apply_cj(state, agg,
                                              buffer.n_active,
                                              jnp.float32(gamma))
             err.throw()
         else:
-            state, m = self._apply_j(state, buffer.agg, buffer.n_active,
+            state, m = self._apply_j(state, agg, buffer.n_active,
                                      jnp.float32(gamma))
         m = dict(m)
-        m["comm_bytes"] = buffer.comm_bytes
+        # flat: backbone == 0.0 exactly, so comm_bytes stays bitwise the
+        # pre-topology value and uplink_bytes aliases it
+        m["uplink_bytes"] = buffer.comm_bytes
+        m["backbone_bytes"] = backbone
+        m["comm_bytes"] = buffer.comm_bytes + backbone
         if buffer.collective_payload_bytes is not None:
             m["collective_payload_bytes"] = jnp.asarray(
                 buffer.collective_payload_bytes, jnp.float32)
@@ -644,6 +716,12 @@ class CohortScheduler:
         a stacked-pytree dict, one leading row per server update."""
         if mode not in ("sync", "async"):
             raise ValueError(f"mode={mode!r} (want 'sync' or 'async')")
+        if mode == "async" and self._two_tier:
+            raise ValueError(
+                "mode='async' does not support a two-tier topology: the "
+                "tier boundary re-encodes with the LANDING round's keys, "
+                "and the async window lands cohorts from different waves "
+                "into one update — use mode='sync'")
         if n_rounds is None:
             n_rounds = schedule_length(schedule)
             if n_rounds is None:
@@ -701,6 +779,12 @@ class CohortScheduler:
         covering the FULL run, restored rows included."""
         if mode not in ("sync", "async"):
             raise ValueError(f"mode={mode!r} (want 'sync' or 'async')")
+        if mode == "async" and self._two_tier:
+            raise ValueError(
+                "mode='async' does not support a two-tier topology: the "
+                "tier boundary re-encodes with the LANDING round's keys, "
+                "and the async window lands cohorts from different waves "
+                "into one update — use mode='sync'")
         paths = sorted(glob.glob(os.path.join(checkpoint_dir,
                                               "round_*.snap")))
         if not paths:
@@ -808,7 +892,7 @@ class CohortScheduler:
                 raise ServerKilled(t)
             pop.rounds_seen += 1
             state, m = self._land(state, buf, gammas[t], t, n_rounds,
-                                  eval_batch, eval_every)
+                                  eval_batch, eval_every, k_round=k_round)
             rows.append(m)
             if checkpoint_dir is not None and (
                     (t + 1) % checkpoint_every == 0 or t == n_rounds - 1):

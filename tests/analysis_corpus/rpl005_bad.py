@@ -10,3 +10,8 @@ def aggregate(x):
 def gather_all(x):
     # jit alone binds NO axis names — still a firing site
     return jax.lax.all_gather(x, "clients", axis=0, tiled=True)  # expect: RPL005
+
+
+def cross_both_tiers(x):
+    # a tuple axis is still a collective: no shard_map binds these names
+    return jax.lax.psum(x, ("edge", "clients"))  # expect: RPL005

@@ -145,6 +145,41 @@ def test_encode_without_decode_rejected():
     assert any("decode is None" in v.detail for v in report.violations)
 
 
+def test_reencode_hook_is_vetted_when_present():
+    report = check_compressor(C.block_quant(8, 256, checksum=True), TREE)
+    report.raise_if_failed()
+    assert "reencode" in report.checked
+    # no hook -> nothing to vet (and no spurious violation)
+    assert "reencode" not in check_compressor(C.identity(), TREE).checked
+
+
+def test_reencode_that_drops_digests_rejected():
+    """A tier boundary that forwards stale (or no) checksums defeats the
+    per-hop integrity story: each re-encode must re-stamp."""
+    base = C.block_quant(8, 256, checksum=True)
+
+    def lossy(key, tree):
+        pay = base.reencode(key, tree)
+        return jax.tree.map(
+            lambda p: dataclasses.replace(p, check=None),
+            pay, is_leaf=lambda p: isinstance(p, PackedLeaf))
+
+    report = check_compressor(dataclasses.replace(base, reencode=lossy),
+                              TREE)
+    assert "reencode" in _violated(report)
+    assert any("re-stamp" in v.detail for v in report.violations)
+
+
+def test_reencode_passthrough_rejected():
+    """reencode returning the raw f32 partial ships full-width floats
+    over the backbone while payload_bytes models quantized buffers —
+    the byte accounting (or the decode round-trip) must catch it."""
+    base = C.block_quant(8, 256)
+    report = check_compressor(
+        dataclasses.replace(base, reencode=lambda key, tree: tree), TREE)
+    assert "reencode" in _violated(report)
+
+
 def test_report_json_shape():
     report = check_compressor(C.block_quant(4, 256), TREE)
     data = report.to_json()

@@ -243,6 +243,95 @@ def test_async_knob_validation():
 
 
 # ---------------------------------------------------------------------------
+# two-tier topology through the scheduler (PR 9)
+# ---------------------------------------------------------------------------
+
+def _two_tier_spec(n, comp, n_edges, reencode=False):
+    return api.FederationSpec(
+        n_clients=n, participation=0.8, alpha=0.1, compressor=comp,
+        topology=api.Topology.two_tier(n_edges, reencode=reencode))
+
+
+@pytest.mark.parametrize("reencode", [False, True])
+def test_two_tier_single_cohort_bit_identical_to_run(reencode):
+    """One full cohort lands with the SAME round key api.run uses to
+    derive the tier-boundary edge keys — the whole metric dict,
+    including the new uplink/backbone split, is bitwise equal."""
+    n, dim = 8, 32
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 16, checksum=True)
+    spec = _two_tier_spec(n, comp, n_edges=3, reencode=reencode)
+    x0 = jnp.zeros(dim)
+    st_ref, m_ref = api.run(problem, x0, lambda t, k: (Xs, ys), 0.3,
+                            spec=spec, key=KEY, n_rounds=6)
+    sched = CohortScheduler(problem, spec, cohort_size=n)
+    st, pop, m = sched.run(x0, _slicing_data_fn(lambda t, k: (Xs, ys)),
+                           0.3, key=KEY, n_rounds=6)
+    _bit_equal(st_ref.x, st.x)
+    _bit_equal(st_ref.v, st.v)
+    for k in m_ref:
+        _bit_equal(m_ref[k], m[k], msg=k)
+
+
+@pytest.mark.parametrize("reencode", [False, True])
+def test_two_tier_ragged_cohorts_exact_per_tier_bytes(reencode):
+    """n=8 over cohorts of 3 (ragged): clients keep their STABLE edge
+    assignment across cohorting, so the trajectory matches the big-run
+    to reassociation rounding while uplink_bytes / backbone_bytes /
+    comm_bytes stay bitwise EXACT — the backbone re-encodes once per
+    landing, not once per cohort."""
+    n, dim = 8, 32
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 16, checksum=True)
+    spec = _two_tier_spec(n, comp, n_edges=3, reencode=reencode)
+    x0 = jnp.zeros(dim)
+    st_ref, m_ref = api.run(problem, x0, lambda t, k: (Xs, ys), 0.3,
+                            spec=spec, key=KEY, n_rounds=5)
+    sched = CohortScheduler(problem, spec, cohort_size=3)
+    st, pop, m = sched.run(x0, _slicing_data_fn(lambda t, k: (Xs, ys)),
+                           0.3, key=KEY, n_rounds=5)
+    np.testing.assert_allclose(np.asarray(st_ref.x), np.asarray(st.x),
+                               rtol=2e-5, atol=2e-6)
+    for k in ("n_active", "uplink_bytes", "backbone_bytes", "comm_bytes"):
+        _bit_equal(m_ref[k], m[k], msg=k)
+    # independent python accounting for both tiers
+    per_client = float(comp.wire_bytes(x0))
+    np.testing.assert_allclose(np.asarray(m["uplink_bytes"]),
+                               per_client * np.asarray(m["n_active"]))
+    per_edge = (float(comp.encoded_bytes(comp.encode(KEY, x0)))
+                if reencode else dim * 4)
+    np.testing.assert_allclose(np.asarray(m["backbone_bytes"]),
+                               3 * per_edge)
+    _bit_equal(m["comm_bytes"],
+               np.asarray(m["uplink_bytes"]) + np.asarray(m["backbone_bytes"]))
+
+
+def test_two_tier_scheduler_mode_restrictions():
+    """async lands cohorts from different waves into one update — the
+    tier boundary's landing-round keys would be ill-defined; reduce
+    groups clients by mesh position, which a streamed cohort breaks."""
+    n, dim = 6, 16
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 16)
+    spec = _two_tier_spec(n, comp, n_edges=2)
+    data_fn = _slicing_data_fn(lambda t, k: (Xs, ys))
+    with pytest.raises(ValueError, match="uplink='reduce'"):
+        CohortScheduler(problem, spec, cohort_size=3, uplink="reduce")
+    sched = CohortScheduler(problem, spec, cohort_size=3)
+    with pytest.raises(ValueError, match="mode='async'"):
+        sched.run(jnp.zeros(dim), data_fn, 0.3, key=KEY, n_rounds=3,
+                  mode="async")
+
+
+def test_population_carries_stable_edge_ids():
+    spec = _two_tier_spec(10, C.identity(), n_edges=3)
+    pop = ClientPopulation(spec, jnp.zeros(4))
+    assert pop.edge_ids.tolist() == [0, 0, 0, 0, 1, 1, 1, 2, 2, 2]
+    flat = api.FederationSpec(n_clients=10, variates="off")
+    assert ClientPopulation(flat, jnp.zeros(4)).edge_ids.tolist() == [0] * 10
+
+
+# ---------------------------------------------------------------------------
 # population arena
 # ---------------------------------------------------------------------------
 

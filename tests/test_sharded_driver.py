@@ -350,6 +350,60 @@ def test_kernel_dither_on_sharded_leaf_degrades_to_streamed_hash():
 
 
 # ---------------------------------------------------------------------------
+# two-tier topology on the mesh (PR 9): validation + the 2-D (edge, client)
+# layout; the full 4x2 trajectory equivalences run in the subprocess below
+# ---------------------------------------------------------------------------
+
+def test_two_tier_mesh_validation_errors():
+    from repro.api import Topology
+    from repro.launch.mesh import make_edge_mesh
+    (Xs, ys), sur = _quad_problem(n_clients=8)
+    problem = api.as_problem(sur)
+    spec = api.FederationSpec(n_clients=8, topology=Topology.two_tier(2))
+    state = api.init(problem, jnp.zeros(64), spec)
+    # a flat 1-D client mesh has no edge axis to reduce over
+    with pytest.raises(ValueError, match="make_edge_mesh"):
+        api.step(problem, spec, state, (Xs, ys), 0.3, KEY,
+                 mesh=_client_mesh())
+    # an edge mesh whose edge axis does not match the declared n_edges
+    emesh = make_edge_mesh(1, 1)
+    with pytest.raises(ValueError, match="one mesh row per edge"):
+        api.step(problem, spec, state, (Xs, ys), 0.3, KEY, mesh=emesh,
+                 client_axis="client")
+    # edge_axis colliding with client_axis is a spec bug, caught eagerly
+    clash = api.FederationSpec(
+        n_clients=8, topology=Topology.two_tier(2, edge_axis="client"))
+    state_c = api.init(problem, jnp.zeros(64), clash)
+    with pytest.raises(ValueError, match="collides with client_axis"):
+        api.step(problem, clash, state_c, (Xs, ys), 0.3, KEY, mesh=emesh,
+                 client_axis="client")
+
+
+def test_two_tier_one_edge_mesh_matches_off_mesh():
+    """The degenerate 1x1 edge mesh runs everywhere (single-device dev
+    box): the 2-D shard_map path must be bit-identical to the off-mesh
+    two-tier trajectory."""
+    from repro.api import Topology
+    from repro.launch.mesh import make_edge_mesh
+    n = 8
+    (Xs, ys), sur = _quad_problem(n_clients=n)
+    problem = api.as_problem(sur)
+    comp = C.block_quant(8, 64)
+    spec = api.FederationSpec(n_clients=n, participation=0.5, alpha=0.1,
+                              compressor=comp,
+                              topology=Topology.two_tier(1))
+    kwargs = dict(spec=spec, key=KEY, n_rounds=5)
+    st0, h0 = api.run(problem, jnp.zeros(64), lambda t, k: (Xs, ys), 0.3,
+                      **kwargs)
+    st1, h1 = api.run(problem, jnp.zeros(64), lambda t, k: (Xs, ys), 0.3,
+                      mesh=make_edge_mesh(1, 1), client_axis="client",
+                      **kwargs)
+    _bit_equal(st0.x, st1.x)
+    for k in h0:
+        _bit_equal(h0[k], h1[k], msg=k)
+
+
+# ---------------------------------------------------------------------------
 # scan-fallback short-circuit + warning dedupe (satellite)
 # ---------------------------------------------------------------------------
 
@@ -523,3 +577,97 @@ def test_golden_bit_identity_under_forced_8_devices():
                          timeout=600)
     assert out.returncode == 0, out.stdout + out.stderr
     assert "OK-8DEV" in out.stdout
+
+
+_SUBPROCESS_TWO_TIER = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro import api
+from repro.api import Topology
+from repro.core import compression as C
+from repro.core.quadratic import quadratic_for_objective
+from repro.launch.mesh import cohort_capacity, make_edge_mesh
+
+assert jax.device_count() == 8, jax.device_count()
+KEY = jax.random.PRNGKey(0)
+n, dim, E = 8, 64, 4
+ks = jax.random.split(KEY, n)
+Xs = jnp.stack([jax.random.normal(k, (16, dim)) for k in ks])
+w_i = jnp.stack([jnp.linspace(-1, 1, dim) + 2.0 * i for i in range(n)])
+ys = jnp.einsum("nbp,np->nb", Xs, w_i)
+def loss(batch, theta):
+    xb, yb = batch
+    return 0.5 * jnp.mean((xb @ theta - yb) ** 2)
+problem = api.as_problem(quadratic_for_objective(loss, rho=0.05))
+comp = C.block_quant(8, 32, checksum=True)
+x0 = jnp.zeros(dim)
+
+# 8 devices arranged as 4 edges x 2 clients
+mesh = make_edge_mesh(E, 2)
+assert tuple(mesh.axis_names) == ("edge", "client")
+assert cohort_capacity(mesh, ("edge", "client")) == 8
+
+def go(topo, participation=0.5, **kw):
+    spec = api.FederationSpec(n_clients=n, participation=participation,
+                              alpha=0.1, compressor=comp, topology=topo)
+    return api.run(problem, x0, lambda t, k: (Xs, ys), 0.3, spec=spec,
+                   key=KEY, n_rounds=5, **kw)
+
+for reenc in (False, True):
+    topo = Topology.two_tier(E, reencode=reenc)
+    st0, h0 = go(topo)                                     # off-mesh ref
+    # gather over the 2-D (edge, client) mesh: BIT-IDENTICAL — the tiled
+    # tuple-axis all_gather reconstructs the edge-major global order
+    st1, h1 = go(topo, mesh=mesh, client_axis="client")
+    np.testing.assert_array_equal(np.asarray(st0.x), np.asarray(st1.x),
+                                  err_msg=f"gather reenc={reenc}")
+    for k in h0:
+        np.testing.assert_array_equal(np.asarray(h0[k]), np.asarray(h1[k]),
+                                      err_msg=f"{k} reenc={reenc}")
+    # reduce: within-edge psum + tier boundary + ONE cross-edge psum —
+    # allclose (psum reassociates), accounting bitwise. With reencode the
+    # reassociated partial can flip a quantization bucket at the
+    # boundary, so the bound loosens to one quant step
+    st2, h2 = go(topo, mesh=mesh, client_axis="client", uplink="reduce")
+    tol = dict(rtol=0, atol=0.02) if reenc else dict(rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st0.x), np.asarray(st2.x), **tol)
+    for k in ("n_active", "uplink_bytes", "backbone_bytes", "comm_bytes"):
+        np.testing.assert_array_equal(np.asarray(h0[k]), np.asarray(h2[k]),
+                                      err_msg=f"{k} reduce reenc={reenc}")
+    # the reduce-path psum operand is the model-shaped f32 partial
+    assert float(h2["collective_payload_bytes"][0]) == dim * 4
+
+# exact per-tier byte split, measured off the actual buffers. Full
+# participation so the uplink carries all n payloads: with 0.5 a round
+# that draws <= E clients ships fewer uplink bytes than the E edge
+# buffers and the backbone-shrinks claim would be vacuous
+per_payload = comp.encoded_bytes(comp.encode(KEY, x0))
+_, h_raw = go(Topology.two_tier(E), mesh=mesh, client_axis="client",
+              participation=1.0)
+_, h_re = go(Topology.two_tier(E, reencode=True), mesh=mesh,
+             client_axis="client", participation=1.0)
+assert float(h_raw["backbone_bytes"][0]) == E * dim * 4
+assert float(h_re["backbone_bytes"][0]) == E * per_payload
+assert (np.asarray(h_re["backbone_bytes"])
+        < np.asarray(h_raw["backbone_bytes"])).all()
+assert (np.asarray(h_re["backbone_bytes"])
+        < np.asarray(h_re["uplink_bytes"])).all()
+print("OK-2TIER-8DEV")
+"""
+
+
+def test_two_tier_under_forced_8_devices():
+    """Acceptance: the 4-edges x 2-clients mesh — gather bit-identical to
+    off-mesh, reduce allclose with bitwise byte accounting, reencode
+    shrinking the backbone below the uplink — in a real 8-device (fake
+    CPU) process."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS_TWO_TIER],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK-2TIER-8DEV" in out.stdout

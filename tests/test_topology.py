@@ -1,0 +1,304 @@
+"""Topology as a first-class layer (PR 9): hierarchical two-tier
+(edge -> root) aggregation, validated at the ``FederationSpec``.
+
+Contracts pinned here:
+  * ``Topology`` validation is eager and specific — bad kinds, flat
+    topologies smuggling edge knobs, and reencode without a compressor
+    hook all fail at construction, not rounds later in a traced program;
+  * the client -> edge assignment is a STABLE pure function of the
+    global id (contiguous balanced blocks, ``numpy.array_split``
+    semantics) — ragged populations balance to within one client;
+  * ``launch.mesh.cohort_capacity`` accepts a TUPLE of axis names (the
+    two-tier ``("edge", "client")`` layout) and returns the product of
+    the named sizes, with the same eager ValueError on unknown axes;
+  * the FLAT topology is bit-identical to the pre-topology driver —
+    ``comm_bytes`` unchanged, ``uplink_bytes`` aliasing it,
+    ``backbone_bytes`` exactly 0.0;
+  * two-tier trajectories match flat to reassociation rounding on the
+    vmap AND scan client branches, while ``n_active``/``uplink_bytes``
+    stay bitwise equal and ``backbone_bytes`` is measured off the
+    actual tier-boundary buffers (f32 partials raw, re-encoded wire
+    payloads with ``reencode=True`` — strictly fewer bytes);
+  * ragged edges (n_total % n_edges != 0) and edges with ZERO active
+    clients keep the trajectory finite under both normalizations with
+    exact byte accounting.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import Topology
+from repro.core import compression as C
+from repro.core.quadratic import quadratic_for_objective
+from repro.launch.mesh import cohort_capacity, make_edge_mesh
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _bit_equal(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=msg)
+
+
+def _quad_problem(n_clients=8, dim=64):
+    ks = jax.random.split(KEY, n_clients)
+    Xs = jnp.stack([jax.random.normal(k, (16, dim)) for k in ks])
+    w_i = jnp.stack([jnp.linspace(-1, 1, dim) + 2.0 * i
+                     for i in range(n_clients)])
+    ys = jnp.einsum("nbp,np->nb", Xs, w_i)
+
+    def loss(batch, theta):
+        xb, yb = batch
+        return 0.5 * jnp.mean((xb @ theta - yb) ** 2)
+
+    return (Xs, ys), api.as_problem(quadratic_for_objective(loss, rho=0.05))
+
+
+# ---------------------------------------------------------------------------
+# Topology construction + validation
+# ---------------------------------------------------------------------------
+
+def test_topology_defaults_are_flat():
+    topo = Topology()
+    assert topo.kind == "flat" and topo.n_edges == 1
+    assert not topo.is_two_tier
+    assert Topology.flat() == topo
+
+
+def test_topology_validation_errors():
+    with pytest.raises(ValueError, match="kind"):
+        Topology(kind="ring")
+    with pytest.raises(ValueError, match="n_edges"):
+        Topology(kind="two_tier", n_edges=0)
+    with pytest.raises(ValueError, match="n_edges"):
+        Topology(kind="two_tier", n_edges=2.5)
+    with pytest.raises(ValueError, match="two_tier"):
+        Topology(kind="flat", n_edges=4)
+    with pytest.raises(ValueError, match="tier boundary"):
+        Topology(kind="flat", reencode=True)
+    with pytest.raises(ValueError, match="edge_axis"):
+        Topology(kind="two_tier", n_edges=2, edge_axis="")
+
+
+def test_edge_assignment_is_stable_and_balanced():
+    topo = Topology.two_tier(3)
+    # even split
+    assert topo.edge_sizes(9) == (3, 3, 3)
+    assert topo.edge_ids(9).tolist() == [0, 0, 0, 1, 1, 1, 2, 2, 2]
+    # ragged: the first n % E edges take one extra (array_split semantics)
+    assert topo.edge_sizes(8) == (3, 3, 2)
+    ids = topo.edge_ids(8)
+    assert ids.tolist() == [0, 0, 0, 1, 1, 1, 2, 2]
+    assert ids.dtype == np.int32
+    # literally numpy.array_split semantics
+    expect = np.concatenate(
+        [np.full(len(part), e) for e, part
+         in enumerate(np.array_split(np.arange(8), 3))])
+    np.testing.assert_array_equal(ids, expect)
+    # pure function of (n, E): re-derivation agrees with itself
+    np.testing.assert_array_equal(ids, Topology.two_tier(3).edge_ids(8))
+    with pytest.raises(ValueError, match="n_clients"):
+        topo.edge_sizes(0)
+
+
+def test_spec_validates_topology():
+    with pytest.raises(ValueError, match="Topology"):
+        api.FederationSpec(n_clients=4, topology="two_tier")
+    with pytest.raises(ValueError, match="every edge aggregator"):
+        api.FederationSpec(n_clients=3, topology=Topology.two_tier(4))
+    # reencode needs a compressor that can re-enter the wire format
+    with pytest.raises(ValueError, match="reencode hook"):
+        api.FederationSpec(n_clients=8,
+                           topology=Topology.two_tier(2, reencode=True))
+    # block_quant provides the hook
+    spec = api.FederationSpec(n_clients=8, compressor=C.block_quant(8, 32),
+                              topology=Topology.two_tier(2, reencode=True))
+    assert spec.topology.reencode
+
+
+# ---------------------------------------------------------------------------
+# satellite: cohort_capacity over a TUPLE of mesh axes
+# ---------------------------------------------------------------------------
+
+def test_cohort_capacity_tuple_axes():
+    mesh = make_edge_mesh(1, 1)
+    assert tuple(mesh.axis_names) == ("edge", "client")
+    # product of the named axis sizes, times per_device
+    assert cohort_capacity(mesh, ("edge", "client")) == \
+        mesh.shape["edge"] * mesh.shape["client"]
+    assert cohort_capacity(mesh, ("edge", "client"), per_device=4) == \
+        4 * mesh.shape["edge"] * mesh.shape["client"]
+    # the string form is unchanged
+    assert cohort_capacity(mesh, "client") == mesh.shape["client"]
+    # same eager error, same message, for an unknown axis in the tuple
+    with pytest.raises(ValueError, match=r"client_axis='nope' not an axis"):
+        cohort_capacity(mesh, ("edge", "nope"))
+    with pytest.raises(ValueError, match="at least one"):
+        cohort_capacity(mesh, ())
+
+
+def test_make_edge_mesh_validation():
+    with pytest.raises(ValueError, match="n_edges"):
+        make_edge_mesh(0)
+    with pytest.raises(ValueError, match="must differ"):
+        make_edge_mesh(1, 1, edge_axis="x", client_axis="x")
+    n_dev = jax.device_count()
+    with pytest.raises(ValueError, match="devices"):
+        make_edge_mesh(n_dev + 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# flat stays bit-identical; two-tier matches to rounding with exact bytes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("client_mode", ["vmap", "scan"])
+def test_two_tier_allclose_to_flat_with_exact_bytes(client_mode):
+    """Two-tier (no reencode) only re-associates the weighted reduce into
+    per-edge partials: allclose trajectory, bitwise-equal participation
+    and uplink accounting, backbone billed as the raw f32 edge partials."""
+    n, dim, n_edges = 8, 64, 3
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 32, checksum=True)
+    x0 = jnp.zeros(dim)
+    kw = dict(key=KEY, n_rounds=6, client_mode=client_mode)
+    flat = api.FederationSpec(n_clients=n, participation=0.6, alpha=0.1,
+                              compressor=comp)
+    two = api.FederationSpec(n_clients=n, participation=0.6, alpha=0.1,
+                             compressor=comp,
+                             topology=Topology.two_tier(n_edges))
+    st_f, h_f = api.run(problem, x0, lambda t, k: (Xs, ys), 0.3, spec=flat,
+                        **kw)
+    st_t, h_t = api.run(problem, x0, lambda t, k: (Xs, ys), 0.3, spec=two,
+                        **kw)
+    np.testing.assert_allclose(np.asarray(st_f.x), np.asarray(st_t.x),
+                               rtol=1e-5, atol=1e-6)
+    # the A5 draw and the client -> edge uplink are the SAME wire
+    _bit_equal(h_f["n_active"], h_t["n_active"])
+    _bit_equal(h_f["uplink_bytes"], h_t["uplink_bytes"])
+    # flat: no second tier, comm_bytes is EXACTLY the uplink (bitwise —
+    # the new keys alias the pre-topology accounting)
+    _bit_equal(h_f["backbone_bytes"], np.zeros(6, np.float32))
+    _bit_equal(h_f["comm_bytes"], h_f["uplink_bytes"])
+    # two-tier: each edge ships its raw f32 partial across the backbone
+    _bit_equal(h_t["backbone_bytes"],
+               np.full(6, n_edges * dim * 4, np.float32))
+    _bit_equal(h_t["comm_bytes"],
+               np.asarray(h_t["uplink_bytes"]) +
+               np.asarray(h_t["backbone_bytes"]))
+
+
+@pytest.mark.parametrize("client_mode", ["vmap", "scan"])
+def test_two_tier_reencode_compresses_the_backbone(client_mode):
+    """reencode=True re-enters the wire format per edge: the backbone
+    bills the ACTUAL re-encoded payload bytes — strictly fewer than the
+    raw f32 partial AND fewer than the uplink — and the trajectory stays
+    allclose (one extra quantization at the boundary)."""
+    n, dim, n_edges = 8, 64, 3
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 32, checksum=True)
+    x0 = jnp.zeros(dim)
+    kw = dict(key=KEY, n_rounds=6, client_mode=client_mode)
+    raw = api.FederationSpec(n_clients=n, participation=1.0, alpha=0.1,
+                             compressor=comp,
+                             topology=Topology.two_tier(n_edges))
+    re = api.FederationSpec(n_clients=n, participation=1.0, alpha=0.1,
+                            compressor=comp,
+                            topology=Topology.two_tier(n_edges,
+                                                       reencode=True))
+    st_r, h_r = api.run(problem, x0, lambda t, k: (Xs, ys), 0.3, spec=raw,
+                        **kw)
+    st_e, h_e = api.run(problem, x0, lambda t, k: (Xs, ys), 0.3, spec=re,
+                        **kw)
+    # the boundary is LOSSY (one extra 8-bit quantization per round), so
+    # the comparison is an absolute noise bound, not bit-identity
+    np.testing.assert_allclose(np.asarray(st_r.x), np.asarray(st_e.x),
+                               rtol=0, atol=0.02)
+    per_payload = comp.encoded_bytes(comp.encode(KEY, x0))
+    _bit_equal(h_e["backbone_bytes"],
+               np.full(6, n_edges * per_payload, np.float32))
+    # the acceptance inequality: re-encoding makes the backbone cheaper
+    # than the raw partials and cheaper than the client uplink
+    assert (np.asarray(h_e["backbone_bytes"])
+            < np.asarray(h_r["backbone_bytes"])).all()
+    assert (np.asarray(h_e["backbone_bytes"])
+            < np.asarray(h_e["uplink_bytes"])).all()
+
+
+# ---------------------------------------------------------------------------
+# satellite: ragged edges + zero-active edges stay finite and exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("normalization", ["expected", "realized"])
+@pytest.mark.parametrize("reencode", [False, True])
+def test_ragged_edges_and_zero_active_edge(normalization, reencode):
+    """n_total % n_edges != 0 (sizes (2, 2, 1)) and a round where edge 2's
+    only client sat out: finite trajectory, exact n_active / uplink /
+    backbone accounting under both normalizations."""
+    n, dim, n_edges = 5, 64, 3
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 32, checksum=True)
+    topo = Topology.two_tier(n_edges, reencode=reencode)
+    assert topo.edge_sizes(n) == (2, 2, 1)
+    spec = api.FederationSpec(n_clients=n, alpha=0.1, compressor=comp,
+                              normalization=normalization, topology=topo)
+    x0 = jnp.zeros(dim)
+    state = api.init(problem, x0, spec)
+    # clients 0..3 active (edges 0 and 1); edge 2's lone client 4 is out
+    active = jnp.asarray([1, 1, 1, 1, 0], bool)
+    new, m = api.step(problem, spec, state, (Xs, ys), 0.3, KEY,
+                      active=active)
+    per_client = float(comp.wire_bytes(x0))
+    per_edge = (comp.encoded_bytes(comp.encode(KEY, x0)) if reencode
+                else dim * 4)
+    assert float(m["n_active"]) == 4.0
+    assert float(m["uplink_bytes"]) == 4 * per_client
+    # the backbone crosses once per edge regardless of who showed up —
+    # an idle edge ships a zero partial (reencode of zeros is exact)
+    assert float(m["backbone_bytes"]) == n_edges * per_edge
+    assert float(m["comm_bytes"]) == 4 * per_client + n_edges * per_edge
+    for leaf in jax.tree.leaves((new.x, new.v, new.v_i)):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # the fully-empty round stays finite too, with zero uplink
+    empty = jnp.zeros((n,), bool)
+    new0, m0 = api.step(problem, spec, state, (Xs, ys), 0.3, KEY,
+                        active=empty)
+    assert float(m0["n_active"]) == 0.0
+    assert float(m0["uplink_bytes"]) == 0.0
+    assert float(m0["backbone_bytes"]) == n_edges * per_edge
+    for leaf in jax.tree.leaves((new0.x, new0.v, new0.v_i)):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_two_tier_ragged_run_allclose_to_flat():
+    """A full ragged-population trajectory (n=5 over 3 edges) matches the
+    flat run to rounding — the segment-sum grouping loses nothing."""
+    n, dim = 5, 64
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    comp = C.block_quant(8, 32)
+    x0 = jnp.zeros(dim)
+    kw = dict(key=KEY, n_rounds=6)
+    st_f, h_f = api.run(problem, x0, lambda t, k: (Xs, ys), 0.3,
+                        spec=api.FederationSpec(n_clients=n,
+                                                participation=0.6,
+                                                compressor=comp), **kw)
+    st_t, h_t = api.run(problem, x0, lambda t, k: (Xs, ys), 0.3,
+                        spec=api.FederationSpec(
+                            n_clients=n, participation=0.6, compressor=comp,
+                            topology=Topology.two_tier(3)), **kw)
+    np.testing.assert_allclose(np.asarray(st_f.x), np.asarray(st_t.x),
+                               rtol=1e-5, atol=1e-6)
+    _bit_equal(h_f["n_active"], h_t["n_active"])
+    _bit_equal(h_f["uplink_bytes"], h_t["uplink_bytes"])
+
+
+def test_two_tier_cohort_requires_edge_ids():
+    n, dim = 4, 32
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    spec = api.FederationSpec(n_clients=n, variates="off",
+                              topology=Topology.two_tier(2))
+    state = api.init(problem, jnp.zeros(dim), spec)
+    cohort = api.CohortSlice(mask=jnp.ones(n), mu=jnp.full(n, 0.25),
+                             quant_keys=jax.random.split(KEY, n))
+    with pytest.raises(ValueError, match="edge_ids"):
+        api.step(problem, spec, state, (Xs, ys), 0.0, None, cohort=cohort)
