@@ -30,11 +30,13 @@ def client_data(i, k, n=400):
     w = jnp.full((L,), 0.2 / (L - 1)).at[i].set(0.8)
     return gmm_data(k, n, means_true, covs, w)
 
-clients = jnp.stack([client_data(i, k)
-                     for i, k in enumerate(jax.random.split(key, n_clients))])
+key, k_clients, k_init = jax.random.split(key, 3)
+clients = jnp.stack([
+    client_data(i, k)
+    for i, k in enumerate(jax.random.split(k_clients, n_clients))])
 z_all = clients.reshape(-1, p)
 
-means0 = means_true + 2.0 * jax.random.normal(key, (L, p))
+means0 = means_true + 2.0 * jax.random.normal(k_init, (L, p))
 s0 = sur.s_bar(z_all[:200], means0)
 
 fed = api.FederationSpec(n_clients=n_clients, participation=0.75, alpha=0.1)

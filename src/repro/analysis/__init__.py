@@ -8,28 +8,37 @@ documented f32 reduction-order tolerance on the reduce uplink), and PRs
 1-5 each fixed a silent hand-rolled violation of them. This package
 machine-checks the bug classes the repo has actually shipped:
 
-* **Layer 1 — AST linter** (``linter.py`` + ``rules.py``): rules
-  RPL001-RPL006 over the source tree, each codifying a shipped bug class
-  (process-wide ``jax.device_count()`` dispatch guards, host randomness
-  inside traced code, tracer-typed Python control flow, pre-collective
-  downcasts inside ``shard_map`` bodies, unbound collective axis names,
-  Pallas BlockSpec lane misalignment / non-innermost accumulating output
-  blocks). Suppress a deliberate site with
+* **Layer 1 — AST linter** (``linter.py`` + ``rules.py`` +
+  ``keyflow.py``): rules RPL001-RPL009 over the source tree, each
+  codifying a shipped bug class (process-wide ``jax.device_count()``
+  dispatch guards, host randomness inside traced code, tracer-typed
+  Python control flow, pre-collective downcasts inside ``shard_map``
+  bodies, unbound collective axis names, Pallas BlockSpec lane
+  misalignment / non-innermost accumulating output blocks, and — the
+  key-lineage rules — PRNG key reuse, aux chains contaminating the
+  round chain, and ``fold_in`` salt collisions, resolved across modules
+  via ``lint_paths``'s project index). Suppress a deliberate site with
   ``# repro: allow[RPL00x] <reason>`` on the finding's line (or the line
   above) — the reason is REQUIRED, and ``--strict`` budgets the total.
 * **Layer 2 — abstract-eval contract checker** (``contracts.py``):
   ``check_compressor`` validates any ``core.compression.Compressor``
   purely via ``jax.eval_shape`` — decode . encode shape/dtype roundtrip,
-  ``payload_bytes`` == actual wire-buffer bytes, ``decode_reduce`` output
-  contract, packed-leaf group alignment — no device execution, so CI vets
-  every future compressor before a single FLOP.
-* **Layer 3 — runtime sanitizer** (``runtime.py``):
-  ``api.run/step(..., sanitize=True)`` threads
+  ``payload_bytes`` == actual wire-buffer bytes (checksum digests
+  billed), ``decode_reduce`` output contract, packed-leaf group
+  alignment — no device execution, so CI vets every future compressor
+  before a single FLOP.
+* **Layer 3 — runtime sanitizers** (``runtime.py`` + ``keytrace.py`` +
+  ``hb.py``): ``api.run/step(..., sanitize=True)`` threads
   ``jax.experimental.checkify`` (nan / div-by-zero / OOB-index checks)
-  through the scan + shard_map driver and audits the comm-bytes metric
-  against the actual encoded buffers. Off by default; zero-cost when off.
+  through the scan + shard_map driver and audits the comm-bytes metric;
+  ``audit_keys=True`` records the host key chain into a
+  ``KeyTraceReport`` and raises ``KeyReuseError`` at the origin on
+  duplicate consumption; ``hb`` is the vector-clock happens-before
+  harness policing the scheduler's cross-thread arena/snapshot edges.
+  All off by default; zero-cost when off.
 
-CLI: ``python -m repro.analysis src/repro --strict`` (see ``__main__``).
+CLI: ``python -m repro.analysis src/repro --strict`` (see ``__main__``;
+``--baseline``/``--write-baseline`` give the ratchet workflow).
 """
 from .findings import Finding, Pragma, Severity
 from .linter import LintReport, lint_file, lint_paths, lint_source
@@ -40,17 +49,28 @@ __all__ = [
     "LintReport", "lint_file", "lint_paths", "lint_source",
     "RULES", "rule_table",
     "CompressorReport", "ContractViolation", "check_compressor",
+    "KeyAudit", "KeyReuseError", "KeyTraceReport",
+    "HBTracker", "HBViolation",
 ]
 
 _CONTRACT_EXPORTS = ("CompressorReport", "ContractViolation",
                      "check_compressor")
+_KEYTRACE_EXPORTS = ("KeyAudit", "KeyReuseError", "KeyTraceReport")
+_HB_EXPORTS = ("HBTracker", "HBViolation")
 
 
 def __getattr__(name):
     # Layer 2 needs jax; Layer 1 (the linter + CLI) is stdlib-only so the
     # tier-0 CI lint job can run without installing the stack. Resolve the
-    # contracts exports lazily instead of importing them here.
+    # heavier layers lazily instead of importing them here (keytrace and
+    # hb are import-safe but ride the same pattern for symmetry).
     if name in _CONTRACT_EXPORTS:
         from . import contracts
         return getattr(contracts, name)
+    if name in _KEYTRACE_EXPORTS:
+        from . import keytrace
+        return getattr(keytrace, name)
+    if name in _HB_EXPORTS:
+        from . import hb
+        return getattr(hb, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -33,6 +33,18 @@ it ever runs:
    that ``decode`` restores to the f32 partial's structs, and whose
    actual buffer bytes match the analytic ``payload_bytes`` model
    (``backbone_bytes`` is billed off these buffers).
+7. **checksum billing + integrity** (``checksum=True`` only) — every
+   encoded ``PackedLeaf`` must CARRY a digest of exactly
+   ``CHECKSUM_BYTES``; a compressor that neither stamps nor bills the
+   digest satisfies contract 3 trivially (both sides miss the same
+   bytes), so digest presence is what makes the byte equality mean
+   anything. On top of the abstract checks, one CONCRETE probe (the
+   single non-eval_shape step, gated on ``checksum``) runs
+   ``encode`` — and ``reencode``, when present — on a tiny real tree
+   and requires ``verify_payload`` to pass: digests must match the
+   buffers they claim to cover, which catches a reencode that copies
+   the stale upstream digest over fresh codes (shape-land cannot —
+   a stale uint32 has the right struct).
 
 Violations are collected (not raised) so a report can show everything
 wrong with a compressor at once; ``CompressorReport.raise_if_failed``
@@ -46,7 +58,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-from ..core.compression import PackedLeaf, _tree_bytes
+from ..core.compression import (CHECKSUM_BYTES, PackedLeaf, _tree_bytes,
+                                verify_payload)
 
 PACK_BITS = 4
 
@@ -173,8 +186,11 @@ def check_compressor(comp, tree, *, n_clients: int = 4,
                      key=None, bytes_tol: float = 0.0) -> CompressorReport:
     """Validate ``comp`` against the wire contracts on ``tree``'s shapes.
 
-    Pure shape-land: every compressor hook runs under ``jax.eval_shape``
-    only. ``tree`` may hold arrays or ``ShapeDtypeStruct``s.
+    Shape-land except one probe: every hook runs under
+    ``jax.eval_shape``, plus — for checksummed compressors only — one
+    concrete encode/reencode on a tiny real tree so the digests can be
+    VERIFIED, not just shape-checked (contract 7). ``tree`` may hold
+    arrays or ``ShapeDtypeStruct``s.
     ``bytes_tol`` loosens contract 3 (in bytes) for compressors whose
     analytic model is intentionally approximate — the block quantizer
     family is EXACT and must pass at 0.0.
@@ -244,6 +260,30 @@ def check_compressor(comp, tree, *, n_clients: int = 4,
             "payload-bytes", "",
             f"wire_bytes says {wire:.1f} B vs actual buffers "
             f"{actual:.1f} B"))
+
+    # 7a. checksum billing: a checksummed wire must CARRY its digests —
+    # without this, a compressor that neither stamps nor bills them
+    # passes the byte equality above with both sides short the same
+    # CHECKSUM_BYTES per leaf
+    if comp.checksum:
+        report.checked.append("checksum-billing")
+        for path, leaf in _leaf_paths(payload):
+            if not isinstance(leaf, PackedLeaf):
+                continue
+            if leaf.check is None:
+                report.violations.append(ContractViolation(
+                    "checksum-billing", path,
+                    f"checksum=True but encode stamps no digest — the "
+                    f"wire is unverifiable and the {CHECKSUM_BYTES} "
+                    f"digest bytes are billed by neither payload_bytes "
+                    f"nor the measured buffers"))
+            else:
+                got = jnp.dtype(leaf.check.dtype).itemsize
+                if got != CHECKSUM_BYTES:
+                    report.violations.append(ContractViolation(
+                        "checksum-billing", path,
+                        f"digest is {got} B/leaf; the wire contract "
+                        f"bills CHECKSUM_BYTES == {CHECKSUM_BYTES}"))
 
     # 5. decode_reduce on a stacked payload
     if comp.decode_reduce is not None:
@@ -326,6 +366,41 @@ def check_compressor(comp, tree, *, n_clients: int = 4,
                 f"re-encoded buffers hold {actual2:.1f} B (tol "
                 f"{bytes_tol}) — backbone_bytes would lie by "
                 f"{model2 - actual2:+.1f} B per edge"))
+
+    # 7b. checksum integrity — the ONE concrete probe: digests must
+    # verify against the buffers they ride with. eval_shape cannot see
+    # a stale digest (a copied uint32 has the right struct), so encode
+    # and reencode each run ONCE on a tiny real tree.
+    if comp.checksum and comp.encode is not None:
+        report.checked.append("checksum-integrity")
+        concrete = jax.tree.map(
+            lambda s: jnp.linspace(
+                -1.0, 1.0, int(math.prod(s.shape)) if s.shape else 1
+            ).reshape(s.shape).astype(s.dtype), structs)
+        try:
+            pay = comp.encode(key, concrete)
+            if not bool(jax.device_get(verify_payload(pay)).all()):
+                report.violations.append(ContractViolation(
+                    "checksum-integrity", "",
+                    "encode stamps digests that do not verify against "
+                    "its own buffers — every intact uplink would be "
+                    "dropped as corrupt"))
+            if comp.reencode is not None:
+                partial_c = jax.tree.map(
+                    lambda a: jnp.asarray(a, jnp.float32), concrete)
+                pay2 = comp.reencode(jax.random.fold_in(key, 1), partial_c)
+                if not bool(jax.device_get(verify_payload(pay2)).all()):
+                    report.violations.append(ContractViolation(
+                        "checksum-integrity", "",
+                        "reencode's digests do not verify against the "
+                        "re-encoded buffers — a stale digest carried "
+                        "across the tier boundary makes the backbone "
+                        "hop unverifiable"))
+        except Exception as e:
+            report.violations.append(ContractViolation(
+                "checksum-integrity", "",
+                f"concrete checksum probe failed to execute: "
+                f"{type(e).__name__}: {e}"))
     return report
 
 

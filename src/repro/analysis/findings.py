@@ -48,6 +48,13 @@ class Finding:
         return (f"{self.path}:{self.line}:{self.col + 1}: "
                 f"{self.rule} [{self.severity}] {self.message}{tag}")
 
+    @property
+    def baseline_key(self) -> str:
+        """The (rule, file) bucket the --baseline ratchet counts findings
+        in — deliberately line- and message-agnostic so unrelated edits
+        that shift line numbers don't invalidate a committed baseline."""
+        return f"{self.rule} {self.path}"
+
     def to_json(self) -> dict:
         return {
             "rule": self.rule, "path": self.path, "line": self.line,

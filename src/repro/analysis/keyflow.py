@@ -1,0 +1,411 @@
+"""Intraprocedural PRNG-key def-use analysis behind RPL007-RPL009.
+
+The repo's determinism contract is a key-derivation discipline: every
+consuming ``jax.random.*`` call gets its OWN key, derived by ``split``
+(which retires the parent) or ``fold_in`` (which opens a parallel salt
+lane without retiring anything). ``KeyFlow`` walks one module and tracks
+which names hold live keys, generation-numbered so the canonical rebind
+idiom (``key, k_round = jax.random.split(key)``) starts a fresh
+generation instead of tripping the checker.
+
+Like everything in ``modindex``, this is a lexical heuristic, not an
+abstract interpreter: branches fork the state and re-merge (a key
+consumed on either arm counts as consumed after the join; an arm that
+returns/raises drops out of the merge), loop and comprehension bodies run
+twice so per-iteration reuse of an enclosing key fires, and only bare
+names are tracked — ``keys[i]`` is assumed fresh per index. Rules built
+on it aim at the shipped bug classes (PRs 7-9 each hand-fixed one),
+not at soundness.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Optional
+
+from .modindex import ModuleIndex, dotted_name
+
+# jax.random callables that CONSUME their first (key) argument: the key
+# must never be passed to a second one. ``split`` consumes — using a key
+# after splitting it replays the split's entropy.
+CONSUMERS = frozenset({
+    "split", "bernoulli", "uniform", "normal", "randint", "permutation",
+    "shuffle", "choice", "categorical", "gumbel", "laplace", "logistic",
+    "exponential", "truncated_normal", "cauchy", "beta", "gamma",
+    "dirichlet", "poisson", "rademacher", "bits", "t",
+    "multivariate_normal", "loggamma", "maxwell", "pareto", "rayleigh",
+    "weibull_min", "binomial", "chisquare", "f", "generalized_normal",
+    "geometric", "triangular", "wald", "orthogonal", "ball",
+    "double_sided_maxwell",
+})
+
+# jax.random calls whose RESULT is a key (assignment RHS taints targets)
+PRODUCERS = frozenset({"PRNGKey", "key", "split", "fold_in", "clone",
+                       "wrap_key_data"})
+
+# parameter names assumed to hold keys on entry
+_KEY_PARAM_RE = re.compile(
+    r"(^|_)(key|keys|rng|rngs|prng)($|_)|^k_|_key$|_keys$")
+
+
+class RandomNamespace:
+    """Which calls in a module are ``jax.random.<fn>``? Resolves the
+    module alias (``import jax.random as jr``) and from-import
+    (``from jax.random import split``) spellings; ``np.random`` /
+    ``numpy.random`` are excluded."""
+
+    def __init__(self, tree: ast.Module):
+        self.aliases = {"random"}
+        self.funcs: dict = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "jax.random" and a.asname:
+                        self.aliases.add(a.asname)
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod == "jax":
+                    for a in node.names:
+                        if a.name == "random":
+                            self.aliases.add(a.asname or "random")
+                elif mod == "jax.random":
+                    for a in node.names:
+                        self.funcs[a.asname or a.name] = a.name
+
+    def fn_of(self, call: ast.Call) -> Optional[str]:
+        """The jax.random function name a call resolves to, else None."""
+        name = dotted_name(call.func)
+        if name is None:
+            return None
+        parts = name.split(".")
+        if len(parts) == 1:
+            return self.funcs.get(parts[0])
+        if parts[-2] in self.aliases:
+            if len(parts) >= 3 and parts[-3] in ("np", "numpy", "scipy",
+                                                 "torch"):
+                return None
+            return parts[-1]
+        return None
+
+
+class Reuse:
+    """One key-reuse site: ``node`` consumes a key generation that
+    ``first_node`` already consumed."""
+
+    __slots__ = ("node", "name", "fn", "first_node", "first_fn",
+                 "first_name")
+
+    def __init__(self, node, name, fn, first_node, first_fn, first_name):
+        self.node = node
+        self.name = name
+        self.fn = fn
+        self.first_node = first_node
+        self.first_fn = first_fn
+        self.first_name = first_name
+
+
+class _State:
+    """Per-path dataflow state: live key generations by name, and which
+    generations have been consumed (by which call, for the message)."""
+
+    __slots__ = ("gen", "consumed")
+
+    def __init__(self, gen=None, consumed=None):
+        self.gen = dict(gen or {})            # name -> generation id
+        self.consumed = dict(consumed or {})  # gen -> (node, fn, name)
+
+    def copy(self) -> "_State":
+        return _State(self.gen, self.consumed)
+
+
+class KeyFlow:
+    """Run the def-use pass over every scope of a module; collect
+    ``Reuse`` records in ``self.reuse``."""
+
+    def __init__(self, index: ModuleIndex):
+        self.index = index
+        self.ns = RandomNamespace(index.tree)
+        self.reuse: list = []
+        self._gen = 0
+        self._reported: set = set()
+
+    def run(self) -> "KeyFlow":
+        st = _State()
+        self._walk_stmts(self.index.tree.body, st)
+        for fn in self.index.functions:
+            self._run_function(fn)
+        return self
+
+    # -- scopes --------------------------------------------------------
+
+    def _fresh(self) -> int:
+        self._gen += 1
+        return self._gen
+
+    def _run_function(self, fn):
+        st = _State()
+        args = getattr(fn, "args", None)
+        if args is not None:
+            params = args.posonlyargs + args.args + args.kwonlyargs
+            for a in params:
+                if _KEY_PARAM_RE.search(a.arg):
+                    st.gen[a.arg] = self._fresh()
+        body = fn.body
+        if isinstance(body, list):
+            self._walk_stmts(body, st)
+        else:                      # Lambda
+            self._expr(body, st)
+
+    # -- statements ----------------------------------------------------
+
+    def _walk_stmts(self, stmts, st) -> bool:
+        """True when control definitely leaves (return/raise/break)."""
+        for s in stmts:
+            if self._stmt(s, st):
+                return True
+        return False
+
+    def _stmt(self, s, st) -> bool:
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef)):
+            return False          # separate scopes, analyzed on their own
+        if isinstance(s, ast.Return):
+            self._expr(s.value, st)
+            return True
+        if isinstance(s, ast.Raise):
+            self._expr(s.exc, st)
+            self._expr(s.cause, st)
+            return True
+        if isinstance(s, (ast.Break, ast.Continue)):
+            return True
+        if isinstance(s, ast.Assign):
+            self._expr(s.value, st)
+            for t in s.targets:
+                self._bind(t, s.value, st)
+            return False
+        if isinstance(s, ast.AnnAssign):
+            if s.value is not None:
+                self._expr(s.value, st)
+                self._bind(s.target, s.value, st)
+            return False
+        if isinstance(s, ast.AugAssign):
+            self._expr(s.value, st)
+            if isinstance(s.target, ast.Name):
+                st.gen.pop(s.target.id, None)
+            return False
+        if isinstance(s, ast.If):
+            self._expr(s.test, st)
+            st_t, st_f = st.copy(), st.copy()
+            t_term = self._walk_stmts(s.body, st_t)
+            f_term = self._walk_stmts(s.orelse, st_f)
+            if t_term and f_term:
+                return True
+            if t_term:
+                st.gen, st.consumed = st_f.gen, st_f.consumed
+            elif f_term:
+                st.gen, st.consumed = st_t.gen, st_t.consumed
+            else:
+                self._merge(st, st_t, st_f)
+            return False
+        if isinstance(s, (ast.For, ast.AsyncFor)):
+            self._expr(s.iter, st)
+            keyish_iter = self._keyish_table(s.iter, st)
+            for _ in range(2):
+                self._bind_loop_target(s.target, keyish_iter, st)
+                self._walk_stmts(s.body, st)
+            self._walk_stmts(s.orelse, st)
+            return False
+        if isinstance(s, ast.While):
+            for _ in range(2):
+                self._expr(s.test, st)
+                self._walk_stmts(s.body, st)
+            self._walk_stmts(s.orelse, st)
+            return False
+        if isinstance(s, ast.Try) or (hasattr(ast, "TryStar")
+                                      and isinstance(s, ast.TryStar)):
+            self._walk_stmts(s.body, st)
+            for h in s.handlers:
+                hs = st.copy()
+                self._walk_stmts(h.body, hs)
+                for g, v in hs.consumed.items():
+                    st.consumed.setdefault(g, v)
+            self._walk_stmts(s.orelse, st)
+            self._walk_stmts(s.finalbody, st)
+            return False
+        if isinstance(s, (ast.With, ast.AsyncWith)):
+            for item in s.items:
+                self._expr(item.context_expr, st)
+                if item.optional_vars is not None:
+                    self._bind(item.optional_vars, None, st)
+            return self._walk_stmts(s.body, st)
+        if isinstance(s, ast.Expr):
+            self._expr(s.value, st)
+            return False
+        if isinstance(s, ast.Delete):
+            for t in s.targets:
+                if isinstance(t, ast.Name):
+                    st.gen.pop(t.id, None)
+            return False
+        if isinstance(s, ast.Assert):
+            self._expr(s.test, st)
+            self._expr(s.msg, st)
+            return False
+        if isinstance(s, (ast.Global, ast.Nonlocal, ast.Pass, ast.Import,
+                          ast.ImportFrom)):
+            return False
+        for child in ast.iter_child_nodes(s):   # Match etc.: best effort
+            if isinstance(child, ast.expr):
+                self._expr(child, st)
+            elif isinstance(child, ast.stmt):
+                self._stmt(child, st)
+        return False
+
+    def _merge(self, st, a, b):
+        # consumed on either arm counts as consumed after the join
+        st.consumed = dict(a.consumed)
+        for g, v in b.consumed.items():
+            st.consumed.setdefault(g, v)
+        gen = {}
+        for name in set(a.gen) | set(b.gen):
+            ga, gb = a.gen.get(name), b.gen.get(name)
+            if ga == gb:
+                gen[name] = ga
+            elif ga is not None and gb is not None:
+                gen[name] = self._fresh()   # diverged rebinds: fresh key
+            else:
+                gen[name] = ga if ga is not None else gb
+        st.gen = gen
+
+    # -- bindings ------------------------------------------------------
+
+    def _is_key_value(self, value, st) -> bool:
+        """Is the RHS expression key-typed (so its targets become keys)?"""
+        if isinstance(value, ast.Call):
+            return self.ns.fn_of(value) in PRODUCERS
+        if isinstance(value, ast.Subscript):
+            return self._keyish_table(value.value, st)
+        return False
+
+    def _keyish_table(self, expr, st) -> bool:
+        """Does ``expr`` look like a table of keys (so iterating or
+        indexing it yields fresh keys)?"""
+        return (isinstance(expr, ast.Name)
+                and (expr.id in st.gen
+                     or _KEY_PARAM_RE.search(expr.id) is not None))
+
+    def _bind(self, target, value, st):
+        if isinstance(target, ast.Name):
+            if value is not None and isinstance(value, ast.Name) \
+                    and value.id in st.gen:
+                st.gen[target.id] = st.gen[value.id]    # alias: same gen
+            elif value is not None and self._is_key_value(value, st):
+                st.gen[target.id] = self._fresh()
+            else:
+                st.gen.pop(target.id, None)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            vals = None
+            if isinstance(value, (ast.Tuple, ast.List)) \
+                    and len(value.elts) == len(target.elts):
+                vals = value.elts
+            for i, elt in enumerate(target.elts):
+                if isinstance(elt, ast.Starred):
+                    elt = elt.value
+                self._bind(elt, vals[i] if vals is not None else value, st)
+        # attribute / subscript targets: not tracked
+
+    def _bind_loop_target(self, target, keyish_iter, st):
+        """Loop variables are fresh per iteration; when the iterable is a
+        key table, each element is a fresh key generation."""
+        if isinstance(target, ast.Name):
+            if keyish_iter:
+                st.gen[target.id] = self._fresh()
+            else:
+                st.gen.pop(target.id, None)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                if isinstance(elt, ast.Starred):
+                    elt = elt.value
+                self._bind_loop_target(elt, keyish_iter, st)
+
+    # -- expressions ---------------------------------------------------
+
+    def _expr(self, e, st):
+        if e is None or isinstance(e, ast.Lambda):
+            return                       # lambdas are separate scopes
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                          ast.DictComp)):
+            self._comprehension(e, st)
+            return
+        if isinstance(e, ast.Call):
+            for a in e.args:
+                self._expr(a.value if isinstance(a, ast.Starred) else a, st)
+            for kw in e.keywords:
+                self._expr(kw.value, st)
+            self._expr(e.func, st)
+            self._consume_call(e, st)
+            return
+        if isinstance(e, ast.IfExp):
+            self._expr(e.test, st)
+            a, b = st.copy(), st.copy()
+            self._expr(e.body, a)
+            self._expr(e.orelse, b)
+            self._merge(st, a, b)
+            return
+        if isinstance(e, ast.BoolOp):
+            self._expr(e.values[0], st)
+            for v in e.values[1:]:       # short-circuit arms may not run
+                arm = st.copy()
+                self._expr(v, arm)
+                self._merge(st, st.copy(), arm)
+            return
+        if isinstance(e, ast.NamedExpr):
+            self._expr(e.value, st)
+            self._bind(e.target, e.value, st)
+            return
+        for child in ast.iter_child_nodes(e):
+            if isinstance(child, ast.expr):
+                self._expr(child, st)
+
+    def _comprehension(self, e, st):
+        local = st.copy()
+        keyish = []
+        for gen in e.generators:
+            self._expr(gen.iter, local)
+            keyish.append(self._keyish_table(gen.iter, local))
+        bodies = [e.key, e.value] if isinstance(e, ast.DictComp) else [e.elt]
+        for _ in range(2):   # element expr runs once PER item
+            for gen, k in zip(e.generators, keyish):
+                self._bind_loop_target(gen.target, k, local)
+                for cond in gen.ifs:
+                    self._expr(cond, local)
+            for b in bodies:
+                self._expr(b, local)
+        # consumption of enclosing-scope keys escapes the comprehension
+        for g, v in local.consumed.items():
+            st.consumed.setdefault(g, v)
+
+    def _consume_call(self, call, st):
+        fn = self.ns.fn_of(call)
+        if fn is None or fn not in CONSUMERS:
+            return
+        key_arg = call.args[0] if call.args else None
+        if key_arg is None:
+            for kw in call.keywords:
+                if kw.arg == "key":
+                    key_arg = kw.value
+                    break
+        if not isinstance(key_arg, ast.Name):
+            return
+        g = st.gen.get(key_arg.id)
+        if g is None:
+            return
+        prev = st.consumed.get(g)
+        if prev is None:
+            st.consumed[g] = (call, fn, key_arg.id)
+            return
+        site = (call.lineno, call.col_offset)
+        if site in self._reported:
+            return
+        self._reported.add(site)
+        self.reuse.append(
+            Reuse(call, key_arg.id, fn, prev[0], prev[1], prev[2]))

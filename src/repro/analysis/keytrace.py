@@ -1,0 +1,237 @@
+"""Layer 3b — the runtime key-trace audit behind ``audit_keys=True``.
+
+The static rules (RPL007-RPL009) see one module at a time; this module
+watches the key chain actually EXECUTE. While a ``KeyAudit`` is active,
+every host-side ``jax.random`` call — splits, ``fold_in`` lane
+derivations, and consuming samplers — is recorded into a
+``KeyTraceReport`` with its call site, and consuming the same concrete
+key data twice raises ``KeyReuseError`` at the second consumer, naming
+the first. One allowance: an exact re-execution (same sampler, same
+call site, same key data) is recorded but not flagged — that is the
+re-derivation idiom (the scheduler re-draws a wave's batch per cohort
+and slices it), which reproduces identical values rather than
+correlating draws that should be independent. That is the dynamic version of the determinism contract:
+every replay guarantee (bit-identical ``resume()``, zero-prob
+``FaultSpec`` == ``faults=None``) holds only if no draw is consumed
+twice anywhere on the host chain.
+
+Mechanics: the audit monkeypatches the ``jax.random`` module attributes
+for the duration of a ``with audit.activate():`` block. Every call site
+in this repo goes through attribute lookup (``jax.random.split(...)``),
+so the wrappers see them all. The wrappers delegate to the original
+functions untouched — trajectories are bit-identical with the audit on,
+mirroring the ``sanitize=True`` contract. Tracer-typed keys (calls
+re-executed under jit/vmap tracing) have no concrete data to fingerprint
+and are skipped, so traced code is neither slowed nor double-counted;
+the audit covers exactly the HOST-side chain (driver round loop,
+scheduler sync/async waves, fault ladders, snapshot/resume).
+
+This module imports jax lazily (inside ``activate``): importing
+``repro.analysis`` for the stdlib-only linter must stay jax-free.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import traceback
+from typing import Optional, Union
+
+__all__ = ["KeyAudit", "KeyEvent", "KeyReuseError", "KeyTraceReport",
+           "resolve_audit"]
+
+# jax.random attributes wrapped while an audit is active. Consumers get
+# duplicate-consumption checking; fold_in is recorded (with its salt when
+# concrete) but NOT uniqueness-checked — per-client ``fold_in(base_key,
+# global_id)`` lanes legitimately re-derive every round.
+_CONSUMERS = ("split", "bernoulli", "uniform", "normal", "randint",
+              "permutation", "shuffle", "choice", "categorical", "gumbel",
+              "laplace", "logistic", "exponential", "truncated_normal",
+              "cauchy", "beta", "gamma", "dirichlet", "poisson",
+              "rademacher", "bits")
+_NONCONSUMERS = ("fold_in",)
+
+
+class KeyReuseError(RuntimeError):
+    """The same concrete key data was consumed twice on the host chain."""
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyEvent:
+    """One recorded host-side jax.random call."""
+    kind: str                       # "split" | "fold_in" | "consume:<fn>"
+    key: tuple                      # fingerprint of the raw uint32 key data
+    salt: Optional[int]             # fold_in data when concrete, else None
+    site: str                       # "file.py:123 in fn"
+    seq: int                        # 0-based position in the trace
+
+    def to_json(self) -> dict:
+        return {"kind": self.kind, "key": list(self.key),
+                "salt": self.salt, "site": self.site, "seq": self.seq}
+
+
+class KeyTraceReport:
+    """The ordered event log of one audited run."""
+
+    def __init__(self):
+        self.events: list = []
+
+    def __len__(self):
+        return len(self.events)
+
+    def signature(self) -> list:
+        """(kind, key, salt) triples — site/seq-free, so a ``resume()``
+        replay can be compared suffix-for-suffix against the
+        uninterrupted run's trace."""
+        return [(e.kind, e.key, e.salt) for e in self.events]
+
+    def consumed_keys(self) -> set:
+        return {e.key for e in self.events
+                if e.kind == "split" or e.kind.startswith("consume:")}
+
+    def to_json(self) -> dict:
+        return {"n_events": len(self.events),
+                "events": [e.to_json() for e in self.events]}
+
+
+def _key_fingerprint(key):
+    """A hashable view of concrete key data; None when the value is a
+    tracer (or otherwise has no materialized bits to fingerprint)."""
+    import jax
+    import numpy as np
+
+    if isinstance(key, jax.core.Tracer):
+        return None
+    try:
+        arr = np.asarray(key)
+    except Exception:
+        try:
+            arr = np.asarray(jax.random.key_data(key))
+        except Exception:
+            return None
+    if arr.dtype.kind not in "ui":
+        return None
+    flat = arr.reshape(-1)
+    if flat.size == 0 or flat.size > 64:
+        # a key TABLE (split(key, n) output fed back in) is not one key;
+        # per-row consumption is the vmapped callee's business
+        return None
+    return (str(arr.dtype), arr.shape) + tuple(int(x) for x in flat)
+
+
+def _call_site() -> str:
+    """The innermost stack frame outside this module and jax itself —
+    the call-site attribution duplicate-consume errors point at."""
+    for fr in reversed(traceback.extract_stack()):
+        fn = fr.filename.replace("\\", "/")
+        if fn.endswith("analysis/keytrace.py") or "/jax/" in fn \
+                or "/jax_" in fn:
+            continue
+        return f"{fr.filename}:{fr.lineno} in {fr.name}"
+    return "<unknown>"
+
+
+class KeyAudit:
+    """Records (and polices) the host-side key chain.
+
+    Use as ``api.run(..., audit_keys=True)`` for the checks alone, or
+    construct one and pass it (``audit_keys=audit``) to inspect
+    ``audit.report`` afterwards. Re-entrant: nested ``activate()`` blocks
+    share one patch installation.
+    """
+
+    def __init__(self, *, raise_on_reuse: bool = True):
+        self.report = KeyTraceReport()
+        self.raise_on_reuse = raise_on_reuse
+        self.reuse_events: list = []    # (KeyEvent, first KeyEvent)
+        self._consumed: dict = {}       # fingerprint -> first KeyEvent
+        self._depth = 0
+        self._saved: dict = {}
+
+    # -- recording -----------------------------------------------------
+
+    def _record(self, kind: str, fingerprint, salt) -> KeyEvent:
+        ev = KeyEvent(kind=kind, key=fingerprint, salt=salt,
+                      site=_call_site(), seq=len(self.report.events))
+        self.report.events.append(ev)
+        return ev
+
+    def _on_consume(self, fn: str, fingerprint):
+        kind = "split" if fn == "split" else f"consume:{fn}"
+        ev = self._record(kind, fingerprint, None)
+        first = self._consumed.get(fingerprint)
+        if first is None:
+            self._consumed[fingerprint] = ev
+            return
+        if first.kind == ev.kind and first.site == ev.site:
+            # exact re-execution (same sampler, same call site, same key
+            # data) reproduces the same values — the deliberate
+            # re-derivation idiom (e.g. the scheduler's per-cohort
+            # ``data_fn(t, k_batch, ids)`` re-draws the wave batch and
+            # slices it). Recorded, not flagged: the hazard the audit
+            # polices is two DIFFERENT draws riding one key.
+            return
+        self.reuse_events.append((ev, first))
+        if self.raise_on_reuse:
+            raise KeyReuseError(
+                f"duplicate key consumption: jax.random.{fn} at {ev.site} "
+                f"consumes key data already consumed by {first.kind} at "
+                f"{first.site} — every consumer needs its own split/"
+                f"fold_in lane (the determinism contract audit_keys "
+                f"enforces)")
+
+    def _on_fold_in(self, fingerprint, salt):
+        try:
+            salt_v = int(salt)
+        except Exception:
+            salt_v = None
+        self._record("fold_in", fingerprint, salt_v)
+
+    # -- patching ------------------------------------------------------
+
+    def _wrap(self, name: str, orig):
+        consumes = name in _CONSUMERS
+
+        def wrapper(*args, **kwargs):
+            key = args[0] if args else kwargs.get("key")
+            fingerprint = None if key is None else _key_fingerprint(key)
+            if fingerprint is not None:
+                if consumes:
+                    self._on_consume(name, fingerprint)
+                else:
+                    salt = args[1] if len(args) > 1 else kwargs.get("data")
+                    self._on_fold_in(fingerprint, salt)
+            return orig(*args, **kwargs)
+
+        wrapper._repro_key_audit = True     # guard against double-wrap
+        wrapper.__name__ = getattr(orig, "__name__", name)
+        return wrapper
+
+    @contextlib.contextmanager
+    def activate(self):
+        import jax
+
+        if self._depth == 0:
+            self._saved = {}
+            for name in _CONSUMERS + _NONCONSUMERS:
+                orig = getattr(jax.random, name, None)
+                if orig is None or getattr(orig, "_repro_key_audit", False):
+                    continue
+                self._saved[name] = orig
+                setattr(jax.random, name, self._wrap(name, orig))
+        self._depth += 1
+        try:
+            yield self
+        finally:
+            self._depth -= 1
+            if self._depth == 0:
+                for name, orig in self._saved.items():
+                    setattr(jax.random, name, orig)
+                self._saved = {}
+
+
+def resolve_audit(audit_keys: Union[bool, KeyAudit]) -> Optional[KeyAudit]:
+    """Normalize the ``audit_keys=`` argument: True makes an ephemeral
+    audit (checks only), an instance is used as-is, falsy disables."""
+    if isinstance(audit_keys, KeyAudit):
+        return audit_keys
+    return KeyAudit() if audit_keys else None

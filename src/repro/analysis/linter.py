@@ -18,11 +18,15 @@ import os
 from typing import Iterable, Optional
 
 from .findings import Finding, Severity, parse_pragmas
-from .modindex import ModuleIndex
+from .modindex import ModuleIndex, ProjectIndex
 from .rules import get_rules
 
 # pragma bookkeeping findings (not real rules — never suppressible)
 _PRAGMA_RULE = "RPL000"
+
+# version of the LintReport.to_json shape; bump on any key change so the
+# --baseline ratchet and CI artifact consumers can reject mismatches
+SCHEMA_VERSION = 2
 
 
 @dataclasses.dataclass
@@ -57,6 +61,7 @@ class LintReport:
 
     def to_json(self) -> dict:
         return {
+            "schema_version": SCHEMA_VERSION,
             "files": list(self.files),
             "n_findings": len(self.active),
             "n_suppressed": len(self.suppressed),
@@ -105,7 +110,8 @@ def _apply_pragmas(findings: list, pragmas: list, path: str) -> LintReport:
 
 
 def lint_source(source: str, path: str = "<string>",
-                rules: Optional[Iterable[str]] = None) -> LintReport:
+                rules: Optional[Iterable[str]] = None,
+                project: Optional[ProjectIndex] = None) -> LintReport:
     """Lint one source string (the corpus tests' entry point)."""
     try:
         tree = ast.parse(source, filename=path)
@@ -115,6 +121,7 @@ def lint_source(source: str, path: str = "<string>",
                     severity=Severity.ERROR)
         return LintReport(findings=[f], files=[path])
     index = ModuleIndex(tree)
+    index.project = project
     findings = []
     for fn, _ in get_rules(rules).values():
         findings.extend(fn(index, path))
@@ -130,27 +137,55 @@ def lint_source(source: str, path: str = "<string>",
 
 
 def lint_file(path: str,
-              rules: Optional[Iterable[str]] = None) -> LintReport:
+              rules: Optional[Iterable[str]] = None,
+              project: Optional[ProjectIndex] = None) -> LintReport:
     with open(path, "r", encoding="utf-8") as f:
-        return lint_source(f.read(), path=path, rules=rules)
+        return lint_source(f.read(), path=path, rules=rules,
+                           project=project)
 
 
-def iter_python_files(paths: Iterable[str]):
+def iter_python_files(paths: Iterable[str], exclude: Iterable[str] = ()):
+    exclude = [x.replace(os.sep, "/") for x in exclude]
+
+    def keep(p: str) -> bool:
+        q = p.replace(os.sep, "/")
+        return not any(x in q for x in exclude)
+
     for p in paths:
         if os.path.isfile(p):
-            yield p
+            if keep(p):
+                yield p
         else:
             for root, dirs, files in os.walk(p):
                 dirs[:] = sorted(d for d in dirs
                                  if d not in ("__pycache__", ".git"))
                 for name in sorted(files):
-                    if name.endswith(".py"):
-                        yield os.path.join(root, name)
+                    full = os.path.join(root, name)
+                    if name.endswith(".py") and keep(full):
+                        yield full
+
+
+def build_project_index(files: Iterable[str]) -> ProjectIndex:
+    """Prepass: collect every module's top-level integer constants so
+    RPL009 can resolve salts through from-imports. Unparseable files are
+    skipped here — they surface as RPL999 findings in the main pass."""
+    project = ProjectIndex()
+    for path in files:
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                tree = ast.parse(f.read(), filename=path)
+        except (SyntaxError, OSError, UnicodeDecodeError):
+            continue
+        project.add(path, ModuleIndex(tree))
+    return project
 
 
 def lint_paths(paths: Iterable[str],
-               rules: Optional[Iterable[str]] = None) -> LintReport:
+               rules: Optional[Iterable[str]] = None,
+               exclude: Iterable[str] = ()) -> LintReport:
+    files = list(iter_python_files(paths, exclude=exclude))
+    project = build_project_index(files)
     report = LintReport()
-    for path in iter_python_files(paths):
-        report.extend(lint_file(path, rules=rules))
+    for path in files:
+        report.extend(lint_file(path, rules=rules, project=project))
     return report

@@ -98,6 +98,15 @@ class ModuleIndex:
         # simple Name -> value-node assignments, innermost-scope-agnostic
         # (good enough to resolve ``out_specs=tile`` in kernel modules)
         self.assignments: dict = {}
+        # module-level NAME = <int literal> bindings (salt constants)
+        self.int_constants: dict = {}
+        # local name -> (module-as-written, original name) for from-imports
+        self.imports_from: dict = {}
+        # local alias -> full dotted module for ``import a.b.c as x``
+        self.import_aliases: dict = {}
+        # cross-module constant table, attached by lint_paths (None when
+        # linting a single source string standalone)
+        self.project: Optional["ProjectIndex"] = None
         self._func_defs: dict = {}    # name -> [FuncNode]
         self._build()
 
@@ -107,6 +116,18 @@ class ModuleIndex:
         for node in ast.walk(self.tree):
             for child in ast.iter_child_nodes(node):
                 self.parents[child] = node
+        for stmt in self.tree.body:
+            tgts, val = None, None
+            if isinstance(stmt, ast.Assign):
+                tgts, val = stmt.targets, stmt.value
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                tgts, val = [stmt.target], stmt.value
+            if tgts and isinstance(val, ast.Constant) \
+                    and isinstance(val.value, int) \
+                    and not isinstance(val.value, bool):
+                for t in tgts:
+                    if isinstance(t, ast.Name):
+                        self.int_constants[t.id] = val.value
         for node in ast.walk(self.tree):
             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
                                  ast.Lambda)):
@@ -117,6 +138,16 @@ class ModuleIndex:
                 for t in node.targets:
                     if isinstance(t, ast.Name):
                         self.assignments[t.id] = node.value
+            elif isinstance(node, ast.ImportFrom):
+                mod = "." * node.level + (node.module or "")
+                for a in node.names:
+                    self.imports_from[a.asname or a.name] = (mod, a.name)
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:      # ``import a.b.c as x`` -> x
+                        self.import_aliases[a.asname] = a.name
+                    elif "." not in a.name:
+                        self.import_aliases[a.name] = a.name
         for node in ast.walk(self.tree):
             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 self._mark_decorated(node)
@@ -221,6 +252,37 @@ class ModuleIndex:
             return self.assignments[node.id]
         return node
 
+    def resolve_int(self, node: ast.AST) -> Optional[int]:
+        """Resolve an expression to a compile-time integer: a literal, a
+        module-level constant in this file, or (when a ``ProjectIndex`` is
+        attached) a constant imported from another linted module. None for
+        anything data-dependent — rules built on this skip, never guess."""
+        if isinstance(node, ast.Constant):
+            v = node.value
+            return v if isinstance(v, int) and not isinstance(v, bool) \
+                else None
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            inner = self.resolve_int(node.operand)
+            return None if inner is None else -inner
+        if isinstance(node, ast.Name):
+            if node.id in self.int_constants:
+                return self.int_constants[node.id]
+            imp = self.imports_from.get(node.id)
+            if imp is not None and self.project is not None:
+                return self.project.lookup(imp[0], imp[1])
+            return None
+        if isinstance(node, ast.Attribute):
+            name = dotted_name(node)
+            if name is None or self.project is None:
+                return None
+            mod, _, attr = name.rpartition(".")
+            root = mod.split(".", 1)[0]
+            if root in self.import_aliases:
+                full = self.import_aliases[root]
+                mod = full + mod[len(root):]
+            return self.project.lookup(mod, attr)
+        return None
+
     def tainted_params(self, func: FuncNode) -> set:
         """Names that hold TRACER values inside a traced function: the
         function's own parameters (minus any jit static_argnames) plus
@@ -247,3 +309,47 @@ class ModuleIndex:
                         if isinstance(e, ast.Name):
                             names.add(e.id)
         return names
+
+
+def module_dotted_path(path: str) -> str:
+    """``src/repro/faults/spec.py`` -> ``repro.faults.spec`` — the dotted
+    key a file is registered under in a ``ProjectIndex``. A leading
+    ``src/`` component is dropped (the repo's layout); ``__init__.py``
+    maps to its package."""
+    p = path.replace("\\", "/")
+    if p.endswith(".py"):
+        p = p[:-3]
+    parts = [c for c in p.split("/") if c not in ("", ".", "..")]
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+class ProjectIndex:
+    """Module-level integer constants across every file of one lint run.
+
+    Built by ``linter.lint_paths`` as a prepass and attached to each
+    ``ModuleIndex`` so ``resolve_int`` can follow a salt constant through
+    ``from .spec import _SALT_DROP`` — the cross-module half of the
+    RPL009 salt-collision rule. Lookup tail-matches the module reference
+    as written at the import site (``..faults.spec``, ``spec``) against
+    the registered dotted paths; ambiguous or conflicting matches resolve
+    to None (skip, never guess)."""
+
+    def __init__(self):
+        self._consts: dict = {}   # dotted module path -> {NAME: int}
+
+    def add(self, path: str, index: ModuleIndex):
+        self._consts[module_dotted_path(path)] = dict(index.int_constants)
+
+    def lookup(self, module_expr: str, name: str) -> Optional[int]:
+        tail = module_expr.lstrip(".")
+        if not tail:
+            return None
+        hits = []
+        for mod, consts in self._consts.items():
+            if (mod == tail or mod.endswith("." + tail)) and name in consts:
+                hits.append(consts[name])
+        return hits[0] if len(set(hits)) == 1 else None

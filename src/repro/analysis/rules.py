@@ -20,6 +20,16 @@
 |        | interpret mode accepts what Mosaic rejects) and accumulating     |
 |        | output blocks revisited across non-innermost grid axes (the      |
 |        | decode-reduce kernel's correctness precondition)                 |
+| RPL007 | PRNGKey reuse: one key consumed by two ``jax.random.*`` calls,   |
+|        | or used again after being split (correlated draws; breaks the    |
+|        | bit-replay contract every resume/fault guarantee rests on)       |
+| RPL008 | chain contamination: fault/checkpoint/telemetry draws derived by |
+|        | ``split`` off the participation/quantization round chain instead |
+|        | of a private ``fold_in`` salt lane (the PR-8 invariant —         |
+|        | zero-prob FaultSpec must be bit-identical to faults=None)        |
+| RPL009 | salt collision: two ``fold_in`` sites in one module resolving to |
+|        | the same integer salt — the lanes they open are THE SAME stream  |
+|        | (cross-module constants resolved through the ProjectIndex)       |
 
 Each rule is ``fn(index, path) -> list[Finding]``. Suppression/pragma
 handling lives in ``linter.py``.
@@ -27,9 +37,11 @@ handling lives in ``linter.py``.
 from __future__ import annotations
 
 import ast
+import re
 from typing import Callable
 
 from .findings import Finding, Severity
+from .keyflow import KeyFlow, RandomNamespace
 from .modindex import ModuleIndex, dotted_name, last_component
 
 _COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "all_gather",
@@ -279,6 +291,124 @@ def rpl006(index: ModuleIndex, path: str) -> list:
 
 
 # ---------------------------------------------------------------------------
+# RPL007 — PRNGKey reuse (def-use pass in keyflow.py)
+# ---------------------------------------------------------------------------
+
+def rpl007(index: ModuleIndex, path: str) -> list:
+    out = []
+    for r in KeyFlow(index).run().reuse:
+        if r.first_node is r.node:
+            how = (f"jax.random.{r.fn} consumes '{r.name}' on every "
+                   f"iteration")
+        elif r.first_fn == "split":
+            how = (f"'{r.name}' was already split at line "
+                   f"{r.first_node.lineno} — a split retires its key")
+        else:
+            alias = ("" if r.first_name == r.name
+                     else f" (as '{r.first_name}')")
+            how = (f"'{r.name}' was already consumed by jax.random."
+                   f"{r.first_fn} at line {r.first_node.lineno}{alias}")
+        out.append(_finding(
+            "RPL007", path, r.node,
+            f"PRNGKey reuse: {how} — derive a fresh key per consumer "
+            f"(split, or fold_in for a parallel lane); reusing one "
+            f"correlates draws that the MM analysis needs independent "
+            f"and breaks the bit-replay contract"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL008 — chain contamination (split where a fold_in salt lane is owed)
+# ---------------------------------------------------------------------------
+
+_ROUND_KEY_RE = re.compile(r"^(k_round|round_key|k_wave|wave_key)$")
+_AUX_FN_RE = re.compile(
+    r"fault|corrupt|straggl|checkpoint|snapshot|telemetry|drill|kill|drop",
+    re.IGNORECASE)
+
+
+def _param_names(func) -> set:
+    args = getattr(func, "args", None)
+    if args is None:
+        return set()
+    names = {a.arg for a in (args.posonlyargs + args.args
+                             + args.kwonlyargs)}
+    if args.vararg:
+        names.add(args.vararg.arg)
+    return names
+
+
+def rpl008(index: ModuleIndex, path: str) -> list:
+    """Only functions whose NAME says they are auxiliary (fault /
+    checkpoint / telemetry / ...) are checked: the participation chain's
+    owner legitimately splits the round key, an aux consumer never may —
+    it gets a private ``fold_in`` salt lane so switching it off leaves
+    the main trajectory bit-identical."""
+    ns = RandomNamespace(index.tree)
+    out = []
+    for node in ast.walk(index.tree):
+        if not (isinstance(node, ast.Call) and ns.fn_of(node) == "split"
+                and node.args and isinstance(node.args[0], ast.Name)):
+            continue
+        key_name = node.args[0].id
+        func = index.enclosing_function(node)
+        if func is None or isinstance(func, ast.Lambda):
+            continue
+        if not _AUX_FN_RE.search(func.name):
+            continue
+        if not (key_name in _param_names(func)
+                or _ROUND_KEY_RE.match(key_name)):
+            continue
+        out.append(_finding(
+            "RPL008", path, node,
+            f"chain contamination: auxiliary '{func.name}' splits "
+            f"'{key_name}' — fault/checkpoint/telemetry draws must ride "
+            f"a private fold_in salt lane off the round key, never a "
+            f"split of the participation/quantization chain (the PR-8 "
+            f"invariant: a zero-prob aux draw must leave the main "
+            f"trajectory bit-identical)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL009 — fold_in salt collisions (cross-module constants via ProjectIndex)
+# ---------------------------------------------------------------------------
+
+def rpl009(index: ModuleIndex, path: str) -> list:
+    ns = RandomNamespace(index.tree)
+    sites: dict = {}    # salt value -> [Call] in source order
+    for node in ast.walk(index.tree):
+        if not (isinstance(node, ast.Call)
+                and ns.fn_of(node) == "fold_in"):
+            continue
+        salt_node = node.args[1] if len(node.args) > 1 else None
+        if salt_node is None:
+            for kw in node.keywords:
+                if kw.arg == "data":
+                    salt_node = kw.value
+                    break
+        if salt_node is None:
+            continue
+        val = index.resolve_int(salt_node)
+        if val is not None:        # data-dependent salts: skip, not guess
+            sites.setdefault(val, []).append(node)
+    out = []
+    for val, nodes in sorted(sites.items()):
+        if len(nodes) < 2:
+            continue
+        nodes.sort(key=lambda n: (n.lineno, n.col_offset))
+        first = nodes[0]
+        for n in nodes[1:]:
+            out.append(_finding(
+                "RPL009", path, n,
+                f"salt collision: fold_in salt {val:#x} is already used "
+                f"by the fold_in at line {first.lineno} — two lanes "
+                f"folded with the same salt are the SAME stream; every "
+                f"reserved lane needs a distinct module-level constant"))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
@@ -295,6 +425,12 @@ RULES: dict = {
                        "shard_map/pmap body)"),
     "RPL006": (rpl006, "Pallas BlockSpec lane misalignment / accumulating "
                        "output block not innermost"),
+    "RPL007": (rpl007, "PRNGKey reuse: one key consumed twice, or used "
+                       "after being split"),
+    "RPL008": (rpl008, "chain contamination: aux draws split off the "
+                       "round chain instead of a fold_in salt lane"),
+    "RPL009": (rpl009, "fold_in salt collision: two lanes in one module "
+                       "folded with the same integer salt"),
 }
 
 

@@ -722,6 +722,7 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
          mesh=None, client_axis: str = "clients",
          client_mode: str = "vmap", uplink: str = "gather",
          drift_metric: bool = True, sanitize: bool = False,
+         audit_keys=False,
          cohort: Optional[CohortSlice] = None,
          _comm_audit: bool = False):
     """One federated MM round (Algorithm 2, every axis of the spec applied).
@@ -810,7 +811,26 @@ def step(problem: MMProblem, spec: FederationSpec, state: DriverState,
     accounting — WITHOUT touching the iterate. The caller accumulates
     partials (optionally staleness-weighted) and lands them with
     ``apply_partial``. ``key``/``active``/``gamma`` are ignored on this
-    path (the scheduler owns the key chain and the step size)."""
+    path (the scheduler owns the key chain and the step size).
+
+    audit_keys — the runtime key-trace audit (``repro.analysis.keytrace``):
+    records every host-side ``jax.random`` call (splits, ``fold_in``
+    lane derivations, consuming samplers) for the duration of the round
+    and raises ``KeyReuseError`` at the second consumer if the same
+    concrete key data is ever consumed twice. Pass ``True`` for the
+    check alone, or a ``KeyAudit`` instance to inspect ``audit.report``
+    afterwards. The wrappers delegate to the originals untouched, so
+    the trajectory is BIT-IDENTICAL with the audit on (pinned in
+    tests/test_keytrace.py). Off by default, zero-cost when off."""
+    if audit_keys:
+        from ..analysis.keytrace import resolve_audit
+        audit = resolve_audit(audit_keys)
+        with audit.activate():
+            return step(problem, spec, state, client_batches, gamma, key,
+                        active, mesh=mesh, client_axis=client_axis,
+                        client_mode=client_mode, uplink=uplink,
+                        drift_metric=drift_metric, sanitize=sanitize,
+                        cohort=cohort, _comm_audit=_comm_audit)
     if cohort is not None:
         if sanitize:
             # checkify the cohort stage and throw EAGERLY (same contract
@@ -1112,7 +1132,7 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
         scan_batch_bytes_max: Optional[int] = None,
         mesh=None, client_axis: str = "clients",
         client_mode: str = "vmap", uplink: str = "gather",
-        sanitize: bool = False):
+        sanitize: bool = False, audit_keys=False):
     """Drive ``n_rounds`` of the MM recursion; returns
     ``(final DriverState, metrics)`` where metrics is a stacked-pytree dict
     (each key an array with leading round axis). Use ``history_list`` for
@@ -1164,6 +1184,13 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
     ``sanitize=False`` (checkify only adds error outputs; pinned in
     tests/test_sanitizer.py). Off by default, zero-cost when off.
     Federated runs only (centralized ``spec=None`` rejects it).
+    audit_keys: record the WHOLE host-side key chain (the per-round
+    ``k_round``/``k_batch`` splits, batch-fn draws, fault/edge fold_in
+    lanes) into a ``repro.analysis.keytrace.KeyTraceReport`` and raise
+    ``KeyReuseError`` at the origin if the same concrete key data is
+    consumed twice. ``True`` for the check alone, a ``KeyAudit``
+    instance to keep the report. Trajectories are bit-identical with the
+    audit on (tests/test_keytrace.py). Federated runs only.
     """
     problem = as_problem(problem)
 
@@ -1172,6 +1199,24 @@ def run(problem, x0, data, schedule, *, spec: Optional[FederationSpec] = None,
                          "sanitizer; the centralized path does not thread "
                          "it — wrap centralized_step in "
                          "analysis.runtime.checkified yourself")
+    if audit_keys and spec is None:
+        raise ValueError("audit_keys=True audits the federated driver's "
+                         "host key chain; the centralized path draws no "
+                         "keys — activate a keytrace.KeyAudit yourself if "
+                         "your batch pipeline consumes them")
+    if audit_keys:
+        from ..analysis.keytrace import resolve_audit
+        audit = resolve_audit(audit_keys)
+        with audit.activate():
+            return run(problem, x0, data, schedule, spec=spec, key=key,
+                       n_rounds=n_rounds, eval_batch=eval_batch,
+                       eval_every=eval_every, track_mirror=track_mirror,
+                       diag=diag, scan=scan, v0_i=v0_i,
+                       init_batches=init_batches, state0=state0,
+                       scan_batch_bytes_max=scan_batch_bytes_max,
+                       mesh=mesh, client_axis=client_axis,
+                       client_mode=client_mode, uplink=uplink,
+                       sanitize=sanitize)
 
     if spec is None:
         return _run_centralized(problem, x0, data, schedule,

@@ -26,6 +26,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..analysis.hb import on_write
 from ..api.spec import FederationSpec
 
 
@@ -108,6 +109,7 @@ class ClientPopulation:
                 f"scatter_variates got {len(new_leaves)} leaves for an "
                 f"arena of {len(self._arena)} — cohort slice and arena "
                 f"must share the model tree structure")
+        on_write("variate-arena", ids)      # hb: single-writer-per-slot
         for arena_leaf, new_leaf in zip(self._arena, new_leaves):
             rows = np.asarray(new_leaf)
             if valid is not None:
@@ -159,6 +161,7 @@ class ClientPopulation:
                              f"population holds {self.n_total}")
         self.base_key = jnp.asarray(snap["base_key"])
         self.mu = np.asarray(snap["mu"], np.float32).copy()
+        on_write("participation-counts", range(self.n_total))
         self.participation_counts = np.asarray(
             snap["participation_counts"], np.int64).copy()
         self.rounds_seen = int(snap["rounds_seen"])
@@ -170,6 +173,7 @@ class ClientPopulation:
             if len(arena) != len(self._arena):
                 raise ValueError(f"snapshot arena has {len(arena)} leaves, "
                                  f"population has {len(self._arena)}")
+            on_write("variate-arena", range(self.n_total))
             for i, (cur, new) in enumerate(zip(self._arena, arena)):
                 new = np.asarray(new)
                 if new.shape != cur.shape or new.dtype != cur.dtype:
@@ -186,6 +190,7 @@ class ClientPopulation:
         hit = np.asarray(active) > 0.5
         if valid is not None:
             hit = hit & (np.asarray(valid) > 0.5)
+        on_write("participation-counts", ids[hit])
         np.add.at(self.participation_counts, ids[hit], 1)
 
     # -- 'at-init' warm start ----------------------------------------------

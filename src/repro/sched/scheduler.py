@@ -75,6 +75,7 @@ stale block's move toward its fresh value.
 """
 from __future__ import annotations
 
+import contextlib
 import glob
 import math
 import os
@@ -89,6 +90,7 @@ import jax.numpy as jnp
 from ..api.driver import (CohortPartial, CohortSlice, DriverState,
                           _stack_metrics, apply_partial, finalize_partial,
                           step)
+from ..analysis import hb
 from ..api.problem import as_problem
 from ..api.schedule import resolve_schedule, schedule_length
 from ..api.spec import FederationSpec, participation_draw
@@ -98,6 +100,15 @@ from .population import ClientPopulation
 
 # round snapshots kept on disk (older ones are pruned after each publish)
 _CKPT_KEEP = 3
+
+
+def _resolve_audit(audit_keys):
+    """Lazy ``keytrace.resolve_audit`` — keep the analysis import off the
+    scheduler's hot path when the audit is off."""
+    if not audit_keys:
+        return None
+    from ..analysis.keytrace import resolve_audit
+    return resolve_audit(audit_keys)
 
 
 class _SnapshotWriter:
@@ -120,27 +131,38 @@ class _SnapshotWriter:
     def __init__(self):
         self._ex = ThreadPoolExecutor(max_workers=1)
         self._fut = None
+        self._last = None
 
     @staticmethod
     def _write(path, snap, prune_dir):
+        # hb edges: the executor handoff (recv of the submit's send), the
+        # snapshot-after-land ordering mark, and the completion token the
+        # next submit / flush joins via Future.result()
+        hb.on_recv(("snap", path))
         save_snapshot(path, snap)
+        hb.on_mark("snapshot", int(snap["cursor"]),
+                   after=("land", int(snap["cursor"]) - 1))
         stale = sorted(glob.glob(os.path.join(prune_dir, "round_*.snap")))
         for p in stale[:-_CKPT_KEEP]:
             try:
                 os.remove(p)
             except OSError:
                 pass
+        hb.on_send(("snap-done", path))
 
     def submit(self, path, snap, prune_dir):
         if self._fut is not None:
             self._fut.result()   # backpressure + surface prior write errors
+            hb.on_recv(("snap-done", self._last))
         self._fut = self._ex.submit(self._write, path, snap, prune_dir)
+        self._last = path
 
     def flush(self):
         try:
             if self._fut is not None:
                 fut, self._fut = self._fut, None
                 fut.result()
+                hb.on_recv(("snap-done", self._last))
         finally:
             self._ex.shutdown(wait=True)
 
@@ -534,6 +556,7 @@ class CohortScheduler:
         if faults is not None and faults.any_injection:
             m["fault_retries"] = jnp.float32(buffer.retries)
             m["fault_abandoned"] = jnp.float32(buffer.abandoned)
+        hb.on_mark("land", t_idx)
         return state, m
 
     # -- crash-consistent snapshots ------------------------------------------
@@ -664,6 +687,7 @@ class CohortScheduler:
         if extra:
             snap.update(extra)
         path = os.path.join(ckpt_dir, f"round_{cursor:06d}.snap")
+        hb.on_send(("snap", path))
         if self._ckpt_writer is not None:
             # serialization + fsync + publish + prune run off the hot
             # loop; the snap above is all fresh host copies so the next
@@ -680,7 +704,7 @@ class CohortScheduler:
             buffer_cohorts: Optional[int] = None,
             delay_fn: Optional[Callable[[int], int]] = None,
             state0: Optional[DriverState] = None,
-            sanitize: bool = False,
+            sanitize: bool = False, audit_keys=False,
             checkpoint_dir: Optional[str] = None,
             checkpoint_every: int = 1):
         """Drive ``n_rounds`` server updates.
@@ -704,6 +728,13 @@ class CohortScheduler:
         NaN / div-by-zero / OOB check — same contract as
         ``step(sanitize=True)``; trajectories are bit-identical when no
         check trips.
+
+        audit_keys: record the scheduler's host key chain (wave splits,
+        per-wave fault/straggle ``fold_in`` lanes, batch-fn draws) into a
+        ``repro.analysis.keytrace.KeyTraceReport`` and raise
+        ``KeyReuseError`` at the origin on duplicate consumption —
+        ``True`` for the check, a ``KeyAudit`` instance to keep the
+        report. Same bit-identity contract as ``api.run``.
 
         checkpoint_dir / checkpoint_every: publish an atomic
         ``round_NNNNNN.snap`` snapshot every ``checkpoint_every`` server
@@ -743,16 +774,20 @@ class CohortScheduler:
         self._sanitize = bool(sanitize)
         self._ckpt_writer = (_SnapshotWriter() if checkpoint_dir is not None
                              else None)
+        audit = _resolve_audit(audit_keys)
         try:
-            if mode == "sync":
-                return self._run_sync(state, data_fn, gammas, key, n_rounds,
-                                      population, cohorts, eval_batch,
-                                      eval_every, checkpoint_dir,
-                                      checkpoint_every)
-            return self._run_async(state, data_fn, gammas, key, n_rounds,
-                                   population, cohorts, eval_batch,
-                                   eval_every, max_inflight, buffer_cohorts,
-                                   delay_fn, checkpoint_dir, checkpoint_every)
+            with (audit.activate() if audit is not None
+                  else contextlib.nullcontext()):
+                if mode == "sync":
+                    return self._run_sync(state, data_fn, gammas, key,
+                                          n_rounds, population, cohorts,
+                                          eval_batch, eval_every,
+                                          checkpoint_dir, checkpoint_every)
+                return self._run_async(state, data_fn, gammas, key, n_rounds,
+                                       population, cohorts, eval_batch,
+                                       eval_every, max_inflight,
+                                       buffer_cohorts, delay_fn,
+                                       checkpoint_dir, checkpoint_every)
         finally:
             if self._ckpt_writer is not None:
                 w, self._ckpt_writer = self._ckpt_writer, None
@@ -765,7 +800,8 @@ class CohortScheduler:
                max_inflight: Optional[int] = None,
                buffer_cohorts: Optional[int] = None,
                delay_fn: Optional[Callable[[int], int]] = None,
-               sanitize: bool = False, checkpoint_every: int = 1):
+               sanitize: bool = False, audit_keys=False,
+               checkpoint_every: int = 1):
         """Continue a crashed ``run(..., checkpoint_dir=...)`` from its
         latest atomic snapshot, reproducing the uninterrupted trajectory
         BIT-FOR-BIT: the snapshot carries the key-chain cursor, the
@@ -776,7 +812,11 @@ class CohortScheduler:
         crashed run; the ``spec.faults.kill_round`` crash point is
         DISABLED on resume (one crash per kill point — resume must make
         progress). Returns ``(DriverState, ClientPopulation, metrics)``
-        covering the FULL run, restored rows included."""
+        covering the FULL run, restored rows included.
+
+        audit_keys: same key-trace audit as ``run`` — an audited resume
+        replays EXACTLY the uninterrupted run's trace suffix from the
+        snapshot's key-chain cursor (pinned in tests/test_keytrace.py)."""
         if mode not in ("sync", "async"):
             raise ValueError(f"mode={mode!r} (want 'sync' or 'async')")
         if mode == "async" and self._two_tier:
@@ -837,20 +877,25 @@ class CohortScheduler:
             return state, population, _stack_metrics(rows)
         cohorts = cohort_ids(self.spec.n_clients, self.cohort_size)
         self._ckpt_writer = _SnapshotWriter()
+        audit = _resolve_audit(audit_keys)
         try:
-            if mode == "sync":
-                return self._run_sync(state, data_fn, gammas, key, n_rounds,
-                                      population, cohorts, eval_batch,
-                                      eval_every, checkpoint_dir,
-                                      checkpoint_every, kill_enabled=False,
-                                      start_round=cursor, rows=rows)
-            resume_ctx = self._decode_async_ctx(snap["async"], state.x)
-            return self._run_async(state, data_fn, gammas, key, n_rounds,
-                                   population, cohorts, eval_batch,
-                                   eval_every, max_inflight, buffer_cohorts,
-                                   delay_fn, checkpoint_dir, checkpoint_every,
-                                   kill_enabled=False, start_round=cursor,
-                                   rows=rows, resume_ctx=resume_ctx)
+            with (audit.activate() if audit is not None
+                  else contextlib.nullcontext()):
+                if mode == "sync":
+                    return self._run_sync(state, data_fn, gammas, key,
+                                          n_rounds, population, cohorts,
+                                          eval_batch, eval_every,
+                                          checkpoint_dir, checkpoint_every,
+                                          kill_enabled=False,
+                                          start_round=cursor, rows=rows)
+                resume_ctx = self._decode_async_ctx(snap["async"], state.x)
+                return self._run_async(state, data_fn, gammas, key, n_rounds,
+                                       population, cohorts, eval_batch,
+                                       eval_every, max_inflight,
+                                       buffer_cohorts, delay_fn,
+                                       checkpoint_dir, checkpoint_every,
+                                       kill_enabled=False, start_round=cursor,
+                                       rows=rows, resume_ctx=resume_ctx)
         finally:
             if self._ckpt_writer is not None:
                 w, self._ckpt_writer = self._ckpt_writer, None

@@ -1,0 +1,27 @@
+"""RPL007 firing: one PRNGKey consumed by two ``jax.random.*`` calls,
+used again after being split, reused across loop iterations, and reused
+per-element inside a comprehension."""
+import jax
+
+
+def double_sample(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))  # expect: RPL007
+    return a + b
+
+
+def use_after_split(key):
+    k1, k2 = jax.random.split(key)
+    noise = jax.random.normal(key, (2,))  # expect: RPL007
+    return k1, k2, noise
+
+
+def loop_reuse(key, n):
+    total = 0.0
+    for _ in range(n):
+        total += jax.random.uniform(key, ())  # expect: RPL007
+    return total
+
+
+def comp_reuse(key, n):
+    return [jax.random.normal(key, ()) for _ in range(n)]  # expect: RPL007

@@ -1,0 +1,37 @@
+"""RPL007 non-firing: the sanctioned derivation idioms — the rebind
+chain (``key, k = split(key)``), one-split-per-consumer lanes, parallel
+``fold_in`` lanes, exclusive branches, and per-element keys from a split
+table."""
+import jax
+
+
+def chain(key, n_rounds):
+    outs = []
+    for _ in range(n_rounds):
+        key, k_round = jax.random.split(key)
+        outs.append(jax.random.normal(k_round, ()))
+    return outs
+
+
+def lanes(key):
+    k_a, k_b = jax.random.split(key)
+    a = jax.random.normal(k_a, (2,))
+    b = jax.random.uniform(k_b, (2,))
+    return a + b
+
+
+def fold_lanes(key):
+    a = jax.random.normal(jax.random.fold_in(key, 1), ())
+    b = jax.random.normal(jax.random.fold_in(key, 2), ())
+    return a, b
+
+
+def branch_draw(key, flag):
+    if flag:
+        return jax.random.normal(key, ())
+    return jax.random.uniform(key, ())
+
+
+def per_client(key, n):
+    keys = jax.random.split(key, n)
+    return [jax.random.normal(k, ()) for k in keys]

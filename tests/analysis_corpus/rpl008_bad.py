@@ -1,0 +1,16 @@
+"""RPL008 firing: auxiliary draws (fault / checkpoint) derived by
+``split`` off the chain they were handed, instead of a private
+``fold_in`` salt lane."""
+import jax
+
+
+def client_fault_draw(k_round, p_drop, n):
+    k_drop, k_corrupt = jax.random.split(k_round)  # expect: RPL008
+    drop = jax.random.bernoulli(k_drop, p_drop, (n,))
+    corrupt = jax.random.bernoulli(k_corrupt, p_drop, (n,))
+    return drop, corrupt
+
+
+def checkpoint_jitter(key):
+    k_delay, _ = jax.random.split(key)  # expect: RPL008
+    return jax.random.uniform(k_delay, ())

@@ -1,0 +1,25 @@
+"""RPL008 non-firing: auxiliary draws on fault-private ``fold_in`` salt
+lanes (the PR-8 idiom), and the chain owner legitimately splitting the
+round key."""
+import jax
+
+_SALT_DROP = 0x0D0D
+_SALT_DELAY = 0x0E0E
+
+
+def client_fault_draw(k_round, p_drop, n):
+    k_drop = jax.random.fold_in(k_round, _SALT_DROP)
+    return jax.random.bernoulli(k_drop, p_drop, (n,))
+
+
+def checkpoint_jitter(key):
+    k_delay = jax.random.fold_in(key, _SALT_DELAY)
+    return jax.random.uniform(k_delay, ())
+
+
+def participation_draw(key, p, n):
+    # the chain OWNER: splitting here is the contract, not contamination
+    k_part, k_quant = jax.random.split(key)
+    active = jax.random.bernoulli(k_part, p, (n,))
+    qkeys = jax.random.split(k_quant, n)
+    return active, qkeys

@@ -1,0 +1,18 @@
+"""RPL009 firing: two reserved-lane constants sharing one value, plus a
+literal colliding with a named salt — the lanes are the SAME stream."""
+import jax
+
+_SALT_DROP = 0x51A7
+_SALT_CORRUPT = 0x51A7
+
+
+def drop_lane(key):
+    return jax.random.fold_in(key, _SALT_DROP)
+
+
+def corrupt_lane(key):
+    return jax.random.fold_in(key, _SALT_CORRUPT)  # expect: RPL009
+
+
+def telemetry_lane(key):
+    return jax.random.fold_in(key, 0x51A7)  # expect: RPL009

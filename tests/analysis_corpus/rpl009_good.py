@@ -1,0 +1,19 @@
+"""RPL009 non-firing: one distinct salt per reserved lane; data-dependent
+fold_in (per-client ids) carries no literal to collide on and is
+skipped, never guessed at."""
+import jax
+
+_SALT_DROP = 0x0FA1
+_SALT_CORRUPT = 0x0FA2
+
+
+def drop_lane(key):
+    return jax.random.fold_in(key, _SALT_DROP)
+
+
+def corrupt_lane(key):
+    return jax.random.fold_in(key, _SALT_CORRUPT)
+
+
+def client_lane(key, client_id):
+    return jax.random.fold_in(key, client_id)

@@ -1,0 +1,10 @@
+"""Cross-module half of the RPL009 fixture: the shared salt constant
+lives here (linted via ``lint_paths`` together with ``xmod_salts_b`` —
+not part of the rpl*_bad/_good marker globs)."""
+import jax
+
+SHARED_SALT = 0xBEEF
+
+
+def owner_lane(key):
+    return jax.random.fold_in(key, SHARED_SALT)

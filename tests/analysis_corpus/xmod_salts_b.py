@@ -1,0 +1,15 @@
+"""Cross-module half of the RPL009 fixture: imports the salt from
+``xmod_salts_a`` and collides it with a local literal. Standalone (no
+ProjectIndex) the import is unresolvable and the rule stays silent;
+under ``lint_paths`` the collision fires."""
+import jax
+
+from xmod_salts_a import SHARED_SALT
+
+
+def imported_lane(key):
+    return jax.random.fold_in(key, SHARED_SALT)
+
+
+def literal_lane(key):
+    return jax.random.fold_in(key, 0xBEEF)

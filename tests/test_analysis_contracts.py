@@ -186,3 +186,61 @@ def test_report_json_shape():
     assert data["ok"] is True
     assert data["violations"] == []
     assert "payload-bytes" in data["checked"]
+
+
+# ---------------------------------------------------------------------------
+# checksum billing + integrity (contract 7)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_checksummed_family_passes_with_digests_billed(bits):
+    """The real checksummed quantizer: digests present, CHECKSUM_BYTES
+    billed on BOTH sides of the byte equality, concrete probe green."""
+    comp = C.block_quant(bits, 256, checksum=True)
+    report = check_compressor(comp, TREE)
+    report.raise_if_failed()
+    assert {"checksum-billing", "checksum-integrity"} <= set(report.checked)
+    # the digests are really in the bill: exactly CHECKSUM_BYTES per
+    # packed leaf more than the unchecksummed twin
+    plain = C.block_quant(bits, 256, checksum=False)
+    assert (comp.payload_bytes(TREE) - plain.payload_bytes(TREE)
+            == C.CHECKSUM_BYTES * len(jax.tree.leaves(TREE)))
+    assert comp.wire_bytes(TREE) - plain.wire_bytes(TREE) \
+        == C.CHECKSUM_BYTES * len(jax.tree.leaves(TREE))
+
+
+def test_unstamped_checksum_wire_rejected():
+    """checksum=True with an encode that stamps nothing: payload_bytes
+    and the measured buffers AGREE (both short the same digest bytes),
+    so only the digest-presence check can catch it."""
+    base = C.block_quant(8, 256, checksum=True)
+    plain = C.block_quant(8, 256, checksum=False)
+    broken = dataclasses.replace(base, encode=plain.encode,
+                                 payload_fn=plain.payload_fn)
+    report = check_compressor(broken, TREE)
+    assert "checksum-billing" in _violated(report)
+    assert any("stamps no digest" in v.detail for v in report.violations)
+    # and crucially: the byte-equality contract alone does NOT see it
+    assert "payload-bytes" not in _violated(report)
+
+
+def test_stale_reencode_digest_rejected():
+    """A reencode that copies the digest of a DIFFERENT encode over its
+    fresh codes has the right structs everywhere — only the concrete
+    verify_payload probe can reject it."""
+    base = C.block_quant(8, 256, checksum=True)
+
+    def stale(key, tree):
+        pay = base.reencode(key, tree)
+        # the stale digest: stamped off OTHER buffers (a shifted tree)
+        other = base.reencode(key, jax.tree.map(lambda x: x + 1.0, tree))
+        return jax.tree.map(
+            lambda p, q: dataclasses.replace(p, check=q.check),
+            pay, other, is_leaf=lambda p: isinstance(p, PackedLeaf))
+
+    report = check_compressor(dataclasses.replace(base, reencode=stale),
+                              TREE)
+    assert "checksum-integrity" in _violated(report)
+    assert any("stale digest" in v.detail for v in report.violations)
+    # every abstract contract still passes — the probe is load-bearing
+    assert _violated(report) == {"checksum-integrity"}

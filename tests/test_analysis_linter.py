@@ -26,6 +26,7 @@ import pytest
 from repro.analysis import (RULES, LintReport, lint_file, lint_paths,
                             lint_source)
 from repro.analysis.__main__ import DEFAULT_MAX_PRAGMAS
+from repro.analysis.linter import SCHEMA_VERSION
 
 REPO = Path(__file__).resolve().parents[1]
 CORPUS = REPO / "tests" / "analysis_corpus"
@@ -133,6 +134,7 @@ def test_report_json_roundtrip(tmp_path):
     out = tmp_path / "report.json"
     report.dump_json(str(out))
     data = json.loads(out.read_text())
+    assert data["schema_version"] == SCHEMA_VERSION == 2
     assert data["n_findings"] == len(report.active)
     assert data["n_suppressed"] == 2
     assert data["n_pragmas"] == 3
@@ -169,6 +171,81 @@ def test_cli_pragma_budget_enforced():
     assert "allow-pragma" in r.stdout + r.stderr
 
 
+def test_cli_baseline_ratchet(tmp_path):
+    """--write-baseline freezes the debt (exit 0), --baseline lets the
+    frozen findings through and blocks only NEW ones."""
+    base = tmp_path / "baseline.json"
+    bad = str(CORPUS / "rpl001_bad.py")
+    r = _run_cli(bad, "--write-baseline", str(base))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "written to" in r.stdout
+    payload = json.loads(base.read_text())
+    assert payload["schema_version"] == SCHEMA_VERSION
+    assert payload["baseline"]    # non-empty (rule, file) counts
+    # the frozen debt no longer blocks...
+    r2 = _run_cli(bad, "--baseline", str(base))
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    assert "0 new" in r2.stdout
+    # ...but findings beyond the baseline still do
+    r3 = _run_cli(bad, str(CORPUS / "rpl002_bad.py"),
+                  "--baseline", str(base))
+    assert r3.returncode == 1
+    assert "new" in r3.stdout
+
+
+def test_json_report_doubles_as_baseline(tmp_path):
+    """A --json report round-trips as a --baseline input (same
+    (rule, file) bucketing, suppressed findings excluded)."""
+    out = tmp_path / "report.json"
+    bad = str(CORPUS / "rpl001_bad.py")
+    r = _run_cli(bad, "--json", str(out))
+    assert r.returncode == 1
+    assert json.loads(out.read_text())["schema_version"] == SCHEMA_VERSION
+    r2 = _run_cli(bad, "--baseline", str(out))
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    assert "0 new" in r2.stdout
+
+
+def test_cli_exclude_skips_matching_paths():
+    r = _run_cli("tests/analysis_corpus",
+                 "--exclude", "tests/analysis_corpus")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "checked 0 files" in r.stdout
+
+
+def test_lint_paths_exclude():
+    report = lint_paths([str(CORPUS)],
+                        exclude=["_bad", "pragmas_", "xmod_"])
+    assert report.ok, [f.format() for f in report.active]
+    assert all("_bad" not in f for f in report.files)
+
+
+def test_cli_rules_subset_strict_composition():
+    bad = str(CORPUS / "rpl007_bad.py")
+    r = _run_cli(bad, "--rules", "RPL007", "--strict")
+    assert r.returncode == 1
+    assert "RPL007" in r.stdout
+    # the same file under an unrelated rule subset is clean even --strict
+    r2 = _run_cli(bad, "--rules", "RPL003", "--strict")
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    # unknown rules are a usage error, not a crash
+    r3 = _run_cli(bad, "--rules", "RPL042")
+    assert r3.returncode == 2
+    assert "RPL042" in r3.stderr
+
+
+def test_cross_module_salt_collision_needs_project_index():
+    a = CORPUS / "xmod_salts_a.py"
+    b = CORPUS / "xmod_salts_b.py"
+    # standalone the imported salt is unresolvable -> RPL009 stays silent
+    assert lint_file(str(b)).ok
+    # linted together, the ProjectIndex resolves SHARED_SALT and the
+    # collision fires at the literal lane in b
+    report = lint_paths([str(a), str(b)])
+    got = [(f.rule, Path(f.path).name, f.line) for f in report.active]
+    assert got == [("RPL009", "xmod_salts_b.py", 15)]
+
+
 def test_lint_run_is_stdlib_only():
     # the tier-0 CI lint job installs only ruff: a plain lint run (no
     # --contracts) must never import jax — the Layer-2 contracts exports
@@ -185,6 +262,28 @@ def test_lint_run_is_stdlib_only():
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, env=env, cwd=str(REPO))
     assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_key_lineage_rules_are_stdlib_only():
+    # the v2 lineage rules (RPL007-009, incl. the cross-module salt
+    # index) ride the same stdlib-only path: they must fire without
+    # jax ever being imported
+    code = (
+        "import sys\n"
+        "from repro.analysis.__main__ import main\n"
+        "rc = main(['tests/analysis_corpus/rpl007_bad.py',\n"
+        "           'tests/analysis_corpus/rpl008_bad.py',\n"
+        "           'tests/analysis_corpus/rpl009_bad.py'])\n"
+        "assert rc == 1, rc\n"
+        "assert 'jax' not in sys.modules, 'key-lineage lint imported jax'\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd=str(REPO))
+    assert r.returncode == 0, r.stdout + r.stderr
+    for rid in ("RPL007", "RPL008", "RPL009"):
+        assert rid in r.stdout
 
 
 class TestLintReportApi:

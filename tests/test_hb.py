@@ -1,0 +1,204 @@
+"""repro.analysis.hb (PR 10): the vector-clock happens-before harness
+over the scheduler's cross-thread edges.
+
+Contracts pinned here:
+  * tracker mechanics — same-thread writes are ordered; cross-thread
+    writes WITHOUT a send/recv edge are flagged; the same writes WITH
+    the edge are clean; ``mark(after=...)`` enforces ordering edges;
+  * a deliberately injected unsynchronized arena write from the
+    ``_SnapshotWriter`` background thread is caught by the
+    single-writer-per-slot invariant on the REAL scheduler;
+  * the real scheduler (sync and async, checkpointing on, delay_fn
+    reordering landings) is hb-clean over >= 100 seeded interleavings —
+    every arena write is ordered and every snapshot happens-after the
+    land it claims.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.analysis import hb
+from repro.core.quadratic import quadratic_for_objective
+from repro.sched import ClientPopulation, CohortScheduler
+from repro.sched import scheduler as sched_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _quad_problem(n_clients=8, dim=32, batch=16):
+    ks = jax.random.split(KEY, n_clients)
+    Xs = jnp.stack([jax.random.normal(k, (batch, dim)) for k in ks])
+    w_i = jnp.stack([jnp.linspace(-1, 1, dim) + 2.0 * i
+                     for i in range(n_clients)])
+    ys = jnp.einsum("nbp,np->nb", Xs, w_i)
+
+    def loss(b, theta):
+        xb, yb = b
+        return 0.5 * jnp.mean((xb @ theta - yb) ** 2)
+
+    return (Xs, ys), api.as_problem(quadratic_for_objective(loss, rho=0.05))
+
+
+def _slicing_data_fn(full_data):
+    def data_fn(t, k, ids):
+        return jax.tree.map(lambda x: x[np.asarray(ids)], full_data(t, k))
+    return data_fn
+
+
+# ---------------------------------------------------------------------------
+# tracker mechanics
+# ---------------------------------------------------------------------------
+
+def _in_thread(fn):
+    out = {}
+
+    def runner():
+        try:
+            out["r"] = fn()
+        except BaseException as e:         # surfaced by the caller
+            out["e"] = e
+    th = threading.Thread(target=runner, name="hb-worker")
+    th.start()
+    th.join()
+    if "e" in out:
+        raise out["e"]
+    return out.get("r")
+
+
+def test_same_thread_writes_are_ordered():
+    trk = hb.HBTracker()
+    trk.write("arena", [0, 1])
+    trk.write("arena", [1, 2])
+    assert trk.violations == []
+
+
+def test_unordered_cross_thread_write_is_flagged():
+    trk = hb.HBTracker(raise_on_violation=False)
+    trk.write("arena", [3])
+    _in_thread(lambda: trk.write("arena", [3]))
+    assert len(trk.violations) == 1
+    assert "arena" in trk.violations[0] and "slot 3" in trk.violations[0]
+
+
+def test_send_recv_edge_orders_cross_thread_writes():
+    trk = hb.HBTracker()
+    trk.write("arena", [3])
+    trk.send(("job", 1))
+
+    def worker():
+        trk.recv(("job", 1))
+        trk.write("arena", [3])
+        trk.send(("done", 1))   # the return edge (Future.result())
+    _in_thread(worker)
+    trk.recv(("done", 1))
+    trk.write("arena", [3])
+    assert trk.violations == []
+
+
+def test_write_without_return_edge_is_flagged():
+    trk = hb.HBTracker(raise_on_violation=False)
+    trk.send(("job", 1))
+
+    def worker():
+        trk.recv(("job", 1))
+        trk.write("arena", [0])
+    _in_thread(worker)
+    trk.write("arena", [0])     # no recv of a done token: concurrent
+    assert len(trk.violations) == 1
+
+
+def test_mark_after_enforces_ordering():
+    trk = hb.HBTracker(raise_on_violation=False)
+    trk.mark("snapshot", 1, after=("land", 0))      # land never happened
+    assert len(trk.violations) == 1
+    trk2 = hb.HBTracker()
+    trk2.mark("land", 0)
+    trk2.send(("snap", "p"))
+
+    def worker():
+        trk2.recv(("snap", "p"))
+        trk2.mark("snapshot", 1, after=("land", 0))
+    _in_thread(worker)
+    assert trk2.violations == []
+
+
+def test_mark_without_edge_is_flagged_and_raises():
+    trk = hb.HBTracker()
+    trk.mark("land", 0)
+    # no send/recv edge: the worker's clock does not contain the land
+    with pytest.raises(hb.HBViolation, match="snapshot:1"):
+        _in_thread(lambda: trk.mark("snapshot", 1, after=("land", 0)))
+    assert len(trk.violations) == 1
+
+
+# ---------------------------------------------------------------------------
+# injected violation on the real scheduler
+# ---------------------------------------------------------------------------
+
+def test_injected_unsynchronized_arena_write_is_caught(tmp_path,
+                                                       monkeypatch):
+    """Make the snapshot thread poke the variate arena directly — an
+    unsynchronized write racing the round loop's scatters. The
+    single-writer-per-slot check must flag it."""
+    n, dim = 4, 8
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    spec = api.FederationSpec(n_clients=n, participation=1.0, alpha=0.1)
+    data_fn = _slicing_data_fn(lambda t, k: (Xs, ys))
+    sched = CohortScheduler(problem, spec, cohort_size=n)
+
+    captured = {}
+    orig_write = sched_mod._SnapshotWriter._write
+
+    def evil_write(path, snap, prune_dir):
+        orig_write(path, snap, prune_dir)
+        pop = captured["pop"]
+        pop.scatter_variates(np.array([0]),
+                             tuple(np.zeros_like(l[:1])
+                                   for l in pop._arena))
+    monkeypatch.setattr(sched_mod._SnapshotWriter, "_write",
+                        staticmethod(evil_write))
+
+    pop = ClientPopulation(spec, jnp.zeros(dim))
+    captured["pop"] = pop
+    with hb.tracking(raise_on_violation=False) as trk:
+        sched.run(jnp.zeros(dim), data_fn, 0.3, key=KEY, n_rounds=4,
+                  population=pop, checkpoint_dir=str(tmp_path / "ck"),
+                  checkpoint_every=1)
+    assert any("variate-arena" in v and "unsynchronized" in v
+               for v in trk.violations)
+
+
+# ---------------------------------------------------------------------------
+# the real scheduler is hb-clean across seeded interleavings
+# ---------------------------------------------------------------------------
+
+def test_real_scheduler_clean_over_seeded_interleavings(tmp_path):
+    """>= 100 seeded interleavings: async landings reordered by a seeded
+    delay_fn, checkpoints on, one shared scheduler instance so the jit
+    cache is reused. Every run must be violation-free, and the
+    snapshot-after-land marks must all have fired."""
+    n, dim = 4, 8
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    spec = api.FederationSpec(n_clients=n, participation=1.0, alpha=0.1)
+    data_fn = _slicing_data_fn(lambda t, k: (Xs, ys))
+    sched = CohortScheduler(problem, spec, cohort_size=2)   # 2 cohorts
+    x0 = jnp.zeros(dim)
+    for seed in range(104):
+        rng = np.random.default_rng(seed)
+        delays = rng.integers(0, 3, size=64)
+        mode = "sync" if seed % 4 == 0 else "async"
+        kw = {} if mode == "sync" else {
+            "max_inflight": 4, "buffer_cohorts": 2,
+            "delay_fn": lambda i, d=delays: int(d[i % d.size]),
+        }
+        with hb.tracking() as trk:          # raises at the origin
+            sched.run(x0, data_fn, 0.3, key=KEY, n_rounds=3, mode=mode,
+                      checkpoint_dir=str(tmp_path / f"s{seed}"),
+                      checkpoint_every=1, **kw)
+        assert trk.violations == []
+        snaps = [k for k in trk._marks if k[0] == "snapshot"]
+        assert len(snaps) == 3, f"seed {seed}: {snaps}"

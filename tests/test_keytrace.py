@@ -1,0 +1,250 @@
+"""repro.analysis.keytrace (PR 10): the runtime key-trace audit behind
+``audit_keys=True``.
+
+Contracts pinned here:
+  * golden bit-identity — ``api.run`` (vmap, mesh gather, mesh reduce)
+    and ``CohortScheduler.run`` (sync, async) produce BIT-IDENTICAL
+    trajectories and metrics with the audit on (the wrappers delegate to
+    the original ``jax.random`` functions untouched);
+  * duplicate consumption raises ``KeyReuseError`` at the ORIGIN: the
+    message names both call sites (this test file) and the offending
+    sampler; ``raise_on_reuse=False`` collects instead of raising;
+  * exact re-execution (same sampler, same site, same key data — the
+    scheduler's per-cohort ``data_fn`` re-derivation idiom) is recorded
+    but NOT flagged;
+  * an audited ``resume()`` replays exactly the uninterrupted run's
+    trace suffix from the snapshot's key-chain cursor;
+  * ``activate()`` is re-entrant and restores the patched
+    ``jax.random`` attributes on exit, even when the body raises.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro import api
+from repro.analysis.keytrace import (KeyAudit, KeyReuseError,
+                                     _key_fingerprint)
+from repro.core import compression as C
+from repro.core.quadratic import quadratic_for_objective
+from repro.sched import CohortScheduler
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _bit_equal(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=msg)
+
+
+def _quad_problem(n_clients=8, dim=32, batch=16):
+    ks = jax.random.split(KEY, n_clients)
+    Xs = jnp.stack([jax.random.normal(k, (batch, dim)) for k in ks])
+    w_i = jnp.stack([jnp.linspace(-1, 1, dim) + 2.0 * i
+                     for i in range(n_clients)])
+    ys = jnp.einsum("nbp,np->nb", Xs, w_i)
+
+    def loss(b, theta):
+        xb, yb = b
+        return 0.5 * jnp.mean((xb @ theta - yb) ** 2)
+
+    return (Xs, ys), api.as_problem(quadratic_for_objective(loss, rho=0.05))
+
+
+def _slicing_data_fn(full_data):
+    def data_fn(t, k, ids):
+        return jax.tree.map(lambda x: x[np.asarray(ids)], full_data(t, k))
+    return data_fn
+
+
+# ---------------------------------------------------------------------------
+# golden bit-identity: audit on == audit off (api.run, all uplinks)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mesh_uplink", ["none", "gather", "reduce"])
+def test_golden_run_bit_identical_with_audit(mesh_uplink):
+    n, dim = 8, 32
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    spec = api.FederationSpec(n_clients=n, participation=0.5, alpha=0.1,
+                              compressor=C.block_quant(8, 16))
+    mesh = (None if mesh_uplink == "none"
+            else Mesh(np.asarray(jax.devices()), ("clients",)))
+    uplink = "gather" if mesh_uplink == "none" else mesh_uplink
+    x0 = jnp.zeros(dim)
+    data = lambda t, k: (Xs, ys)
+    st_ref, m_ref = api.run(problem, x0, data, 0.3, spec=spec, key=KEY,
+                            n_rounds=5, mesh=mesh, uplink=uplink,
+                            eval_batch=(Xs[0], ys[0]))
+    audit = KeyAudit()
+    st, m = api.run(problem, x0, data, 0.3, spec=spec, key=KEY,
+                    n_rounds=5, mesh=mesh, uplink=uplink,
+                    eval_batch=(Xs[0], ys[0]), audit_keys=audit)
+    _bit_equal(st_ref.x, st.x)
+    _bit_equal(st_ref.v, st.v)
+    for k in m_ref:
+        _bit_equal(m_ref[k], m[k], msg=k)
+    # the host chain was actually watched: the per-round
+    # (key -> key, k_round, k_batch) splits are on the trace
+    assert len(audit.report) > 0
+    assert sum(1 for e in audit.report.events if e.kind == "split") >= 5
+    assert audit.reuse_events == []
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_golden_scheduler_bit_identical_with_audit(mode):
+    n, dim = 8, 32
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    spec = api.FederationSpec(n_clients=n, participation=0.5, alpha=0.1,
+                              compressor=C.block_quant(8, 16))
+    x0 = jnp.zeros(dim)
+    data_fn = _slicing_data_fn(lambda t, k: (Xs, ys))
+    sched = CohortScheduler(problem, spec, cohort_size=4)
+    st_ref, pop_ref, m_ref = sched.run(x0, data_fn, 0.3, key=KEY,
+                                       n_rounds=4, mode=mode)
+    audit = KeyAudit()
+    sched2 = CohortScheduler(problem, spec, cohort_size=4)
+    st, pop, m = sched2.run(x0, data_fn, 0.3, key=KEY, n_rounds=4,
+                            mode=mode, audit_keys=audit)
+    _bit_equal(st_ref.x, st.x)
+    _bit_equal(pop_ref.variates(), pop.variates())
+    for k in m_ref:
+        _bit_equal(m_ref[k], m[k], msg=k)
+    assert len(audit.report) > 0
+    assert audit.reuse_events == []
+
+
+# ---------------------------------------------------------------------------
+# duplicate consumption raises at the origin, naming both sites
+# ---------------------------------------------------------------------------
+
+def test_double_consume_raises_at_origin():
+    n, dim = 4, 8
+    _, problem = _quad_problem(n_clients=n, dim=dim)
+    spec = api.FederationSpec(n_clients=n, participation=1.0, alpha=0.1)
+
+    def bad_data(t, k):
+        xs = jax.random.normal(k, (n, 16, dim))
+        ys = jax.random.normal(k, (n, 16))      # BUG: k consumed twice
+        return xs, ys
+
+    with pytest.raises(KeyReuseError) as ei:
+        api.run(problem, jnp.zeros(dim), bad_data, 0.3, spec=spec,
+                key=KEY, n_rounds=3, audit_keys=True)
+    msg = str(ei.value)
+    # the origin: both consuming sites are in THIS file, and the
+    # offending sampler is named
+    assert msg.count("test_keytrace.py") == 2
+    assert "jax.random.normal" in msg
+
+
+def test_double_consume_collected_when_not_raising():
+    n, dim = 4, 8
+    _, problem = _quad_problem(n_clients=n, dim=dim)
+    spec = api.FederationSpec(n_clients=n, participation=1.0, alpha=0.1)
+
+    def bad_data(t, k):
+        xs = jax.random.normal(k, (n, 16, dim))
+        ys = jax.random.normal(k, (n, 16))
+        return xs, ys
+
+    audit = KeyAudit(raise_on_reuse=False)
+    api.run(problem, jnp.zeros(dim), bad_data, 0.3, spec=spec,
+            key=KEY, n_rounds=3, audit_keys=audit)
+    # one reuse per round, each pointing back at the first consumer
+    assert len(audit.reuse_events) == 3
+    ev, first = audit.reuse_events[0]
+    assert ev.key == first.key and ev.site != first.site
+
+
+def test_replay_at_same_site_is_allowed():
+    """The re-derivation idiom: the scheduler calls ``data_fn(t,
+    k_batch, ids)`` once per cohort with the SAME wave key — a consuming
+    data_fn re-executes the same draw and slices it. Recorded, not
+    flagged."""
+    n, dim = 8, 16
+    _, problem = _quad_problem(n_clients=n, dim=dim)
+    spec = api.FederationSpec(n_clients=n, participation=1.0, alpha=0.1)
+
+    def consuming_data_fn(t, k, ids):
+        xs = jax.random.normal(k, (n, 16, dim))
+        ys = jnp.einsum("nbp,p->nb", xs, jnp.ones(dim))
+        return jax.tree.map(lambda x: x[np.asarray(ids)], (xs, ys))
+
+    audit = KeyAudit()
+    sched = CohortScheduler(problem, spec, cohort_size=4)   # 2 cohorts
+    sched.run(jnp.zeros(dim), consuming_data_fn, 0.3, key=KEY,
+              n_rounds=3, audit_keys=audit)
+    assert audit.reuse_events == []
+    # the replayed draw IS on the trace twice per round (once per cohort)
+    normals = [e for e in audit.report.events
+               if e.kind == "consume:normal"]
+    assert len(normals) == 6
+
+
+# ---------------------------------------------------------------------------
+# an audited resume() replays the uninterrupted run's trace suffix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_resume_replays_identical_trace_suffix(mode, tmp_path):
+    n, dim = 8, 16
+    (Xs, ys), problem = _quad_problem(n_clients=n, dim=dim)
+    spec = api.FederationSpec(n_clients=n, participation=0.9, alpha=0.1,
+                              compressor=C.block_quant(8, 16))
+    x0 = jnp.zeros(dim)
+    data_fn = _slicing_data_fn(lambda t, k: (Xs, ys))
+
+    full = KeyAudit()
+    CohortScheduler(problem, spec, cohort_size=n).run(
+        x0, data_fn, 0.3, key=KEY, n_rounds=6, mode=mode, audit_keys=full)
+
+    # a "crashed" run: stop after 4 rounds, snapshot every round
+    ck = str(tmp_path / "ck")
+    CohortScheduler(problem, spec, cohort_size=n).run(
+        x0, data_fn, 0.3, key=KEY, n_rounds=4, mode=mode,
+        checkpoint_dir=ck, checkpoint_every=1)
+
+    res = KeyAudit()
+    st, pop, m = CohortScheduler(problem, spec, cohort_size=n).resume(
+        x0, data_fn, 0.3, checkpoint_dir=ck, n_rounds=6, mode=mode,
+        audit_keys=res)
+    full_sig = full.report.signature()
+    res_sig = res.report.signature()
+    assert 0 < len(res_sig) < len(full_sig)
+    assert full_sig[-len(res_sig):] == res_sig
+
+
+# ---------------------------------------------------------------------------
+# mechanics: patch/restore, re-entrancy, fingerprints, rejection
+# ---------------------------------------------------------------------------
+
+def test_activate_restores_patches_even_on_error():
+    orig_split = jax.random.split
+    orig_normal = jax.random.normal
+    audit = KeyAudit()
+    with pytest.raises(RuntimeError, match="boom"):
+        with audit.activate():
+            assert jax.random.split is not orig_split
+            with audit.activate():            # re-entrant: one patch set
+                assert getattr(jax.random.split, "_repro_key_audit", False)
+            assert jax.random.split is not orig_split
+            raise RuntimeError("boom")
+    assert jax.random.split is orig_split
+    assert jax.random.normal is orig_normal
+
+
+def test_fingerprint_skips_tracers_and_key_tables():
+    assert _key_fingerprint(KEY) is not None
+    # a key TABLE is not one key
+    assert _key_fingerprint(jax.random.split(KEY, 64)) is None
+    assert _key_fingerprint(jnp.zeros((4,), jnp.float32)) is None
+    seen = []
+    jax.jit(lambda k: seen.append(_key_fingerprint(k)))(KEY)
+    assert seen == [None]
+
+
+def test_centralized_run_rejects_audit_keys():
+    _, problem = _quad_problem(n_clients=2, dim=4)
+    with pytest.raises(ValueError, match="audit_keys"):
+        api.run(problem, jnp.zeros(4), [((jnp.ones((2, 4)), jnp.ones(2)))],
+                0.3, audit_keys=True)

@@ -117,6 +117,7 @@ def test_sync_ragged_cohorts_allclose_with_exact_accounting():
     spec = api.FederationSpec(n_clients=n, participation=0.6, alpha=0.1,
                               compressor=comp, mu=jnp.asarray(mu))
     x0 = jnp.zeros(dim)
+    # repro: allow[RPL001] test sizes its mesh off the real host topology
     mesh = _client_mesh() if csize % jax.device_count() == 0 else None
     eval_batch = (Xs[0], ys[0])
     st_ref, m_ref = api.run(problem, x0, lambda t, k: (Xs, ys), 0.3,
